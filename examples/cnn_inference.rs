@@ -1,0 +1,59 @@
+//! CNN inference study: the paper's three ImageNet CNNs (AlexNet,
+//! ResNet-34, Inception) simulated on TiM-DNN and both near-memory
+//! baselines — the workload behind Figs 12/13.
+//!
+//! Run: `cargo run --release --example cnn_inference`
+
+use timdnn::arch::ArchConfig;
+use timdnn::model;
+use timdnn::sim;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "CNN benchmarks on TiM-DNN vs near-memory baselines",
+        &[
+            "Network",
+            "MACs (G)",
+            "Params (M words)",
+            "TiM inf/s",
+            "iso-cap inf/s",
+            "iso-area inf/s",
+            "speedup (area)",
+            "energy benefit",
+        ],
+    );
+    for bench in model::zoo().into_iter().filter(|b| !b.net.recurrent) {
+        let tim = sim::run(&bench.net, &ArchConfig::tim_dnn());
+        let cap = sim::run(&bench.net, &ArchConfig::baseline_iso_capacity());
+        let area = sim::run(&bench.net, &ArchConfig::baseline_iso_area());
+        t.row(&[
+            bench.net.name.clone(),
+            sig(bench.net.total_macs() as f64 / 1e9, 3),
+            sig(bench.net.total_weight_words() as f64 / 1e6, 3),
+            sig(tim.inf_per_s, 4),
+            sig(cap.inf_per_s, 4),
+            sig(area.inf_per_s, 4),
+            format!("{:.1}x", area.total_s / tim.total_s),
+            format!("{:.1}x", area.energy.total() / tim.energy.total()),
+        ]);
+    }
+    t.footnote("paper Fig 12: 3.2-4.2x iso-area speedup; Fig 13: 3.9-4.7x energy");
+    t.print();
+
+    // Per-layer drill-down for AlexNet on TiM-DNN.
+    let alex = model::alexnet();
+    let r = sim::run(&alex, &ArchConfig::tim_dnn());
+    let mut lt = Table::new(
+        "AlexNet per-layer time on TiM-DNN (top 8 by total)",
+        &["Layer", "MAC us", "non-MAC us"],
+    );
+    let mut rows: Vec<_> = r.per_layer.iter().collect();
+    rows.sort_by(|a, b| {
+        (b.mac_s + b.nonmac_s).partial_cmp(&(a.mac_s + a.nonmac_s)).unwrap()
+    });
+    for l in rows.iter().take(8) {
+        lt.row(&[l.layer.clone(), sig(l.mac_s * 1e6, 3), sig(l.nonmac_s * 1e6, 3)]);
+    }
+    lt.print();
+}

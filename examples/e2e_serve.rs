@@ -1,0 +1,117 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a real trained model
+//! through the full three-layer stack.
+//!
+//! * Layer 1/2 (build time): `make artifacts` trained TiMNet (a ternary
+//!   [2,T] CNN) on the synthetic 10-class task and lowered its
+//!   TiM-arithmetic forward — Pallas ternary-VMM kernel with ADC clipping,
+//!   trained ternary weights baked in — to `tiny_cnn_b8.hlo.txt`.
+//! * Layer 3 (this binary): the coordinator batches concurrent requests,
+//!   executes them functionally via PJRT, charges them against the
+//!   simulated 32-tile TiM-DNN, and reports accuracy + latency +
+//!   throughput + energy.
+//!
+//! Run: `cargo run --release --example e2e_serve [-- --requests N]`
+
+use std::io::Read;
+use std::time::Duration;
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{BatchPolicy, PjrtExecutor, Server};
+use timdnn::model;
+use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
+use timdnn::sim;
+use timdnn::util::cli::Args;
+
+const BATCH: usize = 8;
+
+/// Read the eval set exported by aot.py (u32 n, u32 pixels, images, labels).
+fn read_eval_set(path: &std::path::Path) -> anyhow::Result<(Vec<Vec<f32>>, Vec<u32>)> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("{}: {e} — run `make artifacts`", path.display()))?;
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let n = u32::from_le_bytes(u32buf) as usize;
+    f.read_exact(&mut u32buf)?;
+    let pixels = u32::from_le_bytes(u32buf) as usize;
+    let mut raw = vec![0u8; n * pixels * 4];
+    f.read_exact(&mut raw)?;
+    let images: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            raw[i * pixels * 4..(i + 1) * pixels * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()
+        })
+        .collect();
+    let mut lraw = vec![0u8; n * 4];
+    f.read_exact(&mut lraw)?;
+    let labels = lraw
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok((images, labels))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = artifacts_dir();
+    let (images, labels) = read_eval_set(&dir.join("eval_set.bin"))?;
+    let requests = args.usize_or("requests", images.len()).min(images.len());
+
+    // Simulated hardware profile for TiMNet on the 32-tile instance.
+    let hw = sim::run(&model::tiny_cnn(), &ArchConfig::tim_dnn());
+    println!(
+        "simulated TiM-DNN for TiMNet: {:.0} inf/s, {:.2} nJ/inf",
+        hw.inf_per_s,
+        hw.energy.total() * 1e9
+    );
+
+    let dir2 = dir.clone();
+    let factory = move || -> anyhow::Result<PjrtExecutor> {
+        let mut rt = Runtime::cpu()?;
+        rt.load("tiny_cnn_b8", &dir2.join("tiny_cnn_b8.hlo.txt"))?;
+        Ok(PjrtExecutor::new(rt, "tiny_cnn_b8", BATCH, vec![16, 16, 1]))
+    };
+    let server = Server::spawn(
+        factory,
+        BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        hw,
+    );
+    let client = server.client();
+
+    // Fire all requests concurrently (closed-loop per 32-request window to
+    // bound memory), then check accuracy.
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    for window in images[..requests].chunks(32) {
+        let rxs: Vec<_> = window
+            .iter()
+            .map(|img| client.submit(TensorF32::new(vec![16, 16, 1], img.clone())))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv()?;
+            let logits = &resp.output.data;
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u32;
+            if pred == labels[done + i] {
+                correct += 1;
+            }
+        }
+        done += window.len();
+    }
+
+    drop(client);
+    let snap = server.shutdown();
+    let acc = correct as f64 / done as f64;
+    println!();
+    snap.report("TiMNet e2e (PJRT functional + simulated TiM-DNN hardware)");
+    println!();
+    println!("accuracy on held-out synthetic eval set: {:.3} ({correct}/{done})", acc);
+    anyhow::ensure!(acc >= 0.9, "e2e accuracy regressed below 0.9");
+    println!("e2e_serve OK");
+    Ok(())
+}

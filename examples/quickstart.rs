@@ -1,0 +1,80 @@
+//! Quickstart: the TiM-DNN public API in one file.
+//!
+//! 1. Build a TiM tile, load a ternary weight matrix, run an in-memory
+//!    VMM in all three modes (ideal / analog / analog+variation).
+//! 2. Compare against the near-memory baseline tile.
+//! 3. If `make artifacts` has run, execute the AOT-compiled Pallas kernel
+//!    through PJRT and check it agrees with the rust tile model exactly —
+//!    the three layers of the stack computing the same thing.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use timdnn::baseline::NearMemTile;
+use timdnn::energy;
+use timdnn::quant::TernarySystem;
+use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
+use timdnn::tile::{TileConfig, TimTile, VmmMode};
+use timdnn::tpc::TritMatrix;
+use timdnn::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seeded(42);
+
+    // A full tile's worth of ternary weights at the paper's sparsity.
+    let cfg = TileConfig::paper();
+    let w = TritMatrix::random(cfg.rows(), cfg.n, 0.4, &mut rng);
+    let x = rng.trit_vec(cfg.rows(), 0.4);
+
+    // --- TiM tile, three modes -------------------------------------------
+    let mut tile = TimTile::new(cfg);
+    tile.load_weights(&w);
+    let ideal = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+    let analog = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Analog);
+    assert_eq!(ideal, analog, "noise-free analog path must equal ideal");
+    let mut noise_rng = Rng::seeded(7);
+    let noisy = tile.vmm(
+        &x,
+        TernarySystem::Unweighted,
+        &mut VmmMode::AnalogNoisy(&mut noise_rng),
+    );
+    let flips = ideal.iter().zip(&noisy).filter(|(a, b)| a != b).count();
+    println!("TiM tile: 256-row VMM over 256 columns");
+    println!("  ideal == noise-free analog: OK");
+    println!("  sensing flips under V_T variation: {flips}/256 columns");
+
+    // --- energy/latency vs the near-memory baseline -----------------------
+    let mut base = NearMemTile::paper();
+    base.load_weights(&w);
+    base.vmm(&x[..16], TernarySystem::Unweighted);
+    println!(
+        "  kernel speedup (TiM-16 vs near-mem): {:.1}x (paper: 11.8x)",
+        energy::baseline_vmm_time() / energy::tim_vmm_time(1)
+    );
+    println!(
+        "  kernel energy benefit at 50% output sparsity: {:.1}x",
+        energy::baseline_vmm_energy() / energy::tim_vmm_energy(0.5, 1)
+    );
+
+    // --- cross-layer check via PJRT ---------------------------------------
+    let dir = artifacts_dir();
+    if dir.join("ternary_vmm.hlo.txt").exists() {
+        let mut rt = Runtime::cpu()?;
+        rt.load("ternary_vmm", &dir.join("ternary_vmm.hlo.txt"))?;
+        let x_f: Vec<f32> = x.iter().map(|&t| t as f32).collect();
+        let w_f: Vec<f32> = w.data().iter().map(|&t| t as f32).collect();
+        let out = rt.execute(
+            "ternary_vmm",
+            &[TensorF32::new(vec![256], x_f), TensorF32::new(vec![256, 256], w_f)],
+        )?;
+        let counts = &out[0]; // (2, 256) f32: Σ clipped n, Σ clipped k
+        let kernel_out: Vec<f32> =
+            (0..256).map(|c| counts.data[c] - counts.data[256 + c]).collect();
+        assert_eq!(kernel_out, ideal, "Pallas kernel != rust tile model");
+        println!("  PJRT Pallas kernel == rust tile model across all 256 columns: OK");
+    } else {
+        println!("  (run `make artifacts` to enable the PJRT cross-layer check)");
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

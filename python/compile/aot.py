@@ -1,0 +1,184 @@
+"""AOT lowering: JAX/Pallas entry points → HLO-text artifacts for rust.
+
+Emits, under ``artifacts/``:
+
+* ``ternary_vmm.hlo.txt``      — the bare L1 kernel (256×256 counts VMM),
+  the cross-layer correctness anchor: rust integration tests compare the
+  functional TiM-tile model against this executable bit-for-bit.
+* ``tiny_cnn_b1.hlo.txt`` / ``tiny_cnn_b8.hlo.txt`` — TiMNet deployment
+  forward with the *trained ternary weights baked in as constants*
+  (trains first if the weight file is missing).
+* ``lstm_cell.hlo.txt``        — one ternary LSTM step (h = 300) with
+  deterministic synthetic ternary gate weights.
+
+Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
+64-bit instruction ids which the xla_extension 0.5.1 used by the rust
+``xla`` crate rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). All entry points are lowered
+with ``return_tuple=True`` so the rust side can uniformly un-tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+from .kernels.ternary_vmm import ternary_vmm_counts
+
+LSTM_HIDDEN = 300
+LSTM_SEED = 4242
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default text dump
+    elides big literals as ``{...}``, which the consuming parser silently
+    reads back as all-zeros — baked weights would vanish (this bit us;
+    test_aot guards it now).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, example_args, path: str):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+# ---------------------------------------------------------------------------
+# Entry points.
+# ---------------------------------------------------------------------------
+
+def vmm_entry(x, w):
+    """Bare kernel: f32 carriers (the PJRT boundary uses f32 literals),
+    ternary values inside. Returns (2, 256) f32 clipped counts."""
+    counts = ternary_vmm_counts(
+        jnp.round(x).astype(jnp.int8), jnp.round(w).astype(jnp.int8)
+    )
+    return (counts.astype(jnp.float32),)
+
+
+def load_timnet_params():
+    path = train.weights_path()
+    if not os.path.exists(path):
+        print("timnet weights missing; training now…")
+        train.train_and_save(path)
+    d = dict(np.load(path))
+    return {k: jnp.array(v) for k, v in d.items() if k != "train_acc"}
+
+
+def make_timnet_entry(params):
+    def entry(images):
+        return (model.timnet_apply(params, images),)
+
+    return entry
+
+
+def make_lstm_weights():
+    """Deterministic synthetic ternary gate weights at the paper's RNN
+    sparsity (≈47 % zeros) — DESIGN.md §Substitutions (HitNet-trained PTB
+    weights are not available; performance/energy depend on shape and
+    sparsity only, and functional behaviour is exercised end-to-end)."""
+    rng = np.random.default_rng(LSTM_SEED)
+    rows = 2 * LSTM_HIDDEN
+    rows_padded = rows + (-rows) % model.BLOCK_L
+    w = rng.choice(
+        np.array([-1, 0, 1], dtype=np.int8),
+        size=(rows_padded, 4 * LSTM_HIDDEN),
+        p=[0.265, 0.47, 0.265],
+    )
+    w[rows:] = 0  # padding rows store W=0
+    return jnp.array(w), np.float32(0.05)
+
+
+def make_lstm_entry():
+    w, scale = make_lstm_weights()
+
+    def entry(x_t, h_t, c_t):
+        h, c = model.lstm_cell_apply(w, scale, x_t, h_t, c_t, LSTM_HIDDEN)
+        return (h, c)
+
+    return entry
+
+
+def build_all(outdir: str):
+    os.makedirs(outdir, exist_ok=True)
+
+    # 1. Bare kernel (256 rows × 256 cols — one full TiM tile column load).
+    spec_x = jax.ShapeDtypeStruct((256,), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    lower_to_file(vmm_entry, (spec_x, spec_w), os.path.join(outdir, "ternary_vmm.hlo.txt"))
+
+    # 2. TiMNet with baked trained weights, batch 1 and 8.
+    params = load_timnet_params()
+    entry = make_timnet_entry(params)
+    for b in (1, 8):
+        spec = jax.ShapeDtypeStruct((b, 16, 16, 1), jnp.float32)
+        lower_to_file(entry, (spec,), os.path.join(outdir, f"tiny_cnn_b{b}.hlo.txt"))
+
+    # 3. Ternary LSTM cell.
+    spec_h = jax.ShapeDtypeStruct((LSTM_HIDDEN,), jnp.float32)
+    lower_to_file(
+        make_lstm_entry(),
+        (spec_h, spec_h, spec_h),
+        os.path.join(outdir, "lstm_cell.hlo.txt"),
+    )
+
+    # 4. Held-out eval set for the rust e2e serving driver: a simple
+    # little-endian binary (u32 n, u32 pixels, n·pixels f32 images,
+    # n u32 labels).
+    write_eval_set(os.path.join(outdir, "eval_set.bin"), n=512)
+
+    # 5. Flat binary of the trained ternary weights for the rust-native
+    # functional accelerator (arch::timnet): per layer, u32 rows, u32
+    # cols, rows*cols i8 weights, f32 scale; then 4 f32 activation clips.
+    write_weights_bin(params, os.path.join(outdir, "timnet_weights.bin"))
+
+
+def write_weights_bin(params, path: str):
+    with open(path, "wb") as f:
+        for name in ["conv1", "conv2", "fc1", "fc2"]:
+            w = np.asarray(params[name]).astype(np.int8)
+            f.write(np.uint32(w.shape[0]).tobytes())
+            f.write(np.uint32(w.shape[1]).tobytes())
+            f.write(w.tobytes())
+            f.write(np.float32(params[f"s_{name}"]).tobytes())
+        for i in range(4):
+            f.write(np.float32(params[f"a{i}"]).tobytes())
+    print(f"wrote {path}")
+
+
+def write_eval_set(path: str, n: int = 512):
+    images, labels = train.make_dataset(n, seed=7001)
+    with open(path, "wb") as f:
+        f.write(np.uint32(n).tobytes())
+        f.write(np.uint32(images[0].size).tobytes())
+        f.write(images.astype("<f4").tobytes())
+        f.write(labels.astype("<u4").tobytes())
+    print(f"wrote {path} ({n} samples)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="output directory (default: ../artifacts)")
+    args = ap.parse_args()
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    outdir = args.out or os.path.join(os.path.dirname(here), "artifacts")
+    build_all(outdir)
+
+
+if __name__ == "__main__":
+    main()

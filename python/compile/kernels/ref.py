@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the TiM ternary VMM (no Pallas).
+
+This is the correctness signal for the Layer-1 kernel: pytest/hypothesis
+sweeps shapes, sparsities and ``n_max`` values and asserts the Pallas
+kernel (interpret mode) matches these functions exactly.
+
+Semantics (paper §III-B/III-C): the tile evaluates a ternary VMM block by
+block. For each block of ``block_l`` rows and each output column it counts
+
+    n = #{i : x[i] * w[i,j] == +1}   (BL discharges)
+    k = #{i : x[i] * w[i,j] == -1}   (BLB discharges)
+
+clips both at the ADC full scale ``n_max`` (bitline saturation), and the
+PCUs accumulate the clipped per-block counts digitally across blocks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_counts_ref(x, w, n_max: int):
+    """Per-block clipped (n, k) counts.
+
+    Args:
+      x: (rows,) ternary int8 input.
+      w: (rows, cols) ternary int8 weights; rows must divide into blocks
+         by the caller (this function treats the whole of ``x``/``w`` as
+         ONE block — the tile geometry lives in :func:`ternary_vmm_ref`).
+      n_max: ADC full-scale count.
+
+    Returns:
+      (n, k): each (cols,) int32, clipped at n_max.
+    """
+    prod = x.astype(jnp.int32)[:, None] * w.astype(jnp.int32)
+    n = jnp.sum(prod == 1, axis=0).clip(0, n_max).astype(jnp.int32)
+    k = jnp.sum(prod == -1, axis=0).clip(0, n_max).astype(jnp.int32)
+    return n, k
+
+
+def ternary_vmm_counts_ref(x, w, n_max: int = 8, block_l: int = 16):
+    """Summed clipped counts over all blocks: the PCU-visible (Σn, Σk).
+
+    Args:
+      x: (rows,) ternary input, rows divisible by block_l.
+      w: (rows, cols) ternary weights.
+
+    Returns:
+      (2, cols) int32: row 0 = Σ_b n_b, row 1 = Σ_b k_b.
+    """
+    rows, cols = w.shape
+    assert x.shape == (rows,)
+    assert rows % block_l == 0, f"rows {rows} not a multiple of {block_l}"
+    xb = x.reshape(rows // block_l, block_l, 1).astype(jnp.int32)
+    wb = w.reshape(rows // block_l, block_l, cols).astype(jnp.int32)
+    prod = xb * wb
+    n = jnp.sum(prod == 1, axis=1).clip(0, n_max)  # (K, cols)
+    k = jnp.sum(prod == -1, axis=1).clip(0, n_max)
+    return jnp.stack([n.sum(0), k.sum(0)]).astype(jnp.int32)
+
+
+def ternary_vmm_ref(x, w, n_max: int = 8, block_l: int = 16):
+    """Unweighted ternary VMM output: Σ_b (n_b − k_b), (cols,) int32."""
+    counts = ternary_vmm_counts_ref(x, w, n_max=n_max, block_l=block_l)
+    return counts[0] - counts[1]
+
+
+def ternary_vmm_exact_ref(x, w):
+    """Infinite-precision reference (no ADC clipping): x @ w."""
+    return (x.astype(jnp.int32) @ w.astype(jnp.int32)).astype(jnp.int32)
+
+
+def vmm_2bit_ref(codes, w, n_max: int = 8, block_l: int = 16):
+    """Bit-serial 2-bit-activation VMM (WRPN [2,T] layers).
+
+    Each bit plane of the unsigned 2-bit code is applied as a {0,1} input
+    and the partial output is shifted by the bit significance (the PCU
+    shifter, §III-C).
+    """
+    codes = codes.astype(jnp.int32)
+    out = jnp.zeros(w.shape[1], dtype=jnp.int32)
+    for plane in range(2):
+        bit = ((codes >> plane) & 1).astype(jnp.int8)
+        out = out + (1 << plane) * ternary_vmm_ref(bit, w, n_max=n_max, block_l=block_l)
+    return out
+
+
+def asymmetric_vmm_ref(x, w, w1, w2, i1, i2, n_max: int = 8, block_l: int = 16):
+    """Two-step asymmetric weighted VMM (Fig 5(b)).
+
+    Step 1 applies the +1 plane of x with Iα = i1; step 2 applies the −1
+    plane with Iα = i2 and a negated combine. Scales apply to counts:
+    pOut = Iα·(w1·n − w2·k).
+    """
+    out = jnp.zeros(w.shape[1], dtype=jnp.float32)
+    for step, (plane_val, alpha, sign) in enumerate([(1, i1, 1.0), (-1, i2, -1.0)]):
+        plane = (x == plane_val).astype(jnp.int8)
+        counts = ternary_vmm_counts_ref(plane, w, n_max=n_max, block_l=block_l)
+        out = out + sign * alpha * (w1 * counts[0] - w2 * counts[1])
+    return out

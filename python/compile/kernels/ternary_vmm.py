@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernel: the TiM-tile ternary VMM with ADC saturation.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's compute
+hot-spot is an analog in-memory dot product — L=16 rows discharge a
+bitline pair, and a flash ADC digitizes the clipped (n, k) counts per
+column. On TPU-shaped hardware the same structure maps to:
+
+* the tile's **block decoder** → the Pallas **grid** over K row-blocks,
+* the **HBM→VMEM schedule** (which 16×256 weight slice is live) →
+  ``BlockSpec`` index maps,
+* the **bitline pair** → two masked-popcount reductions per column held
+  in VMEM registers,
+* the **ADC clip at n_max** → a ``clip`` *before* the cross-block
+  accumulation (this ordering is what makes TiM arithmetic differ from an
+  exact matmul, and what the tests pin down),
+* the **PCU digital psum loop** → the ``+=`` accumulation across grid
+  steps.
+
+The kernel is lowered with ``interpret=True``: real-TPU Pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute, and this repo's
+runtime is the CPU client. Real-TPU efficiency is estimated analytically
+in DESIGN.md §Perf (VMEM footprint per grid step: 16×256 i8 weights +
+inputs + 2×256 i32 accumulators ≈ 6.2 KiB ≪ 16 MiB VMEM; the reductions
+are lane-aligned with N=256 = 2 lane groups).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmm_counts_kernel(x_ref, w_ref, o_ref, *, n_max: int):
+    """One grid step = one TiM block access (L rows × N cols)."""
+    blk = pl.program_id(0)
+    x = x_ref[...].astype(jnp.int32)  # (L,)
+    w = w_ref[...].astype(jnp.int32)  # (L, N)
+    prod = x[:, None] * w
+    # The bitline pair: BL counts +1 products, BLB counts −1 products.
+    n = jnp.sum(prod == 1, axis=0)
+    k = jnp.sum(prod == -1, axis=0)
+    # Flash-ADC full scale: saturate *per access*, before the PCU psum.
+    counts = jnp.stack([n, k]).clip(0, n_max).astype(jnp.int32)  # (2, N)
+
+    @pl.when(blk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # PCU digital accumulation across blocks.
+    o_ref[...] += counts
+
+
+def ternary_vmm_counts(x, w, *, n_max: int = 8, block_l: int = 16):
+    """Summed clipped (n, k) counts of a ternary VMM, shape (2, cols).
+
+    Args:
+      x: (rows,) int8 ternary input.
+      w: (rows, cols) int8 ternary weights; rows % block_l == 0.
+    """
+    rows, cols = w.shape
+    assert rows % block_l == 0, f"rows {rows} not a multiple of block_l {block_l}"
+    n_blocks = rows // block_l
+    return pl.pallas_call(
+        partial(_vmm_counts_kernel, n_max=n_max),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_l,), lambda b: (b,)),
+            pl.BlockSpec((block_l, cols), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, cols), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, cols), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def ternary_vmm(x, w, *, n_max: int = 8, block_l: int = 16):
+    """Unweighted ternary VMM: Σ_b (clip(n_b) − clip(k_b)), (cols,) int32."""
+    counts = ternary_vmm_counts(x, w, n_max=n_max, block_l=block_l)
+    return counts[0] - counts[1]
+
+
+def ternary_vmm_batched(xs, w, *, n_max: int = 8, block_l: int = 16):
+    """Batched unweighted ternary VMM over (B, rows) inputs → (B, cols)."""
+    return jax.vmap(lambda x: ternary_vmm(x, w, n_max=n_max, block_l=block_l))(xs)
+
+
+def vmm_2bit(codes, w, *, n_max: int = 8, block_l: int = 16):
+    """Bit-serial 2-bit activation VMM (two kernel passes + PCU shift)."""
+    codes = codes.astype(jnp.int32)
+    out = jnp.zeros(w.shape[1], dtype=jnp.int32)
+    for plane in range(2):
+        bit = ((codes >> plane) & 1).astype(jnp.int8)
+        out = out + (1 << plane) * ternary_vmm(bit, w, n_max=n_max, block_l=block_l)
+    return out
+
+
+def asymmetric_vmm(x, w, w1, w2, i1, i2, *, n_max: int = 8, block_l: int = 16):
+    """Two-step asymmetric weighted VMM (Fig 5(b)): scales in the PCU."""
+    out = jnp.zeros(w.shape[1], dtype=jnp.float32)
+    for plane_val, alpha, sign in [(1, i1, 1.0), (-1, i2, -1.0)]:
+        plane = (x == plane_val).astype(jnp.int8)
+        counts = ternary_vmm_counts(plane, w, n_max=n_max, block_l=block_l)
+        out = out + sign * alpha * (w1 * counts[0] - w2 * counts[1])
+    return out

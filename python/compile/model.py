@@ -1,0 +1,181 @@
+"""Layer-2 JAX models: deployment-path forward passes over the L1 kernel.
+
+Two model families, mirroring the paper's Table III workloads at small
+scale:
+
+* **TiMNet** — the in-repo end-to-end CNN ([2,T]: 2-bit activations,
+  ternary weights). Trained by ``train.py`` with a straight-through
+  estimator; the *deployment* forward defined here runs entirely on the
+  TiM arithmetic: im2col → bit-serial ternary VMM with ADC clipping →
+  scale → ReLU → 2-bit requantization. ``aot.py`` bakes the trained
+  ternary weights into the lowered HLO so the rust runtime only feeds
+  images.
+* **Ternary LSTM cell** — a [T,T] HitNet-style recurrent cell over the
+  same kernel, used by the RNN-serving example.
+
+Everything here is traced and lowered AOT; none of it runs at serve time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ternary_vmm import ternary_vmm_counts
+
+N_MAX = 8
+BLOCK_L = 16
+
+
+# ---------------------------------------------------------------------------
+# Quantizers (deployment path; STE training versions live in train.py).
+# ---------------------------------------------------------------------------
+
+def quantize_acts_2bit(x, clip: float):
+    """f32 activations → unsigned 2-bit codes {0..3} (WRPN-style)."""
+    return jnp.round(jnp.clip(x, 0.0, clip) / clip * 3.0).astype(jnp.int8)
+
+
+def quantize_ternary(x):
+    """f32 activations → ternary {-1,0,1} with a 0.5·max threshold."""
+    t = 0.5 * jnp.max(jnp.abs(x)) + 1e-9
+    return (jnp.sign(x) * (jnp.abs(x) > t)).astype(jnp.int8)
+
+
+def pad_rows(m, multiple: int = BLOCK_L):
+    """Zero-pad the leading (row) dim to a block multiple — unmapped TPC
+    rows hold W=0 and contribute nothing to the bitlines."""
+    rows = m.shape[0]
+    pad = (-rows) % multiple
+    if pad == 0:
+        return m
+    widths = [(0, pad)] + [(0, 0)] * (m.ndim - 1)
+    return jnp.pad(m, widths)
+
+
+# ---------------------------------------------------------------------------
+# TiM layers (deployment arithmetic).
+# ---------------------------------------------------------------------------
+
+def tim_fc_2bit(codes, w_tern, w_scale, act_clip):
+    """[2,T] fully-connected on TiM arithmetic.
+
+    Args:
+      codes: (B, d_in) int8 2-bit activation codes.
+      w_tern: (d_in, d_out) int8 ternary weights.
+      w_scale: scalar f32 symmetric weight scale (PCU scale register).
+      act_clip: f32 activation clip the codes were quantized with.
+
+    Returns:
+      (B, d_out) f32 pre-activation.
+    """
+    wp = pad_rows(w_tern)
+
+    def one(code_vec):
+        out = jnp.zeros(wp.shape[1], dtype=jnp.int32)
+        for plane in range(2):
+            bit = ((code_vec.astype(jnp.int32) >> plane) & 1).astype(jnp.int8)
+            bit = pad_rows(bit)
+            counts = ternary_vmm_counts(bit, wp, n_max=N_MAX, block_l=BLOCK_L)
+            out = out + (1 << plane) * (counts[0] - counts[1])
+        return out
+
+    raw = jax.vmap(one)(codes)
+    # Dequantize: codes carry act_clip/3 per unit; weights carry w_scale.
+    return raw.astype(jnp.float32) * (act_clip / 3.0) * w_scale
+
+
+def im2col(x, kh: int, kw: int):
+    """(B, H, W, C) → (B, H·W, kh·kw·C) patches with SAME zero padding."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (kh // 2, kh // 2), (kw // 2, kw // 2), (0, 0)))
+    patches = []
+    for di in range(kh):
+        for dj in range(kw):
+            patches.append(xp[:, di : di + h, dj : dj + w, :])
+    # (B, H, W, kh*kw*C) — patch order matches w.reshape(kh*kw*C, out).
+    stacked = jnp.concatenate(patches, axis=-1)
+    return stacked.reshape(b, h * w, kh * kw * c)
+
+
+def tim_conv_2bit(codes_img, w_tern, w_scale, act_clip):
+    """[2,T] SAME conv via im2col + TiM FC.
+
+    Args:
+      codes_img: (B, H, W, C) int8 2-bit codes.
+      w_tern: (kh·kw·C, C_out) int8 ternary weights.
+    Returns:
+      (B, H, W, C_out) f32 pre-activation.
+    """
+    b, h, w, _ = codes_img.shape
+    cols = im2col(codes_img, 3, 3)  # (B, HW, 9C)
+    flat = cols.reshape(b * h * w, -1)
+    out = tim_fc_2bit(flat, w_tern, w_scale, act_clip)
+    return out.reshape(b, h, w, -1)
+
+
+def maxpool2(x):
+    """2×2 max pool, stride 2."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# TiMNet deployment forward.
+# ---------------------------------------------------------------------------
+
+def timnet_apply(params, images):
+    """Forward pass on TiM arithmetic.
+
+    Args:
+      params: dict with ternary weights ``conv1 conv2 fc1 fc2`` (int8),
+        scales ``s_conv1 …`` (f32), and activation clips ``a0..a3``.
+      images: (B, 16, 16, 1) f32 in [0, 1].
+
+    Returns:
+      (B, 10) f32 logits.
+    """
+    a0, a1, a2, a3 = params["a0"], params["a1"], params["a2"], params["a3"]
+    x = quantize_acts_2bit(images, a0)
+    x = tim_conv_2bit(x, params["conv1"], params["s_conv1"], a0)
+    x = jax.nn.relu(x)
+    x = maxpool2(x)  # (B, 8, 8, 16)
+    x = quantize_acts_2bit(x, a1)
+    x = tim_conv_2bit(x, params["conv2"], params["s_conv2"], a1)
+    x = jax.nn.relu(x)
+    x = maxpool2(x)  # (B, 4, 4, 32)
+    x = quantize_acts_2bit(x, a2)
+    b = x.shape[0]
+    x = tim_fc_2bit(x.reshape(b, -1), params["fc1"], params["s_fc1"], a2)
+    x = jax.nn.relu(x)
+    x = quantize_acts_2bit(x, a3)
+    logits = tim_fc_2bit(x, params["fc2"], params["s_fc2"], a3)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Ternary LSTM cell ([T,T]).
+# ---------------------------------------------------------------------------
+
+def lstm_cell_apply(w_tern, w_scale, x_t, h_t, c_t, hidden: int):
+    """One ternary LSTM step on TiM arithmetic.
+
+    Args:
+      w_tern: (2·hidden_padded, 4·hidden) int8 gate weights (i, f, g, o).
+      w_scale: f32 symmetric weight scale.
+      x_t, h_t: (hidden,) ternary f32 (values in {-1,0,1}).
+      c_t: (hidden,) f32 cell state.
+
+    Returns:
+      (h', c'): ternarized new hidden state and f32 cell state.
+    """
+    xh = jnp.concatenate([x_t, h_t]).astype(jnp.int8)
+    xh = pad_rows(xh)
+    counts = ternary_vmm_counts(xh, w_tern, n_max=N_MAX, block_l=BLOCK_L)
+    gates = (counts[0] - counts[1]).astype(jnp.float32) * w_scale
+    i, f, g, o = jnp.split(gates, 4)
+    c_new = jax.nn.sigmoid(f) * c_t + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    # [T,T]: the hidden state is requantized to ternary (HitNet-style).
+    h_q = quantize_ternary(h_new).astype(jnp.float32)
+    return h_q, c_new

@@ -1,0 +1,187 @@
+"""Build-time training of TiMNet on a deterministic synthetic task.
+
+The paper's CNN benchmarks are pre-trained ternary ImageNet models (WRPN);
+we cannot train those here, so the end-to-end functional path uses a small
+CNN trained from scratch on a synthetic 10-class 16×16 image task
+(class-specific patterns + noise — DESIGN.md §Substitutions). Training
+uses a straight-through estimator (STE) for both the ternary weights and
+the 2-bit activations — the standard recipe of the paper's refs [8][9] —
+in pure JAX with exact (unclipped) matmuls; deployment then runs on the
+TiM arithmetic (ADC-clipped kernel), and ``aot.py`` verifies the
+train→deploy accuracy gap is small before exporting.
+
+Run directly (``python -m compile.train``) or via ``aot.py`` (which trains
+lazily when the weight file is missing).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIDDEN_SEED = 1234
+NUM_CLASSES = 10
+IMG = 16
+ACT_CLIPS = (1.0, 4.0, 8.0, 8.0)  # input, post-conv1, post-conv2, post-fc1
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset: each class is a fixed random pattern; samples add
+# brightness jitter + Gaussian noise. Deterministic in (seed, n).
+# ---------------------------------------------------------------------------
+
+def class_patterns(seed: int = HIDDEN_SEED):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 1.0, size=(NUM_CLASSES, IMG, IMG, 1)).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int):
+    """Returns (images (n,16,16,1) f32 in [0,1], labels (n,) int32)."""
+    rng = np.random.default_rng(seed)
+    pats = class_patterns()
+    labels = rng.integers(0, NUM_CLASSES, size=n)
+    base = pats[labels]
+    bright = rng.uniform(0.6, 1.0, size=(n, 1, 1, 1)).astype(np.float32)
+    noise = rng.normal(0.0, 0.15, size=base.shape).astype(np.float32)
+    images = np.clip(base * bright + noise, 0.0, 1.0)
+    return images.astype(np.float32), labels.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# STE quantizers (training path).
+# ---------------------------------------------------------------------------
+
+def ste_ternary(w):
+    """TWN-style ternarization with straight-through gradients.
+
+    Returns (w_q ∈ {-a,0,a} as f32, used in the forward), gradient flows
+    through as identity.
+    """
+    t = 0.7 * jnp.mean(jnp.abs(w))
+    mask = (jnp.abs(w) > t).astype(w.dtype)
+    a = jnp.sum(jnp.abs(w) * mask) / (jnp.sum(mask) + 1e-9)
+    w_q = a * jnp.sign(w) * mask
+    return w + jax.lax.stop_gradient(w_q - w)
+
+
+def ste_act_2bit(x, clip):
+    """2-bit unsigned activation quantization with STE."""
+    x_c = jnp.clip(x, 0.0, clip)
+    x_q = jnp.round(x_c / clip * 3.0) * (clip / 3.0)
+    return x_c + jax.lax.stop_gradient(x_q - x_c)
+
+
+# ---------------------------------------------------------------------------
+# Float-latent forward (exact matmuls; same topology as model.timnet_apply).
+# ---------------------------------------------------------------------------
+
+def init_params(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    he = jax.nn.initializers.he_normal()
+    return {
+        "conv1": he(k1, (9 * 1, 16)),
+        "conv2": he(k2, (9 * 16, 32)),
+        "fc1": he(k3, (4 * 4 * 32, 64)),
+        "fc2": he(k4, (64, 10)),
+    }
+
+
+def _im2col(x, k=3):
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [xp[:, i : i + h, j : j + w, :] for i in range(k) for j in range(k)]
+    return jnp.concatenate(cols, axis=-1).reshape(b, h * w, k * k * c)
+
+
+def _pool(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def forward_train(params, images):
+    a0, a1, a2, a3 = ACT_CLIPS
+    x = ste_act_2bit(images, a0)
+    b = x.shape[0]
+    x = (_im2col(x) @ ste_ternary(params["conv1"])).reshape(b, IMG, IMG, 16)
+    x = _pool(jax.nn.relu(x))
+    x = ste_act_2bit(x, a1)
+    x = (_im2col(x) @ ste_ternary(params["conv2"])).reshape(b, 8, 8, 32)
+    x = _pool(jax.nn.relu(x))
+    x = ste_act_2bit(x, a2)
+    x = jax.nn.relu(x.reshape(b, -1) @ ste_ternary(params["fc1"]))
+    x = ste_act_2bit(x, a3)
+    return x @ ste_ternary(params["fc2"])
+
+
+def loss_fn(params, images, labels):
+    logits = forward_train(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def accuracy(logits, labels):
+    return float(jnp.mean(jnp.argmax(logits, -1) == labels))
+
+
+# ---------------------------------------------------------------------------
+# Ternarize trained params for deployment (model.timnet_apply).
+# ---------------------------------------------------------------------------
+
+def quantize_params(params):
+    """f32 latent params → int8 ternary + scalar scales + act clips."""
+    out = {}
+    for name in ["conv1", "conv2", "fc1", "fc2"]:
+        w = np.asarray(params[name])
+        t = 0.7 * np.mean(np.abs(w))
+        mask = np.abs(w) > t
+        a = float((np.abs(w) * mask).sum() / (mask.sum() + 1e-9))
+        out[name] = (np.sign(w) * mask).astype(np.int8)
+        out[f"s_{name}"] = np.float32(a)
+    for i, c in enumerate(ACT_CLIPS):
+        out[f"a{i}"] = np.float32(c)
+    return out
+
+
+def train(steps: int = 400, batch: int = 64, lr: float = 0.02, seed: int = 0, log=print):
+    """SGD-with-momentum training loop. Returns (params, final train acc)."""
+    params = init_params(jax.random.PRNGKey(seed))
+    momentum = jax.tree_util.tree_map(jnp.zeros_like, params)
+    images, labels = make_dataset(batch * steps, seed=seed + 1)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    for step in range(steps):
+        xb = images[step * batch : (step + 1) * batch]
+        yb = labels[step * batch : (step + 1) * batch]
+        loss, grads = grad_fn(params, xb, yb)
+        momentum = jax.tree_util.tree_map(lambda m, g: 0.9 * m + g, momentum, grads)
+        params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, momentum)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"step {step:4d} loss {float(loss):.4f}")
+
+    test_x, test_y = make_dataset(512, seed=99)
+    acc = accuracy(forward_train(params, jnp.array(test_x)), jnp.array(test_y))
+    log(f"train-path (STE, unclipped) test accuracy: {acc:.3f}")
+    return params, acc
+
+
+def weights_path():
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return os.path.join(os.path.dirname(here), "artifacts", "timnet_weights.npz")
+
+
+def train_and_save(path=None, log=print):
+    path = path or weights_path()
+    params, acc = train(log=log)
+    q = quantize_params(params)
+    q["train_acc"] = np.float32(acc)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **q)
+    log(f"saved ternary weights to {path}")
+    return path
+
+
+if __name__ == "__main__":
+    train_and_save()

@@ -1,0 +1,97 @@
+"""AOT pipeline tests: lowering produces loadable HLO text with the right
+interfaces, and the lowered computations are CPU-executable (no Mosaic
+custom-calls — interpret-mode Pallas only)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, train
+from compile.kernels import ref
+
+
+def test_vmm_entry_roundtrip():
+    """The artifact entry point (f32 carriers) must agree with the oracle."""
+    rng = np.random.default_rng(1)
+    x = rng.choice([-1.0, 0.0, 1.0], size=256).astype(np.float32)
+    w = rng.choice([-1.0, 0.0, 1.0], size=(256, 256)).astype(np.float32)
+    (counts,) = aot.vmm_entry(jnp.array(x), jnp.array(w))
+    want = ref.ternary_vmm_counts_ref(
+        jnp.array(x.astype(np.int8)), jnp.array(w.astype(np.int8))
+    )
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(want).astype(np.float32))
+
+
+def test_hlo_text_is_emittable_and_clean():
+    """Lowering the kernel entry must produce parseable HLO text without
+    TPU custom-calls (the CPU PJRT client cannot run Mosaic)."""
+    spec_x = jax.ShapeDtypeStruct((256,), jnp.float32)
+    spec_w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    lowered = jax.jit(aot.vmm_entry).lower(spec_x, spec_w)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text.lower(), "Mosaic custom-call leaked into HLO"
+    assert "ROOT" in text
+
+
+def test_lstm_weights_deterministic_and_sparse():
+    w1, s1 = aot.make_lstm_weights()
+    w2, s2 = aot.make_lstm_weights()
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    assert s1 == s2
+    sparsity = float((np.asarray(w1)[: 2 * aot.LSTM_HIDDEN] == 0).mean())
+    assert 0.40 <= sparsity <= 0.55, f"sparsity {sparsity}"
+    # Padding rows are all zero.
+    assert (np.asarray(w1)[2 * aot.LSTM_HIDDEN :] == 0).all()
+
+
+def test_lstm_entry_shapes():
+    entry = aot.make_lstm_entry()
+    h = jnp.zeros(aot.LSTM_HIDDEN, jnp.float32)
+    h2, c2 = entry(h, h, h)
+    assert h2.shape == (aot.LSTM_HIDDEN,)
+    assert c2.shape == (aot.LSTM_HIDDEN,)
+
+
+def test_artifacts_exist_after_make():
+    """When the artifacts directory exists (make artifacts ran), it must
+    contain every entry point the rust runtime expects."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    outdir = os.path.join(here, "artifacts")
+    if not os.path.isdir(outdir):
+        import pytest
+
+        pytest.skip("artifacts not built yet")
+    for name in ["ternary_vmm", "tiny_cnn_b1", "tiny_cnn_b8", "lstm_cell"]:
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        assert os.path.exists(path), f"missing {path} — run `make artifacts`"
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), f"{path} is not HLO text"
+
+
+def test_trained_weights_file_schema():
+    path = train.weights_path()
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("weights not trained yet")
+    d = dict(np.load(path))
+    for name in ["conv1", "conv2", "fc1", "fc2"]:
+        assert d[name].dtype == np.int8
+        assert set(np.unique(d[name])).issubset({-1, 0, 1})
+        assert float(d[f"s_{name}"]) > 0.0
+    assert float(d["train_acc"]) > 0.9
+
+
+def test_hlo_text_never_elides_constants():
+    """Regression: as_hlo_text without print_large_constants elides big
+    literals as '{...}', which the rust-side parser silently reads as
+    zeros — the baked trained weights would vanish."""
+    params = aot.load_timnet_params()
+    entry = aot.make_timnet_entry(params)
+    spec = jax.ShapeDtypeStruct((1, 16, 16, 1), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(entry).lower(spec))
+    assert "{...}" not in text, "HLO text contains elided constants"

@@ -1,0 +1,156 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, sparsities and n_max; every variant of the
+kernel must match ``ref.py`` exactly (integer arithmetic — allclose with
+zero tolerance).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ternary_vmm import (
+    asymmetric_vmm,
+    ternary_vmm,
+    ternary_vmm_batched,
+    ternary_vmm_counts,
+    vmm_2bit,
+)
+
+
+def rand_ternary(rng, shape, p_zero=0.4):
+    return rng.choice(
+        np.array([-1, 0, 1], dtype=np.int8),
+        size=shape,
+        p=[(1 - p_zero) / 2, p_zero, (1 - p_zero) / 2],
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 6),
+    cols=st.integers(1, 64),
+    n_max=st.sampled_from([4, 8, 10]),
+    p_zero=st.sampled_from([0.0, 0.4, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_counts_match_ref(blocks, cols, n_max, p_zero, seed):
+    rng = np.random.default_rng(seed)
+    rows = 16 * blocks
+    x = rand_ternary(rng, rows, p_zero)
+    w = rand_ternary(rng, (rows, cols), p_zero)
+    got = np.asarray(ternary_vmm_counts(jnp.array(x), jnp.array(w), n_max=n_max))
+    want = np.asarray(ref.ternary_vmm_counts_ref(jnp.array(x), jnp.array(w), n_max=n_max))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    cols=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vmm_matches_ref(blocks, cols, seed):
+    rng = np.random.default_rng(seed)
+    rows = 16 * blocks
+    x = rand_ternary(rng, rows)
+    w = rand_ternary(rng, (rows, cols))
+    got = np.asarray(ternary_vmm(jnp.array(x), jnp.array(w)))
+    want = np.asarray(ref.ternary_vmm_ref(jnp.array(x), jnp.array(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sparse_inputs_equal_exact_matmul():
+    """With very sparse data no column count reaches n_max, so the TiM
+    result must equal the exact integer matmul."""
+    rng = np.random.default_rng(7)
+    x = rand_ternary(rng, 64, p_zero=0.85)
+    w = rand_ternary(rng, (64, 32), p_zero=0.85)
+    got = np.asarray(ternary_vmm(jnp.array(x), jnp.array(w)))
+    exact = np.asarray(ref.ternary_vmm_exact_ref(jnp.array(x), jnp.array(w)))
+    np.testing.assert_array_equal(got, exact)
+
+
+def test_dense_inputs_saturate():
+    """All-ones weights and inputs: every block count clips at n_max."""
+    x = jnp.ones(32, dtype=jnp.int8)
+    w = jnp.ones((32, 8), dtype=jnp.int8)
+    counts = np.asarray(ternary_vmm_counts(x, w, n_max=8))
+    np.testing.assert_array_equal(counts[0], 16)  # 2 blocks × clip(16→8)
+    np.testing.assert_array_equal(counts[1], 0)
+    exact = np.asarray(ref.ternary_vmm_exact_ref(x, w))
+    assert (np.asarray(ternary_vmm(x, w)) != exact).all()
+
+
+def test_zero_input_zero_output():
+    x = jnp.zeros(48, dtype=jnp.int8)
+    w = jnp.ones((48, 16), dtype=jnp.int8)
+    np.testing.assert_array_equal(np.asarray(ternary_vmm(x, w)), 0)
+
+
+def test_negation_symmetry():
+    """(-x)·W = -(x·W): the BL/BLB roles swap exactly."""
+    rng = np.random.default_rng(11)
+    x = rand_ternary(rng, 64)
+    w = rand_ternary(rng, (64, 24))
+    a = np.asarray(ternary_vmm(jnp.array(x), jnp.array(w)))
+    b = np.asarray(ternary_vmm(jnp.array(-x), jnp.array(w)))
+    np.testing.assert_array_equal(a, -b)
+
+
+def test_batched_matches_loop():
+    rng = np.random.default_rng(3)
+    xs = rand_ternary(rng, (5, 32))
+    w = rand_ternary(rng, (32, 20))
+    got = np.asarray(ternary_vmm_batched(jnp.array(xs), jnp.array(w)))
+    for i in range(5):
+        want = np.asarray(ternary_vmm(jnp.array(xs[i]), jnp.array(w)))
+        np.testing.assert_array_equal(got[i], want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_2bit_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 4, 48).astype(np.uint8)
+    w = rand_ternary(rng, (48, 24))
+    got = np.asarray(vmm_2bit(jnp.array(codes), jnp.array(w)))
+    want = np.asarray(ref.vmm_2bit_ref(jnp.array(codes), jnp.array(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    w1=st.floats(0.1, 2.0),
+    w2=st.floats(0.1, 2.0),
+    i1=st.floats(0.1, 2.0),
+    i2=st.floats(0.1, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_asymmetric_matches_ref(w1, w2, i1, i2, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_ternary(rng, 32)
+    w = rand_ternary(rng, (32, 16))
+    got = np.asarray(asymmetric_vmm(jnp.array(x), jnp.array(w), w1, w2, i1, i2))
+    want = np.asarray(ref.asymmetric_vmm_ref(jnp.array(x), jnp.array(w), w1, w2, i1, i2))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_asymmetric_equals_dequantized_product_when_sparse():
+    """Fig 5 semantics: with no clipping the weighted two-step VMM equals
+    the real-valued product of dequantized tensors."""
+    rng = np.random.default_rng(21)
+    x = rand_ternary(rng, 32, p_zero=0.9)
+    w = rand_ternary(rng, (32, 16), p_zero=0.9)
+    w1, w2, i1, i2 = 0.7, 0.3, 1.1, 0.6
+    got = np.asarray(asymmetric_vmm(jnp.array(x), jnp.array(w), w1, w2, i1, i2))
+    wd = np.where(w == 1, w1, np.where(w == -1, -w2, 0.0))
+    xd = np.where(x == 1, i1, np.where(x == -1, -i2, 0.0))
+    np.testing.assert_allclose(got, xd @ wd, rtol=1e-5, atol=1e-5)
+
+
+def test_rejects_non_block_multiple_rows():
+    with pytest.raises(AssertionError):
+        ternary_vmm(jnp.zeros(10, jnp.int8), jnp.zeros((10, 4), jnp.int8))

@@ -1,0 +1,121 @@
+"""L2 model tests: TiM deployment arithmetic, shapes, and the LSTM cell."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_ternary(rng, shape, p_zero=0.4):
+    return rng.choice(
+        np.array([-1, 0, 1], dtype=np.int8),
+        size=shape,
+        p=[(1 - p_zero) / 2, p_zero, (1 - p_zero) / 2],
+    )
+
+
+def test_quantize_acts_2bit_levels():
+    x = jnp.array([-1.0, 0.0, 0.6, 1.0, 1.4, 3.0])
+    codes = model.quantize_acts_2bit(x, clip=3.0)
+    # note: jnp.round is round-half-even, so 0.6→codes 0.6 (rounds to 1)
+    np.testing.assert_array_equal(np.asarray(codes), [0, 0, 1, 1, 1, 3])
+    assert codes.dtype == jnp.int8
+
+
+def test_quantize_ternary_is_ternary_and_sparse():
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=256).astype(np.float32))
+    t = np.asarray(model.quantize_ternary(x))
+    assert set(np.unique(t)).issubset({-1, 0, 1})
+    assert 0.05 < (t == 0).mean() < 0.95
+
+
+def test_pad_rows():
+    m = jnp.ones((10, 4), jnp.int8)
+    p = model.pad_rows(m)
+    assert p.shape == (16, 4)
+    np.testing.assert_array_equal(np.asarray(p[10:]), 0)
+    # Already-aligned input unchanged.
+    assert model.pad_rows(jnp.ones((32, 4), jnp.int8)).shape == (32, 4)
+
+
+def test_tim_fc_2bit_matches_ref_dequantized():
+    rng = np.random.default_rng(5)
+    codes = rng.integers(0, 4, (3, 48)).astype(np.int8)
+    w = rand_ternary(rng, (48, 24))
+    w_scale, act_clip = 0.5, 3.0
+    got = np.asarray(model.tim_fc_2bit(jnp.array(codes), jnp.array(w), w_scale, act_clip))
+    for b in range(3):
+        raw = np.asarray(ref.vmm_2bit_ref(jnp.array(codes[b]), jnp.array(w)))
+        want = raw.astype(np.float32) * (act_clip / 3.0) * w_scale
+        np.testing.assert_allclose(got[b], want, rtol=1e-6)
+
+
+def test_im2col_matches_lax_conv():
+    """im2col + matmul must equal lax.conv for float weights (topology
+    check for the conv lowering the TiM path uses)."""
+    rng = np.random.default_rng(9)
+    x = jnp.array(rng.normal(size=(2, 8, 8, 3)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(3, 3, 3, 5)).astype(np.float32))
+    cols = model.im2col(x, 3, 3)  # (B, HW, 9C) with (di,dj,c) channel order
+    w_mat = w.transpose(0, 1, 2, 3).reshape(9 * 3, 5)
+    got = (cols @ w_mat).reshape(2, 8, 8, 5)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_maxpool2():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    p = np.asarray(model.maxpool2(x))
+    np.testing.assert_array_equal(p[0, :, :, 0], [[5, 7], [13, 15]])
+
+
+def test_timnet_shapes_and_determinism():
+    from compile import train
+
+    d = dict(np.load(train.weights_path()))
+    params = {k: jnp.array(v) for k, v in d.items() if k != "train_acc"}
+    x, _ = train.make_dataset(4, seed=1)
+    a = model.timnet_apply(params, jnp.array(x))
+    b = model.timnet_apply(params, jnp.array(x))
+    assert a.shape == (4, 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_timnet_deploy_accuracy():
+    """End-to-end: the TiM-arithmetic deployment path must classify the
+    synthetic task nearly as well as the STE training path (≥90 %)."""
+    from compile import train
+
+    d = dict(np.load(train.weights_path()))
+    params = {k: jnp.array(v) for k, v in d.items() if k != "train_acc"}
+    x, y = train.make_dataset(128, seed=123)
+    logits = model.timnet_apply(params, jnp.array(x))
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.array(y)))
+    assert acc >= 0.9, f"deploy accuracy {acc}"
+
+
+def test_lstm_cell_gates_and_ternary_output():
+    rng = np.random.default_rng(3)
+    hidden = 32
+    rows = 2 * hidden  # already a block multiple
+    w = jnp.array(rand_ternary(rng, (rows, 4 * hidden)))
+    scale = 0.1
+    x = jnp.array(rand_ternary(rng, hidden).astype(np.float32))
+    h = jnp.array(rand_ternary(rng, hidden).astype(np.float32))
+    c = jnp.array(rng.normal(size=hidden).astype(np.float32))
+    h2, c2 = model.lstm_cell_apply(w, scale, x, h, c, hidden)
+    assert h2.shape == (hidden,) and c2.shape == (hidden,)
+    assert set(np.unique(np.asarray(h2))).issubset({-1.0, 0.0, 1.0})
+    # Cell state must follow the LSTM update with the kernel's gates.
+    counts = ref.ternary_vmm_counts_ref(
+        jnp.concatenate([x, h]).astype(jnp.int8), w, n_max=8
+    )
+    gates = np.asarray(counts[0] - counts[1]).astype(np.float32) * scale
+    i, f, g, o = np.split(gates, 4)
+    c_want = 1 / (1 + np.exp(-f)) * np.asarray(c) + 1 / (1 + np.exp(-i)) * np.tanh(g)
+    np.testing.assert_allclose(np.asarray(c2), c_want, rtol=1e-4, atol=1e-5)

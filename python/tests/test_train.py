@@ -1,0 +1,58 @@
+"""Training-pipeline tests (kept cheap: a handful of SGD steps)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import train
+
+
+def test_dataset_deterministic_and_separable():
+    x1, y1 = train.make_dataset(64, seed=5)
+    x2, y2 = train.make_dataset(64, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (64, 16, 16, 1)
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+    assert set(np.unique(y1)).issubset(set(range(10)))
+    # Nearest-pattern classification must already work well — the task is
+    # easy by construction (the CNN has to reach ≥90 %).
+    pats = train.class_patterns().reshape(10, -1)
+    flat = x1.reshape(64, -1)
+    d = ((flat[:, None, :] - pats[None, :, :]) ** 2).sum(-1)
+    # Brightness jitter shifts distances; check top-2 containment instead.
+    top2 = np.argsort(d, axis=1)[:, :2]
+    hit = np.mean([(y in t) for y, t in zip(y1, top2)])
+    assert hit > 0.6, f"nearest-pattern hit rate {hit}"
+
+
+def test_ste_ternary_forward_values():
+    w = jnp.array([0.9, -0.8, 0.05, 0.0])
+    q = np.asarray(train.ste_ternary(w))
+    # threshold = 0.7*mean|w| = 0.306; a = mean(|0.9|,|0.8|) = 0.85
+    np.testing.assert_allclose(q, [0.85, -0.85, 0.0, 0.0], rtol=1e-5)
+
+
+def test_ste_act_2bit_levels():
+    x = jnp.array([0.0, 0.5, 1.0, 2.0, -1.0])
+    q = np.asarray(train.ste_act_2bit(x, clip=1.0))
+    np.testing.assert_allclose(q, [0.0, 2 / 3, 1.0, 1.0, 0.0], rtol=1e-5)
+
+
+def test_short_training_reduces_loss():
+    losses = []
+    train.train(steps=30, batch=32, log=lambda s: losses.append(s))
+    # The loop logs step-0 and final loss lines; parse them.
+    vals = [float(line.split("loss")[1]) for line in losses if "loss" in line]
+    assert vals[0] > vals[-1], f"loss did not decrease: {vals}"
+
+
+def test_quantize_params_schema():
+    params = train.init_params(__import__("jax").random.PRNGKey(0))
+    q = train.quantize_params(params)
+    for name in ["conv1", "conv2", "fc1", "fc2"]:
+        assert q[name].dtype == np.int8
+        assert set(np.unique(q[name])).issubset({-1, 0, 1})
+        assert q[f"s_{name}"] > 0
+        # He-normal weights ternarized at 0.7·E|w| are ≈40-60 % sparse.
+        sp = (q[name] == 0).mean()
+        assert 0.3 < sp < 0.7, f"{name} sparsity {sp}"

@@ -1,0 +1,115 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * **n_max** (ADC full scale): accuracy of the functional accelerator at
+//!   n_max ∈ {4, 6, 8, 10} — the paper picks 8 over the conservative 10
+//!   by leaning on sparsity (§III-B);
+//! * **CNN batch**: weight-load amortization vs inference rate;
+//! * **DRAM bandwidth**: where the temporal-mapped CNNs become
+//!   memory-bound;
+//! * **tile count scaling**: peak vs achieved throughput.
+
+use timdnn::arch::functional::{read_eval_set, TimNetAccelerator, TimNetWeights};
+use timdnn::arch::ArchConfig;
+use timdnn::model;
+use timdnn::runtime::artifacts_dir;
+use timdnn::sim::{self, SimOptions};
+use timdnn::tile::{TileConfig, VmmMode};
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    nmax_ablation();
+    batch_ablation();
+    bandwidth_ablation();
+    tile_scaling();
+}
+
+fn nmax_ablation() {
+    let dir = artifacts_dir();
+    let wpath = dir.join("timnet_weights.bin");
+    let epath = dir.join("eval_set.bin");
+    if !wpath.exists() || !epath.exists() {
+        println!("(n_max ablation skipped — run `make artifacts`)");
+        return;
+    }
+    let weights = TimNetWeights::load(&wpath).unwrap();
+    let (images, labels) = read_eval_set(&epath).unwrap();
+    let n = 128.min(images.len());
+    let mut t = Table::new(
+        "Ablation: ADC full scale n_max (TiMNet accuracy, functional accelerator)",
+        &["n_max", "accuracy"],
+    );
+    for n_max in [4u32, 6, 8, 10] {
+        let mut cfg = TileConfig::paper();
+        cfg.n_max = n_max;
+        let preds =
+            TimNetAccelerator::new(&weights, cfg).classify(&images[..n], &mut VmmMode::Ideal);
+        let acc = preds.iter().zip(&labels).filter(|(&p, &l)| p as u32 == l).count() as f64
+            / n as f64;
+        t.row(&[n_max.to_string(), format!("{acc:.3}")]);
+    }
+    t.footnote("paper SIII-B: n_max=8 (vs conservative 10) has no accuracy impact; smaller full scales eventually clip real signal");
+    t.print();
+}
+
+fn batch_ablation() {
+    let mut t = Table::new(
+        "Ablation: CNN batch (AlexNet on TiM-DNN)",
+        &["batch", "inf/s", "load us/inf", "energy uJ/inf"],
+    );
+    let net = model::alexnet();
+    let arch = ArchConfig::tim_dnn();
+    for batch in [1usize, 4, 16, 64, 256] {
+        let r = sim::run_with(&net, &arch, SimOptions { batch });
+        t.row(&[
+            batch.to_string(),
+            sig(r.inf_per_s, 4),
+            sig(r.load_s * 1e6, 3),
+            sig(r.energy.total() * 1e6, 3),
+        ]);
+    }
+    t.footnote("weight loads amortize over the batch; MAC/SFU per-inference work is constant");
+    t.print();
+}
+
+fn bandwidth_ablation() {
+    let mut t = Table::new(
+        "Ablation: DRAM bandwidth (ResNet-34 on TiM-DNN, batch 64)",
+        &["GB/s", "inf/s", "bound"],
+    );
+    let net = model::resnet34();
+    for gbs in [32.0, 64.0, 128.0, 256.0, 512.0] {
+        let mut arch = ArchConfig::tim_dnn();
+        arch.dram_bw = gbs * 1e9;
+        let r = sim::run(&net, &arch);
+        let bound = if r.stream_s > r.mac_s { "stream/DRAM" } else { "MAC" };
+        t.row(&[format!("{gbs:.0}"), sig(r.inf_per_s, 4), bound.to_string()]);
+    }
+    t.footnote("Table II uses HBM2 at 256 GB/s");
+    t.print();
+}
+
+fn tile_scaling() {
+    let mut t = Table::new(
+        "Ablation: tile count scaling (ResNet-34)",
+        &["tiles", "peak TOPS", "inf/s", "scaling efficiency"],
+    );
+    let net = model::resnet34();
+    let base = {
+        let mut arch = ArchConfig::tim_dnn();
+        arch.tiles = 8;
+        sim::run(&net, &arch).inf_per_s / 8.0
+    };
+    for tiles in [8usize, 16, 32, 64, 128] {
+        let mut arch = ArchConfig::tim_dnn();
+        arch.tiles = tiles;
+        let r = sim::run(&net, &arch);
+        t.row(&[
+            tiles.to_string(),
+            sig(timdnn::energy::accelerator_peak_tops(tiles), 3),
+            sig(r.inf_per_s, 4),
+            format!("{:.2}", r.inf_per_s / (tiles as f64 * base)),
+        ]);
+    }
+    t.footnote("efficiency <1 as non-MAC streams and weight loads stop scaling with tiles");
+    t.print();
+}

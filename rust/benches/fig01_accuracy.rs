@@ -1,0 +1,33 @@
+//! Fig 1: accuracy of binary vs ternary vs FP32 networks.
+//!
+//! The published points are literature constants (`baseline::prior`); the
+//! in-repo evidence for the same trend is TiMNet's train-vs-deploy
+//! accuracy (EXPERIMENTS.md §E2E). This bench prints both.
+
+use timdnn::baseline::prior::fig1_accuracy_points;
+use timdnn::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 1: binary vs ternary vs FP32 accuracy (published points)",
+        &["Network", "Task", "Kind", "FP32", "Quantized", "Degradation"],
+    );
+    for p in fig1_accuracy_points() {
+        let deg = if p.task.contains("PPW") {
+            format!("+{:.1} PPW", p.quantized - p.fp32)
+        } else {
+            format!("-{:.2} %", p.fp32 - p.quantized)
+        };
+        t.row(&[
+            p.network.to_string(),
+            p.task.to_string(),
+            p.kind.to_string(),
+            format!("{}", p.fp32),
+            format!("{}", p.quantized),
+            deg,
+        ]);
+    }
+    t.footnote("paper: binary drops 5-13% top-1 / +150-180 PPW; ternary drops ~0.5% / +11-13 PPW");
+    t.footnote("in-repo trend evidence: TiMNet STE-ternary deploy accuracy in EXPERIMENTS.md §E2E");
+    t.print();
+}

@@ -1,0 +1,29 @@
+//! Fig 6: dot-product circuit simulation — V_BL for every bitline state
+//! S0..S16, the sensing margins, and the usable-state count.
+
+use timdnn::analog::BitlineCurve;
+use timdnn::util::table::Table;
+
+fn main() {
+    let curve = BitlineCurve::calibrated();
+    let mut t = Table::new(
+        "Fig 6: bitline states (n = TPCs discharging BL)",
+        &["State", "V_BL (V)", "margin to next (mV)"],
+    );
+    for n in 0..=16u32 {
+        t.row(&[
+            format!("S{n}"),
+            format!("{:.3}", curve.voltage(n)),
+            format!("{:.0}", curve.margin(n) * 1e3),
+        ]);
+    }
+    t.footnote(&format!(
+        "avg margin S0-S7 = {:.0} mV (paper: 96 mV); margins S8-S10 in 60-80 mV; saturation beyond S10",
+        curve.nominal_delta() * 1e3
+    ));
+    t.footnote(&format!(
+        "usable states at 55 mV floor: {} (paper: 11, S0..S10)",
+        curve.usable_states(0.055)
+    ));
+    t.print();
+}

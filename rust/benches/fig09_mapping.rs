@@ -1,0 +1,53 @@
+//! Fig 9: spatial vs temporal mapping example — a weight matrix mapped to
+//! two TiM-DNN instances differing in tile count, plus the per-benchmark
+//! mapping decisions of §III-D.
+
+use timdnn::arch::ArchConfig;
+use timdnn::energy::constants::ACCEL_CAPACITY_WORDS;
+use timdnn::mapper::map_layer;
+use timdnn::model::{self, VmmShape};
+use timdnn::util::table::Table;
+
+fn main() {
+    // The figure's example: one VMM workload on a large and a small instance.
+    let shape = VmmShape { rows: 512, cols: 512, positions: 64, unique_inputs: 512 };
+    let mut big = ArchConfig::tim_dnn();
+    big.name = "instance A (32 tiles)".into();
+    let mut small = ArchConfig::tim_dnn();
+    small.tiles = 2;
+    small.name = "instance B (2 tiles)".into();
+
+    let mut t = Table::new(
+        "Fig 9: mapping a 512x512 VMM (64 input vectors)",
+        &["Instance", "blocks", "steps", "replication", "tiles used", "accesses"],
+    );
+    for arch in [&big, &small] {
+        let m = map_layer("w", shape, 1, false, arch);
+        t.row(&[
+            arch.name.clone(),
+            m.blocks.to_string(),
+            m.steps.to_string(),
+            m.replication.to_string(),
+            m.tiles_used.to_string(),
+            m.accesses.to_string(),
+        ]);
+    }
+    t.footnote("W <= TWC: replicated across tiles; W > TWC: multi-step temporal execution");
+    t.print();
+
+    let mut t2 = Table::new(
+        "SIII-D: mapping decision per benchmark",
+        &["Network", "weight words", "capacity", "strategy"],
+    );
+    for b in model::zoo() {
+        t2.row(&[
+            b.net.name.clone(),
+            b.net.total_weight_words().to_string(),
+            ACCEL_CAPACITY_WORDS.to_string(),
+            if b.net.fits(ACCEL_CAPACITY_WORDS) { "spatial (pipelined)" } else { "temporal" }
+                .to_string(),
+        ]);
+    }
+    t2.footnote("paper: CNNs temporal, RNNs spatial");
+    t2.print();
+}

@@ -1,0 +1,51 @@
+//! Fig 12: performance benefits of TiM-DNN — normalized inference time
+//! split into MAC-Ops and non-MAC-Ops for TiM-DNN and both near-memory
+//! baselines, plus the §V-B absolute inference rates.
+
+use timdnn::arch::ArchConfig;
+use timdnn::model;
+use timdnn::sim;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 12: normalized inference time (per benchmark; TiM = 1.0)",
+        &["Benchmark", "Arch", "MAC (norm)", "non-MAC (norm)", "total (norm)", "speedup"],
+    );
+    let mut abs = Table::new(
+        "SV-B: absolute inference rates on TiM-DNN",
+        &["Benchmark", "inf/s (sim)", "paper inf/s", "ratio", "note"],
+    );
+    for bench in model::zoo() {
+        let tim = sim::run(&bench.net, &ArchConfig::tim_dnn());
+        let cap = sim::run(&bench.net, &ArchConfig::baseline_iso_capacity());
+        let area = sim::run(&bench.net, &ArchConfig::baseline_iso_area());
+        let norm = tim.total_s;
+        for r in [&tim, &area, &cap] {
+            t.row(&[
+                bench.net.name.clone(),
+                r.arch.clone(),
+                sig(r.mac_s / norm, 3),
+                sig(r.nonmac_s / norm, 3),
+                sig(r.total_s / norm, 3),
+                format!("{:.1}x", r.total_s / tim.total_s).replace("1.0x", "1.0x (ref)"),
+            ]);
+        }
+        // Absolute: the paper quotes RNN rates per step (our sim models a
+        // 35-step sequence as one inference).
+        let steps = if bench.net.recurrent { 35.0 } else { 1.0 };
+        let got = tim.inf_per_s * steps;
+        abs.row(&[
+            bench.net.name.clone(),
+            sig(got, 4),
+            sig(bench.paper_inf_per_s, 4),
+            format!("{:.2}", got / bench.paper_inf_per_s),
+            if bench.net.recurrent { "per PTB step" } else { "batch-64 steady state" }.to_string(),
+        ]);
+    }
+    t.footnote("paper: 5.1-7.7x over iso-capacity, 3.2-4.2x over iso-area");
+    t.footnote("speedup = baseline time / TiM time");
+    t.print();
+    abs.footnote("paper: 4827 / 952 / 1834 / 2e6 / 1.9e6");
+    abs.print();
+}

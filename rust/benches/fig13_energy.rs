@@ -1,0 +1,39 @@
+//! Fig 13: energy benefits of TiM-DNN over the iso-area baseline, split
+//! into the paper's five categories (programming / DRAM / buffers /
+//! RU+SFU / MAC-Ops).
+
+use timdnn::arch::ArchConfig;
+use timdnn::model;
+use timdnn::sim;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 13: energy per inference by component (uJ)",
+        &["Benchmark", "Arch", "Prog", "DRAM", "Buffers", "RU+SFU", "MAC", "Total", "benefit"],
+    );
+    for bench in model::zoo() {
+        let tim = sim::run(&bench.net, &ArchConfig::tim_dnn());
+        let area = sim::run(&bench.net, &ArchConfig::baseline_iso_area());
+        for r in [&tim, &area] {
+            let e = &r.energy;
+            t.row(&[
+                bench.net.name.clone(),
+                if r.arch.contains("TiM") { "TiM".into() } else { "iso-area".to_string() },
+                sig(e.programming * 1e6, 3),
+                sig(e.dram * 1e6, 3),
+                sig(e.buffers * 1e6, 3),
+                sig(e.ru_sfu * 1e6, 3),
+                sig(e.mac * 1e6, 3),
+                sig(e.total() * 1e6, 3),
+                if r.arch.contains("TiM") {
+                    format!("{:.1}x", area.energy.total() / tim.energy.total())
+                } else {
+                    "-".to_string()
+                },
+            ]);
+        }
+    }
+    t.footnote("paper: 3.9x-4.7x energy benefit, driven by the MAC-Ops component");
+    t.print();
+}

@@ -1,0 +1,27 @@
+//! Fig 15: area breakdown of the accelerator, a TiM tile, and a baseline
+//! near-memory tile.
+
+use timdnn::energy::area;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    for b in [
+        area::accelerator_breakdown(),
+        area::tim_tile_breakdown(),
+        area::baseline_tile_breakdown(),
+    ] {
+        let mut t = Table::new(
+            &format!("Fig 15: area breakdown — {}", b.title),
+            &["Component", "mm2", "%"],
+        );
+        for (name, mm2, pct) in b.rows() {
+            t.row(&[name.to_string(), sig(mm2, 4), format!("{pct:.1}")]);
+        }
+        t.row(&["TOTAL".to_string(), sig(b.total(), 4), "100.0".to_string()]);
+        t.print();
+    }
+    println!(
+        "tile area ratio TiM/baseline = {:.2} (paper: 1.89x at iso-capacity)",
+        area::tim_tile_mm2() / area::baseline_tile_mm2()
+    );
+}

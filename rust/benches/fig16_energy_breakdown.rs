@@ -1,0 +1,43 @@
+//! Fig 16: energy breakdown of a 16×256 ternary VMM on a TiM tile — from
+//! the functional tile's meter (not just the analytic constants).
+
+use timdnn::energy::constants::NOMINAL_OUTPUT_SPARSITY;
+use timdnn::quant::TernarySystem;
+use timdnn::tile::{TileConfig, TimTile, VmmMode};
+use timdnn::tpc::TritMatrix;
+use timdnn::util::prng::Rng;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    // Average over many random 16×256 VMMs at the paper's sparsity.
+    let mut rng = Rng::seeded(16);
+    let mut tile = TimTile::new(TileConfig::paper());
+    let trials = 500;
+    let mut totals = timdnn::tile::EnergyBreakdown::default();
+    for _ in 0..trials {
+        let w = TritMatrix::random(16, 256, 0.4, &mut rng);
+        tile.load_weights(&w);
+        tile.meter.reset();
+        let x = rng.trit_vec(16, 0.4);
+        tile.vmm_block(0, &x, &mut VmmMode::Ideal);
+        totals.add(&tile.meter.energy);
+    }
+    let scale = 1.0 / trials as f64;
+    let mut t = Table::new(
+        "Fig 16: energy of one 16x256 ternary VMM (averaged, 40% sparsity)",
+        &["Component", "pJ", "paper pJ"],
+    );
+    t.row(&["PCU (ADCs + arith)".to_string(), sig(totals.pcu * scale * 1e12, 3), "17".into()]);
+    t.row(&["BL + BLB".to_string(), sig(totals.bl * scale * 1e12, 3), "9.18".into()]);
+    t.row(&["WL".to_string(), sig(totals.wl * scale * 1e12, 3), "0.38".into()]);
+    t.row(&["Decoder + col mux".to_string(), sig(totals.dec_mux * scale * 1e12, 3), "0.28".into()]);
+    let total = (totals.pcu + totals.bl + totals.wl + totals.dec_mux) * scale;
+    t.row(&["TOTAL".to_string(), sig(total * 1e12, 4), "26.84".into()]);
+    t.footnote(&format!(
+        "analytic total at nominal sparsity {:.2}: {:.2} pJ",
+        NOMINAL_OUTPUT_SPARSITY,
+        timdnn::energy::tim_vmm_energy(NOMINAL_OUTPUT_SPARSITY, 1) * 1e12
+    ));
+    t.print();
+    let _ = TernarySystem::Unweighted;
+}

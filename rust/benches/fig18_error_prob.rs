@@ -1,0 +1,45 @@
+//! Fig 18: error probability during ternary VMMs — P_SE(SE|n) from
+//! Monte-Carlo, P_n from partial-sum traces, their product, and the total
+//! P_E of Eq. 1 (paper: 1.5×10⁻⁴).
+
+use timdnn::util::prng::Rng;
+use timdnn::util::table::{sig, Table};
+use timdnn::variation::VariationStudy;
+
+fn main() {
+    let study = VariationStudy::paper();
+    let mut rng = Rng::seeded(18);
+    // 1000+ samples per state (paper: "1000 samples for every possible
+    // BL/BLB state"); we use more for tighter tails.
+    let (p_se, p_n, p_e) = study.run_paper_study(50_000, 600, &mut rng);
+
+    let mut t = Table::new(
+        "Fig 18: error probabilities (n_max = 8, L = 16)",
+        &["n", "P_SE(SE|n)", "P_n", "P_SE*P_n"],
+    );
+    for n in 0..p_se.len() {
+        t.row(&[
+            n.to_string(),
+            sig(p_se[n], 3),
+            sig(p_n[n], 3),
+            format!("{:.2e}", p_se[n] * p_n[n]),
+        ]);
+    }
+    t.footnote(&format!("P_E = {p_e:.2e} (paper: 1.5e-4, i.e. ~2 errors of magnitude +/-1 per 10K VMMs)"));
+    t.footnote("P_n from ternary partial-sum traces at 40% weight/input sparsity");
+    t.print();
+
+    // P_E sensitivity to trace sparsity (the paper's single 1.5e-4 point
+    // corresponds to one specific workload mix).
+    println!("P_E vs trace sparsity:");
+    for sp in [0.40, 0.45, 0.50, 0.55, 0.60] {
+        let p_n_s = study.state_occupancy(300, sp, sp, &mut rng);
+        let p_e_s = study.total_error_prob(&p_se, &p_n_s);
+        println!("  weight/input sparsity {sp:.2}: P_E = {p_e_s:.2e}");
+    }
+
+    // Error magnitudes: only adjacent states may be confused.
+    let (m1, p1, other) = study.error_magnitudes(7, 50_000, &mut rng);
+    println!("state S7 error magnitudes: P(-1)={m1:.2e} P(+1)={p1:.2e} P(|e|>1)={other:.2e}");
+    assert_eq!(other, 0.0, "error magnitude must be +/-1");
+}

@@ -1,0 +1,76 @@
+//! Hot-path micro-benchmarks (criterion-style, in-repo harness — the
+//! offline environment has no criterion). These are the wall-clock
+//! numbers EXPERIMENTS.md §Perf tracks:
+//!
+//! * functional TiM-tile block VMM (the simulator's inner loop),
+//! * full-tile 256-row VMM,
+//! * mapper + simulator end-to-end for the largest benchmark,
+//! * Monte-Carlo variation sampling.
+
+use timdnn::arch::ArchConfig;
+use timdnn::model;
+use timdnn::quant::TernarySystem;
+use timdnn::sim;
+use timdnn::tile::{TileConfig, TimTile, VmmMode};
+use timdnn::tpc::TritMatrix;
+use timdnn::util::bench::{black_box, quick};
+use timdnn::util::prng::Rng;
+use timdnn::variation::VariationStudy;
+
+fn main() {
+    let mut rng = Rng::seeded(1);
+
+    // Tile block VMM.
+    let w = TritMatrix::random(256, 256, 0.4, &mut rng);
+    let x16 = rng.trit_vec(16, 0.4);
+    let mut tile = TimTile::new(TileConfig::paper());
+    tile.load_weights(&w);
+    let r = quick("tile/block_vmm_16x256", || {
+        black_box(tile.vmm_block(0, black_box(&x16), &mut VmmMode::Ideal));
+    });
+    println!(
+        "  -> {:.1} M block-VMMs/s = {:.2} G MAC/s functional throughput",
+        r.per_second(1.0) / 1e6,
+        r.per_second((16 * 256) as f64) / 1e9
+    );
+
+    // Allocation-free inner loop (what the simulator's hot path uses).
+    let mut counts = Vec::with_capacity(256);
+    let r = quick("tile/block_vmm_16x256_into", || {
+        black_box(tile.vmm_block_into(0, black_box(&x16), &mut VmmMode::Ideal, &mut counts));
+    });
+    println!(
+        "  -> {:.1} M block-VMMs/s = {:.2} G MAC/s (no alloc)",
+        r.per_second(1.0) / 1e6,
+        r.per_second((16 * 256) as f64) / 1e9
+    );
+
+    // Full-tile VMM (16 blocks + PCU reduction).
+    let x256 = rng.trit_vec(256, 0.4);
+    let r = quick("tile/full_vmm_256x256", || {
+        black_box(tile.vmm(black_box(&x256), TernarySystem::Unweighted, &mut VmmMode::Ideal));
+    });
+    println!("  -> {:.2} G MAC/s", r.per_second((256 * 256) as f64) / 1e9);
+
+    // Analog-path VMM (bitline curve + ADC decode per column).
+    let r = quick("tile/block_vmm_analog", || {
+        black_box(tile.vmm_block(0, black_box(&x16), &mut VmmMode::Analog));
+    });
+    println!("  -> {:.1} M block-VMMs/s (analog decode)", r.per_second(1.0) / 1e6);
+
+    // Mapper + simulator end to end (largest CNN).
+    let resnet = model::resnet34();
+    let arch = ArchConfig::tim_dnn();
+    let r = quick("sim/resnet34_end_to_end", || {
+        black_box(sim::run(black_box(&resnet), &arch));
+    });
+    println!("  -> {:.0} full-network simulations/s", r.per_second(1.0));
+
+    // Monte-Carlo variation sampling.
+    let study = VariationStudy::paper();
+    let mut mc_rng = Rng::seeded(2);
+    let r = quick("variation/sensing_error_1k_samples", || {
+        black_box(study.sensing_error_prob(1_000, &mut mc_rng));
+    });
+    println!("  -> {:.2} M MC samples/s", r.per_second(9.0 * 1_000.0) / 1e6);
+}

@@ -1,0 +1,45 @@
+//! Table II: micro-architectural parameters — printed from the live
+//! configuration structs (not hardcoded strings), so drift between code
+//! and documentation is impossible.
+
+use timdnn::arch::ArchConfig;
+use timdnn::energy::constants::*;
+use timdnn::util::table::Table;
+
+fn main() {
+    let a = ArchConfig::tim_dnn();
+    let mut t = Table::new("Table II: TiM-DNN micro-architectural parameters", &["Component", "Value"]);
+    t.row(&["No. of processing tiles".to_string(), format!("{} TiM tiles", a.tiles)]);
+    t.row(&[
+        "TiM tile".to_string(),
+        format!(
+            "{}x{} TPCs, {} PCUs, (M={}, N={}, L={}, K={})",
+            a.tile.rows(),
+            a.tile.n,
+            a.tile.m,
+            a.tile.m,
+            a.tile.n,
+            a.tile.l,
+            a.tile.k
+        ),
+    ]);
+    t.row(&[
+        "Buffer (Activation + Psum)".to_string(),
+        format!("{} KB + {} KB", a.act_buf / 1024, a.psum_buf / 1024),
+    ]);
+    t.row(&["I-Mem".to_string(), format!("{IMEM_ENTRIES} entries")]);
+    t.row(&["Global Reduce Unit (RU)".to_string(), format!("{RU_ADDERS} adders (12-bit)")]);
+    t.row(&[
+        "Special function unit (SFU)".to_string(),
+        format!(
+            "{SFU_RELU_UNITS} ReLU, 8 vPE x 4 lanes, {SFU_SPE_UNITS} SPE, {SFU_QUANT_UNITS} QU"
+        ),
+    ]);
+    t.row(&[
+        "Main memory".to_string(),
+        format!("HBM2 ({:.0} GB/s)", a.dram_bw / 1e9),
+    ]);
+    t.row(&["ADC".to_string(), format!("flash, n_max = {} (L = {})", a.tile.n_max, a.tile.l)]);
+    t.row(&["Dot-product latency".to_string(), format!("{:.1} ns", T_VMM_S * 1e9)]);
+    t.print();
+}

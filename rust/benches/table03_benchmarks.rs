@@ -1,0 +1,26 @@
+//! Table III: the DNN benchmark suite with precisions, published
+//! accuracies, and the shape statistics our simulator derives.
+
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Table III: DNN benchmarks",
+        &["Application", "Network", "[A,W]", "FP32 metric", "Ternary metric", "Method", "GMACs", "Mwords"],
+    );
+    for b in timdnn::model::zoo() {
+        let app = if b.net.recurrent { "Language modeling (PTB, PPW)" } else { "ImageNet top-1 %" };
+        t.row(&[
+            app.to_string(),
+            b.net.name.clone(),
+            b.precision.to_string(),
+            format!("{}", b.fp32_metric),
+            format!("{}", b.ternary_metric),
+            b.method.to_string(),
+            sig(b.net.total_macs() as f64 / 1e9, 3),
+            sig(b.net.total_weight_words() as f64 / 1e6, 3),
+        ]);
+    }
+    t.footnote("accuracy columns are the published values of the cited quantization works (DESIGN.md §Substitutions)");
+    t.print();
+}

@@ -1,0 +1,41 @@
+//! Table IV: system-level comparison — prior designs (published numbers)
+//! vs TiM-DNN (this repo's calibrated model), plus the abstract's
+//! improvement factors.
+
+use timdnn::baseline::prior::table4_designs;
+use timdnn::energy;
+use timdnn::energy::constants::ACCEL_TILES;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    let tw = energy::peak_tops_per_watt();
+    let tm = energy::peak_tops_per_mm2();
+    let tops = energy::accelerator_peak_tops(ACCEL_TILES);
+
+    let mut t = Table::new(
+        "Table IV: comparison with DNN accelerators",
+        &["Design", "Precision", "Tech", "TOPS/W", "TOPS/mm2", "TOPS", "TiM-DNN TOPS/W gain"],
+    );
+    for d in table4_designs() {
+        t.row(&[
+            d.name.to_string(),
+            d.precision.to_string(),
+            format!("{}nm", d.technology_nm),
+            sig(d.tops_per_w, 3),
+            sig(d.tops_per_mm2, 3),
+            sig(d.tops, 3),
+            format!("{:.0}x", tw / d.tops_per_w),
+        ]);
+    }
+    t.row(&[
+        "TiM-DNN (this work)".to_string(),
+        "Ternary".to_string(),
+        "32nm".to_string(),
+        sig(tw, 3),
+        sig(tm, 3),
+        sig(tops, 3),
+        "-".to_string(),
+    ]);
+    t.footnote("paper: 127 TOPS/W, 58.2 TOPS/mm2, 114 TOPS; 300x vs V100, 55x-240x vs specialized");
+    t.print();
+}

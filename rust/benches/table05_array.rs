@@ -1,0 +1,32 @@
+//! Table V: array-level comparison — the TiM processing tile vs published
+//! in-memory array designs.
+
+use timdnn::baseline::prior::table5_designs;
+use timdnn::energy;
+use timdnn::util::table::{sig, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "Table V: array-level comparison",
+        &["Design", "Precision (W/A)", "Tech", "TOPS/W", "TOPS/mm2"],
+    );
+    for d in table5_designs() {
+        t.row(&[
+            d.name.to_string(),
+            d.precision.to_string(),
+            format!("{}nm", d.technology_nm),
+            sig(d.tops_per_w, 4),
+            d.tops_per_mm2.map(|v| sig(v, 4)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.row(&[
+        "TiM Processing Tile (this work)".to_string(),
+        "Ternary/Ternary".to_string(),
+        "32nm".to_string(),
+        sig(energy::tile_tops_per_watt(), 5),
+        sig(energy::tile_tops_per_mm2(), 4),
+    ]);
+    t.footnote("paper: 265.43 TOPS/W, 61.39 TOPS/mm2 for the TiM tile");
+    t.footnote("binary designs above can be more efficient but lose 5-13% ImageNet top-1 (Fig 1)");
+    t.print();
+}

@@ -1,0 +1,104 @@
+//! Flash ADC model (paper §IV: "3-bit flash ADCs to convert bitline
+//! voltages to digital values").
+//!
+//! A flash ADC is a bank of comparators against reference taps. We place
+//! the taps at the midpoints between adjacent nominal state voltages, so
+//! the decode is a maximum-likelihood decision under symmetric noise.
+//! With `n_max = 8` the converter resolves the 9 states S0..S8 (the paper
+//! calls this "3-bit" loosely; the conservative `n_max = 10` variant is
+//! also supported and used by the Fig 6/17 benches).
+
+use super::bitline::BitlineCurve;
+use crate::energy::constants::SIGMA_ADC_REF_V;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Adc {
+    /// thresholds[i] separates state i from state i+1 (descending volts).
+    thresholds: Vec<f64>,
+}
+
+impl Adc {
+    /// Build an ADC for the given curve with full scale `n_max`.
+    pub fn for_curve(curve: &BitlineCurve, n_max: u32) -> Self {
+        let thresholds = (0..n_max)
+            .map(|i| 0.5 * (curve.voltage(i) + curve.voltage(i + 1)))
+            .collect();
+        Self { thresholds }
+    }
+
+    pub fn n_max(&self) -> u32 {
+        self.thresholds.len() as u32
+    }
+
+    /// Ideal decode: the count whose nominal voltage region contains `v`.
+    /// Saturates at `n_max` — this is the ADC clipping the paper exploits
+    /// (sparsity keeps true counts below n_max almost always).
+    pub fn decode(&self, v: f64) -> u32 {
+        // Voltages descend with count: v above thresholds[0] ⇒ 0, below
+        // thresholds[last] ⇒ n_max.
+        self.thresholds.iter().filter(|&&t| v < t).count() as u32
+    }
+
+    /// Decode with per-conversion comparator/reference offsets (used by the
+    /// Monte-Carlo variation study; σ from `SIGMA_ADC_REF_V`).
+    pub fn decode_noisy(&self, v: f64, rng: &mut Rng) -> u32 {
+        self.thresholds
+            .iter()
+            .filter(|&&t| v < t + rng.normal(0.0, SIGMA_ADC_REF_V))
+            .count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodes_every_nominal_state_exactly() {
+        let curve = BitlineCurve::calibrated();
+        for n_max in [8u32, 10] {
+            let adc = Adc::for_curve(&curve, n_max);
+            for count in 0..=n_max {
+                assert_eq!(adc.decode(curve.voltage(count)), count, "n_max={n_max}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturates_at_n_max() {
+        let curve = BitlineCurve::calibrated();
+        let adc = Adc::for_curve(&curve, 8);
+        for count in 9..=16 {
+            assert_eq!(adc.decode(curve.voltage(count)), 8);
+        }
+        assert_eq!(adc.decode(0.0), 8);
+    }
+
+    #[test]
+    fn vdd_decodes_to_zero() {
+        let curve = BitlineCurve::calibrated();
+        let adc = Adc::for_curve(&curve, 8);
+        assert_eq!(adc.decode(crate::energy::constants::VDD), 0);
+    }
+
+    #[test]
+    fn midpoint_thresholds_are_monotone() {
+        let curve = BitlineCurve::calibrated();
+        let adc = Adc::for_curve(&curve, 10);
+        for w in adc.thresholds.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn noisy_decode_matches_ideal_at_large_margin() {
+        // At state S1 the margin is ~10σ, so noisy decode ≈ always right.
+        let curve = BitlineCurve::calibrated();
+        let adc = Adc::for_curve(&curve, 8);
+        let mut rng = Rng::seeded(21);
+        let v = curve.voltage(1);
+        let errors = (0..5000).filter(|_| adc.decode_noisy(v, &mut rng) != 1).count();
+        assert_eq!(errors, 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Nominal bitline discharge curve V_BL(count) — Fig 6.
+//!
+//! The bitline acts as an analog accumulator: each TPC whose product is +1
+//! discharges BL by one step (−1 products discharge BLB; the two lines are
+//! symmetric, §III-B). Because the pulldown current drops as the line
+//! discharges, steps shrink with state index; the paper measures an
+//! average margin of 96 mV for S0–S7, 60–80 mV for S8–S10, and saturation
+//! beyond S10.
+
+use crate::energy::constants::VDD;
+
+/// Piecewise discharge-step table + saturation tail.
+#[derive(Clone, Debug)]
+pub struct BitlineCurve {
+    /// steps[i] = V(S_i) − V(S_{i+1}) for i = 0.. (volts).
+    steps: Vec<f64>,
+    /// Geometric decay factor of the saturation tail.
+    tail_ratio: f64,
+}
+
+impl BitlineCurve {
+    /// The curve calibrated to Fig 6 (see module docs).
+    pub fn calibrated() -> Self {
+        Self {
+            // S0→S1 .. S7→S8: average of first 7 margins = 96 mV exactly;
+            // mild monotone compression as the line discharges.
+            // S8→S9, S9→S10: the 60–80 mV regime. Beyond: near-saturated.
+            steps: vec![
+                0.0990, 0.0980, 0.0970, 0.0960, 0.0955, 0.0945, 0.0920, // S0..S7 margins
+                0.0800, // S7→S8
+                0.0700, // S8→S9
+                0.0600, // S9→S10
+            ],
+            tail_ratio: 0.45,
+        }
+    }
+
+    /// Nominal per-step drop for the `i`-th discharging cell (1-based).
+    pub fn step(&self, i: u32) -> f64 {
+        assert!(i >= 1, "steps are 1-based");
+        let idx = (i - 1) as usize;
+        if idx < self.steps.len() {
+            self.steps[idx]
+        } else {
+            // Saturation tail: geometric decay from the last table entry.
+            let last = *self.steps.last().unwrap();
+            let extra = idx - self.steps.len() + 1;
+            last * self.tail_ratio.powi(extra as i32)
+        }
+    }
+
+    /// The headline sensing margin Δ (average of the S0–S7 margins).
+    pub fn nominal_delta(&self) -> f64 {
+        self.steps[..7].iter().sum::<f64>() / 7.0
+    }
+
+    /// Nominal V_BL after `count` discharges.
+    pub fn voltage(&self, count: u32) -> f64 {
+        let mut v = VDD;
+        for i in 1..=count {
+            v -= self.step(i);
+        }
+        v.max(0.0)
+    }
+
+    /// Margin between adjacent states i and i+1.
+    pub fn margin(&self, i: u32) -> f64 {
+        self.voltage(i) - self.voltage(i + 1)
+    }
+
+    /// Number of states distinguishable with margin ≥ `min_margin`
+    /// (Fig 6: 11 states, S0..S10, at a 60 mV floor).
+    pub fn usable_states(&self, min_margin: f64) -> u32 {
+        let mut s = 0;
+        while self.margin(s) >= min_margin {
+            s += 1;
+        }
+        s + 1 // S_0 .. S_s inclusive
+    }
+}
+
+impl Default for BitlineCurve {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_margin_s0_s7_is_96mv() {
+        // Fig 6: "from S0 to S7 the average sensing margin (Δ) is 96 mV".
+        let c = BitlineCurve::calibrated();
+        assert!((c.nominal_delta() - 0.096).abs() < 1e-4, "Δ={}", c.nominal_delta());
+    }
+
+    #[test]
+    fn s8_to_s10_margins_in_60_80mv_band() {
+        // Fig 6: "The sensing margin decreases to 60-80 mv for states S8 to S10".
+        let c = BitlineCurve::calibrated();
+        for s in 7..10 {
+            let m = c.margin(s);
+            assert!((0.060..=0.080).contains(&m), "margin(S{s}->S{})={m}", s + 1);
+        }
+    }
+
+    #[test]
+    fn saturates_beyond_s10() {
+        // Fig 6: "beyond S10 the bitline voltage saturates".
+        let c = BitlineCurve::calibrated();
+        assert!(c.margin(10) < 0.030, "margin(10)={}", c.margin(10));
+        assert!(c.margin(12) < 0.010);
+        // Voltage never goes negative even at full-column discharge.
+        assert!(c.voltage(16) >= 0.0);
+    }
+
+    #[test]
+    fn eleven_usable_states() {
+        // Fig 6: "a maximum of 11 BL states (S0 to S10) with sufficiently
+        // large sensing margin".
+        let c = BitlineCurve::calibrated();
+        assert_eq!(c.usable_states(0.055), 11);
+    }
+
+    #[test]
+    fn voltage_monotone_decreasing() {
+        let c = BitlineCurve::calibrated();
+        for i in 0..16 {
+            assert!(c.voltage(i + 1) < c.voltage(i) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn vdd_at_zero() {
+        assert_eq!(BitlineCurve::calibrated().voltage(0), VDD);
+    }
+}

@@ -1,0 +1,78 @@
+//! Behavioral analog model: bitline discharge curve, sample-and-hold, and
+//! the flash ADC (paper §III-B, Figs 3, 6).
+//!
+//! This replaces the paper's SPICE simulations (32 nm PTM). The curve is
+//! calibrated to every published number: average sensing margin Δ = 96 mV
+//! for states S0–S7, compressed 60–80 mV margins for S8–S10, saturation
+//! beyond S10, and the V_T-variation spread that makes the S7/S8
+//! histograms of Fig 17 just overlap.
+
+mod adc;
+mod bitline;
+
+pub use adc::Adc;
+pub use bitline::BitlineCurve;
+
+use crate::energy::constants::{SIGMA_CELL_V, VDD};
+use crate::util::prng::Rng;
+
+/// Sample a noisy final bitline voltage for `count` discharging TPCs.
+///
+/// Each discharging cell's pulldown current varies with its V_T
+/// (σ/μ = 5 %), so each discharge step carries independent Gaussian noise
+/// proportional to the step size — the per-state spread therefore grows
+/// roughly as √count, which is what makes high states overlap first
+/// (Fig 17: S7/S8 overlap, S1/S2 do not).
+pub fn sample_bl_voltage(curve: &BitlineCurve, count: u32, rng: &mut Rng) -> f64 {
+    let mut v = VDD;
+    for i in 1..=count {
+        let step = curve.step(i);
+        let sigma = SIGMA_CELL_V * (step / curve.nominal_delta());
+        v -= step + rng.normal(0.0, sigma);
+    }
+    v.clamp(0.0, VDD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_count_stays_at_vdd() {
+        let curve = BitlineCurve::calibrated();
+        let mut rng = Rng::seeded(1);
+        assert_eq!(sample_bl_voltage(&curve, 0, &mut rng), VDD);
+    }
+
+    #[test]
+    fn noise_spread_grows_with_count() {
+        let curve = BitlineCurve::calibrated();
+        let spread = |count: u32| {
+            let mut rng = Rng::seeded(99);
+            let mut s = crate::util::stats::Summary::new();
+            for _ in 0..2000 {
+                s.push(sample_bl_voltage(&curve, count, &mut rng));
+            }
+            s.std()
+        };
+        assert!(spread(8) > spread(2), "σ(8)={} σ(2)={}", spread(8), spread(2));
+    }
+
+    #[test]
+    fn mean_tracks_nominal_curve() {
+        let curve = BitlineCurve::calibrated();
+        let mut rng = Rng::seeded(5);
+        for count in [1u32, 4, 8] {
+            let mut s = crate::util::stats::Summary::new();
+            for _ in 0..5000 {
+                s.push(sample_bl_voltage(&curve, count, &mut rng));
+            }
+            let nominal = curve.voltage(count);
+            assert!(
+                (s.mean() - nominal).abs() < 2e-3,
+                "count={count} mean={} nominal={nominal}",
+                s.mean()
+            );
+        }
+    }
+}

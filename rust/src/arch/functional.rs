@@ -1,0 +1,331 @@
+//! Functional multi-tile accelerator (Fig 8) running a real network.
+//!
+//! Where [`crate::sim`] models *time and energy*, this module models
+//! *values*: TiMNet (the trained ternary [2,T] CNN exported by
+//! `make artifacts` as `timnet_weights.bin`) executes entirely on the
+//! rust hardware model — im2col staging in the activation buffer, TiM-tile
+//! block VMMs (with selectable [`VmmMode`], including variation-noise
+//! injection), PCU scaling, SFU ReLU/maxpool/2-bit requantization.
+//!
+//! This closes the loop on two paper claims:
+//! * §III-B / §V-F — sensing errors under process variation have no
+//!   application-level accuracy impact (`examples/variation_study`,
+//!   integration tests);
+//! * §III-B — choosing n_max = 8 (vs the conservative 10) does not change
+//!   DNN accuracy (the n_max ablation bench).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::quant::TernarySystem;
+use crate::tile::{TileConfig, TimTile, VmmMode};
+use crate::tpc::{Trit, TritMatrix};
+
+/// One VMM layer: ternary weights + PCU scale register value.
+pub struct TernaryLayer {
+    pub weights: TritMatrix,
+    pub scale: f32,
+}
+
+/// The trained TiMNet parameters (mirrors `python/compile/train.py`).
+pub struct TimNetWeights {
+    pub conv1: TernaryLayer,
+    pub conv2: TernaryLayer,
+    pub fc1: TernaryLayer,
+    pub fc2: TernaryLayer,
+    /// Activation clips a0..a3 (input, post-conv1, post-conv2, post-fc1).
+    pub clips: [f32; 4],
+}
+
+impl TimNetWeights {
+    /// Load the flat binary written by `aot.write_weights_bin`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("{} — run `make artifacts`", path.display()))?;
+        let mut layer = || -> Result<TernaryLayer> {
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4)?;
+            let rows = u32::from_le_bytes(b4) as usize;
+            f.read_exact(&mut b4)?;
+            let cols = u32::from_le_bytes(b4) as usize;
+            let mut data = vec![0u8; rows * cols];
+            f.read_exact(&mut data)?;
+            let trits: Vec<Trit> = data.iter().map(|&b| b as i8).collect();
+            f.read_exact(&mut b4)?;
+            let scale = f32::from_le_bytes(b4);
+            ensure!(scale > 0.0, "non-positive scale");
+            Ok(TernaryLayer { weights: TritMatrix::from_vec(rows, cols, trits), scale })
+        };
+        let conv1 = layer()?;
+        let conv2 = layer()?;
+        let fc1 = layer()?;
+        let fc2 = layer()?;
+        let mut clips = [0f32; 4];
+        for c in clips.iter_mut() {
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4)?;
+            *c = f32::from_le_bytes(b4);
+        }
+        Ok(Self { conv1, conv2, fc1, fc2, clips })
+    }
+}
+
+/// A tile group executing one layer's weight matrix, splitting rows
+/// across tiles when the matrix is taller than one tile and reducing the
+/// partial sums in the (digital) RU.
+struct LayerEngine {
+    tiles: Vec<TimTile>,
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    rows_per_tile: usize,
+}
+
+impl LayerEngine {
+    fn new(layer: &TernaryLayer, cfg: TileConfig) -> Self {
+        let rows = layer.weights.rows;
+        let cols = layer.weights.cols;
+        assert!(cols <= cfg.n, "column splitting not needed for TiMNet");
+        let rows_per_tile = cfg.rows();
+        let n_tiles = rows.div_ceil(rows_per_tile);
+        let mut tiles = Vec::with_capacity(n_tiles);
+        for t in 0..n_tiles {
+            let lo = t * rows_per_tile;
+            let hi = (lo + rows_per_tile).min(rows);
+            let mut slice = TritMatrix::zeros(hi - lo, cols);
+            for r in lo..hi {
+                for c in 0..cols {
+                    slice.set(r - lo, c, layer.weights.get(r, c));
+                }
+            }
+            let mut tile = TimTile::new(cfg);
+            tile.load_weights(&slice);
+            tiles.push(tile);
+        }
+        Self { tiles, rows, cols, scale: layer.scale, rows_per_tile }
+    }
+
+    /// 2-bit bit-serial VMM across the tile group + RU reduction; output
+    /// is the dequantized pre-activation (PCU scale applied).
+    fn forward_2bit(&mut self, codes: &[u8], act_clip: f32, mode: &mut VmmMode) -> Vec<f32> {
+        assert_eq!(codes.len(), self.rows);
+        let mut acc = vec![0f32; self.cols];
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let lo = t * self.rows_per_tile;
+            let hi = (lo + self.rows_per_tile).min(self.rows);
+            let chunk = &codes[lo..hi];
+            let out = tile.vmm_2bit(chunk, TernarySystem::Unweighted, mode);
+            // RU: digital cross-tile partial-sum accumulation.
+            for (a, o) in acc.iter_mut().zip(&out) {
+                *a += o;
+            }
+        }
+        // PCU scaling: codes carry clip/3 per unit, weights carry `scale`.
+        let k = self.scale * act_clip / 3.0;
+        acc.iter().map(|&v| v * k).collect()
+    }
+}
+
+/// SFU ops (functional).
+pub mod sfu {
+    /// Elementwise ReLU.
+    pub fn relu(xs: &mut [f32]) {
+        for x in xs {
+            *x = x.max(0.0);
+        }
+    }
+
+    /// 2-bit unsigned quantization (QU): f32 → codes {0..3} at `clip`.
+    pub fn quantize_2bit(xs: &[f32], clip: f32) -> Vec<u8> {
+        xs.iter()
+            .map(|&x| {
+                let t = (x.clamp(0.0, clip) / clip * 3.0).round_ties_even();
+                t.clamp(0.0, 3.0) as u8
+            })
+            .collect()
+    }
+
+    /// 2×2 max-pool over (h, w, c) feature maps of 2-bit codes.
+    pub fn maxpool2_codes(x: &[u8], h: usize, w: usize, c: usize) -> Vec<u8> {
+        assert_eq!(x.len(), h * w * c);
+        let (ho, wo) = (h / 2, w / 2);
+        let mut out = vec![0u8; ho * wo * c];
+        for i in 0..ho {
+            for j in 0..wo {
+                for ch in 0..c {
+                    let m = [(2 * i, 2 * j), (2 * i, 2 * j + 1), (2 * i + 1, 2 * j), (2 * i + 1, 2 * j + 1)]
+                        .iter()
+                        .map(|&(a, b)| x[(a * w + b) * c + ch])
+                        .max()
+                        .unwrap();
+                    out[(i * wo + j) * c + ch] = m;
+                }
+            }
+        }
+        out
+    }
+
+    /// im2col over 2-bit code maps, SAME zero padding, 3×3 kernels; patch
+    /// channel order (di, dj, c) matching the python lowering.
+    pub fn im2col3x3_codes(x: &[u8], h: usize, w: usize, c: usize) -> Vec<Vec<u8>> {
+        assert_eq!(x.len(), h * w * c);
+        let mut patches = Vec::with_capacity(h * w);
+        for i in 0..h {
+            for j in 0..w {
+                let mut p = Vec::with_capacity(9 * c);
+                for di in 0..3usize {
+                    for dj in 0..3usize {
+                        let (ii, jj) = (i + di, j + dj);
+                        for ch in 0..c {
+                            if (1..=h).contains(&ii) && (1..=w).contains(&jj) {
+                                p.push(x[((ii - 1) * w + (jj - 1)) * c + ch]);
+                            } else {
+                                p.push(0);
+                            }
+                        }
+                    }
+                }
+                patches.push(p);
+            }
+        }
+        patches
+    }
+}
+
+/// The functional accelerator running TiMNet.
+pub struct TimNetAccelerator {
+    conv1: LayerEngine,
+    conv2: LayerEngine,
+    fc1: LayerEngine,
+    fc2: LayerEngine,
+    clips: [f32; 4],
+}
+
+impl TimNetAccelerator {
+    pub fn new(weights: &TimNetWeights, cfg: TileConfig) -> Self {
+        Self {
+            conv1: LayerEngine::new(&weights.conv1, cfg),
+            conv2: LayerEngine::new(&weights.conv2, cfg),
+            fc1: LayerEngine::new(&weights.fc1, cfg),
+            fc2: LayerEngine::new(&weights.fc2, cfg),
+            clips: weights.clips,
+        }
+    }
+
+    /// Forward one 16×16×1 image (f32 in [0,1]) → 10 logits.
+    pub fn forward(&mut self, image: &[f32], mode: &mut VmmMode) -> Vec<f32> {
+        assert_eq!(image.len(), 256);
+        let [a0, a1, a2, a3] = self.clips;
+
+        // conv1: 16×16×1 → 16×16×16, ReLU, pool → 8×8×16, quant.
+        let codes = sfu::quantize_2bit(image, a0);
+        let mut fm1 = Vec::with_capacity(256 * 16);
+        for patch in sfu::im2col3x3_codes(&codes, 16, 16, 1) {
+            fm1.extend(self.conv1.forward_2bit(&patch, a0, mode));
+        }
+        sfu::relu(&mut fm1);
+        let codes1 = sfu::quantize_2bit(&fm1, a1);
+        let pooled1 = sfu::maxpool2_codes(&codes1, 16, 16, 16);
+
+        // conv2: 8×8×16 → 8×8×32, ReLU, pool → 4×4×32, quant.
+        let mut fm2 = Vec::with_capacity(64 * 32);
+        for patch in sfu::im2col3x3_codes(&pooled1, 8, 8, 16) {
+            fm2.extend(self.conv2.forward_2bit(&patch, a1, mode));
+        }
+        sfu::relu(&mut fm2);
+        let codes2 = sfu::quantize_2bit(&fm2, a2);
+        let pooled2 = sfu::maxpool2_codes(&codes2, 8, 8, 32);
+
+        // fc1 → ReLU → quant → fc2.
+        let mut h = self.fc1.forward_2bit(&pooled2, a2, mode);
+        sfu::relu(&mut h);
+        let hc = sfu::quantize_2bit(&h, a3);
+        self.fc2.forward_2bit(&hc, a3, mode)
+    }
+
+    /// Classify a batch; returns predictions.
+    pub fn classify(&mut self, images: &[Vec<f32>], mode: &mut VmmMode) -> Vec<usize> {
+        images
+            .iter()
+            .map(|img| {
+                let logits = self.forward(img, mode);
+                logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect()
+    }
+}
+
+/// Read the eval set exported by aot.py.
+pub fn read_eval_set(path: &Path) -> Result<(Vec<Vec<f32>>, Vec<u32>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("{} — run `make artifacts`", path.display()))?;
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    f.read_exact(&mut b4)?;
+    let pixels = u32::from_le_bytes(b4) as usize;
+    let mut raw = vec![0u8; n * pixels * 4];
+    f.read_exact(&mut raw)?;
+    let images = (0..n)
+        .map(|i| {
+            raw[i * pixels * 4..(i + 1) * pixels * 4]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()
+        })
+        .collect();
+    let mut lraw = vec![0u8; n * 4];
+    f.read_exact(&mut lraw)?;
+    let labels =
+        lraw.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect();
+    Ok((images, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_codes() {
+        let q = sfu::quantize_2bit(&[0.0, 0.6, 3.0, -1.0, 9.0], 3.0);
+        assert_eq!(q, vec![0, 1, 3, 0, 3]);
+    }
+
+    #[test]
+    fn maxpool_codes() {
+        // 4×4×1 map 0..15 → 2×2 maxima.
+        let x: Vec<u8> = (0..16).map(|v| (v % 4) as u8).collect();
+        let p = sfu::maxpool2_codes(&x, 4, 4, 1);
+        assert_eq!(p.len(), 4);
+        assert!(p.iter().all(|&v| v == 1 || v == 3));
+    }
+
+    #[test]
+    fn im2col_patch_layout() {
+        // 2×2×1 map, SAME padding: center patches contain the map values
+        // at the right offsets and zeros at the borders.
+        let x = vec![1u8, 2, 3, 4];
+        let patches = sfu::im2col3x3_codes(&x, 2, 2, 1);
+        assert_eq!(patches.len(), 4);
+        // patch at (0,0): the (di=1,dj=1) slot (index 4) is x[0,0] = 1.
+        assert_eq!(patches[0][4], 1);
+        assert_eq!(patches[0][0], 0); // top-left padding
+        // patch at (1,1): center is x[1,1] = 4, (di=0,dj=0) slot is x[0,0].
+        assert_eq!(patches[3][4], 4);
+        assert_eq!(patches[3][0], 1);
+    }
+
+    #[test]
+    fn relu_in_place() {
+        let mut xs = vec![-1.0, 0.5];
+        sfu::relu(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.5]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Accelerator-level configuration (paper §III-D, Fig 8, Table II).
+//!
+//! An accelerator is a bank of compute tiles (TiM or near-memory SRAM)
+//! plus the shared machinery: activation/psum buffers, the global Reduce
+//! Unit, the Special Function Unit, instruction memory and scheduler, and
+//! an HBM2 main-memory interface. Three standard instances exist:
+//!
+//! * [`ArchConfig::tim_dnn()`] — the evaluated 32-tile TiM-DNN,
+//! * [`ArchConfig::baseline_iso_capacity()`] — 32 near-memory tiles,
+//! * [`ArchConfig::baseline_iso_area()`] — 60 near-memory tiles.
+
+pub mod functional;
+
+use crate::baseline::BaselineKind;
+use crate::energy::constants::*;
+use crate::tile::TileConfig;
+
+/// The compute-tile technology of an accelerator instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileKind {
+    /// TiM tiles: block-parallel in-memory VMM, `accesses` per block VMM
+    /// determined by encoding/precision.
+    Tim,
+    /// Near-memory SRAM tiles: row-by-row reads + digital NMC. The NMC
+    /// datapath multiplies multi-bit activations directly, so activation
+    /// precision does not add passes (a deliberately strong baseline).
+    NearMem,
+}
+
+/// Full accelerator configuration.
+#[derive(Clone, Debug)]
+pub struct ArchConfig {
+    pub name: String,
+    pub kind: TileKind,
+    pub tiles: usize,
+    pub tile: TileConfig,
+    /// Activation buffer capacity (bytes).
+    pub act_buf: usize,
+    /// Psum buffer capacity (bytes).
+    pub psum_buf: usize,
+    /// Main memory bandwidth (bytes/s).
+    pub dram_bw: f64,
+}
+
+impl ArchConfig {
+    /// The paper's 32-tile TiM-DNN instance (Table II).
+    pub fn tim_dnn() -> Self {
+        Self {
+            name: "TiM-DNN (32 TiM tiles)".into(),
+            kind: TileKind::Tim,
+            tiles: ACCEL_TILES,
+            tile: TileConfig::paper(),
+            act_buf: ACT_BUF_BYTES,
+            psum_buf: PSUM_BUF_BYTES,
+            dram_bw: DRAM_BW_BYTES_PER_S,
+        }
+    }
+
+    /// TiM-DNN built from TiM-8 tiles (Fig 14 ablation).
+    pub fn tim_dnn_8() -> Self {
+        Self { name: "TiM-DNN (TiM-8 tiles)".into(), tile: TileConfig::tim8(), ..Self::tim_dnn() }
+    }
+
+    /// Near-memory baseline with the same 2 M-word weight capacity.
+    pub fn baseline_iso_capacity() -> Self {
+        Self {
+            name: "Near-mem baseline (iso-capacity, 32 tiles)".into(),
+            kind: TileKind::NearMem,
+            tiles: BaselineKind::IsoCapacity.tiles(),
+            ..Self::tim_dnn()
+        }
+    }
+
+    /// Near-memory baseline with the same die area (60 tiles).
+    pub fn baseline_iso_area() -> Self {
+        Self {
+            name: "Near-mem baseline (iso-area, 60 tiles)".into(),
+            kind: TileKind::NearMem,
+            tiles: BaselineKind::IsoArea.tiles(),
+            ..Self::tim_dnn()
+        }
+    }
+
+    /// Total ternary-word weight capacity.
+    pub fn capacity_words(&self) -> usize {
+        self.tiles * self.tile.capacity_words()
+    }
+
+    /// Total block slots (a block = L rows × N cols of weights).
+    pub fn capacity_blocks(&self) -> usize {
+        self.tiles * self.tile.k
+    }
+
+    /// Time for one block VMM on this tile technology: one array access
+    /// for TiM, L sequential row reads for the near-memory baseline.
+    pub fn block_vmm_time(&self) -> f64 {
+        match self.kind {
+            TileKind::Tim => T_VMM_S,
+            TileKind::NearMem => self.tile.l as f64 * T_SRAM_READ_S,
+        }
+    }
+
+    /// Does activation precision multiply accesses on this technology?
+    /// (TiM is bit-serial; the digital NMC baseline is not.)
+    pub fn bit_serial(&self) -> bool {
+        self.kind == TileKind::Tim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tim_capacity_is_2m_words() {
+        assert_eq!(ArchConfig::tim_dnn().capacity_words(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn iso_capacity_matches_tim_capacity() {
+        assert_eq!(
+            ArchConfig::baseline_iso_capacity().capacity_words(),
+            ArchConfig::tim_dnn().capacity_words()
+        );
+    }
+
+    #[test]
+    fn iso_area_has_more_tiles_and_capacity() {
+        let iso = ArchConfig::baseline_iso_area();
+        assert_eq!(iso.tiles, 60);
+        assert!(iso.capacity_words() > ArchConfig::tim_dnn().capacity_words());
+    }
+
+    #[test]
+    fn block_vmm_ratio_is_fig14() {
+        let tim = ArchConfig::tim_dnn();
+        let base = ArchConfig::baseline_iso_capacity();
+        let ratio = base.block_vmm_time() / tim.block_vmm_time();
+        assert!((ratio - 11.8).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn tim8_needs_two_accesses_per_16_rows() {
+        let t8 = ArchConfig::tim_dnn_8();
+        assert_eq!(t8.tile.l, 8);
+        // Same capacity, half the rows per access.
+        assert_eq!(t8.capacity_words(), ArchConfig::tim_dnn().capacity_words());
+    }
+}

@@ -1,0 +1,14 @@
+//! Baselines (paper §IV "Baseline", Fig 11, Tables IV/V).
+//!
+//! * [`NearMemTile`] — the well-optimized near-memory accelerator tile the
+//!   paper compares against: a 256×512 6T SRAM array (two cells per
+//!   ternary word) read row-by-row into a near-memory compute (NMC) unit.
+//! * [`prior`] — published numbers for the external comparison points
+//!   (V100, BRein, TNN, Neural Cache, and the array-level designs of
+//!   Table V). These are literature constants, not simulations.
+
+pub mod prior;
+
+mod nearmem;
+
+pub use nearmem::{BaselineKind, NearMemTile};

@@ -1,0 +1,138 @@
+//! Dynamic batching policy: wait up to `max_wait` to fill a batch of
+//! `max_batch`, but never hold a lone request longer than the deadline.
+//! (The classic serving tradeoff: the TiM array amortizes weight loads
+//! over the batch for FC-heavy layers, so larger batches raise
+//! throughput; the deadline bounds tail latency.)
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::{Msg, Request};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+pub struct Batcher {
+    policy: BatchPolicy,
+    /// Set once a Shutdown marker (or disconnect) has been seen.
+    closed: bool,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Self { policy, closed: false }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is closed
+    /// (or a `Shutdown` marker arrives) and everything queued before that
+    /// point has been handed out.
+    pub(crate) fn next_batch(&mut self, rx: &Receiver<Msg>) -> Option<Vec<Request>> {
+        if self.closed {
+            return None;
+        }
+        // Block for the first request.
+        let first = loop {
+            match rx.recv() {
+                Ok(Msg::Req(r)) => break r,
+                Ok(Msg::Shutdown) | Err(_) => {
+                    self.closed = true;
+                    return None;
+                }
+            }
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => batch.push(r),
+                Ok(Msg::Shutdown) => {
+                    // Hand out what we have; next call returns None.
+                    self.closed = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorF32;
+    use std::sync::mpsc;
+
+    fn req(id: u64, reply: mpsc::Sender<super::super::Response>) -> Msg {
+        Msg::Req(Request {
+            id,
+            input: TensorF32::new(vec![1], vec![0.0]),
+            submitted: Instant::now(),
+            reply,
+        })
+    }
+
+    #[test]
+    fn fills_batch_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        let (reply, _keep) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(req(i, reply.clone())).unwrap();
+        }
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(50) });
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch2 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch2.len(), 2); // drains the rest after timeout
+    }
+
+    #[test]
+    fn lone_request_released_at_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let (reply, _keep) = mpsc::channel();
+        tx.send(req(1, reply)).unwrap();
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        drop(tx);
+        let mut b = Batcher::new(BatchPolicy::default());
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn shutdown_marker_flushes_then_closes() {
+        let (tx, rx) = mpsc::channel();
+        let (reply, _keep) = mpsc::channel();
+        tx.send(req(1, reply.clone())).unwrap();
+        tx.send(req(2, reply)).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) });
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.next_batch(&rx).is_none());
+    }
+}

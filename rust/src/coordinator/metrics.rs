@@ -1,0 +1,145 @@
+//! Serving metrics: host latency percentiles, batch sizes, throughput,
+//! and simulated-hardware latency/energy aggregates.
+
+use std::time::{Duration, Instant};
+
+use super::Response;
+use crate::util::stats::percentile;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    e2e_s: Vec<f64>,
+    queued_s: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    host_exec_s: Vec<f64>,
+    sim_latency_s: Vec<f64>,
+    sim_energy_j: f64,
+    completed: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            e2e_s: Vec::new(),
+            queued_s: Vec::new(),
+            batch_sizes: Vec::new(),
+            host_exec_s: Vec::new(),
+            sim_latency_s: Vec::new(),
+            sim_energy_j: 0.0,
+            completed: 0,
+        }
+    }
+
+    pub fn record(&mut self, resp: &Response, batch: usize, host_exec: Duration) {
+        self.completed += 1;
+        self.e2e_s.push(resp.e2e.as_secs_f64());
+        self.queued_s.push(resp.queued.as_secs_f64());
+        self.batch_sizes.push(batch);
+        self.host_exec_s.push(host_exec.as_secs_f64());
+        self.sim_latency_s.push(resp.sim_latency_s);
+        self.sim_energy_j += resp.sim_energy_j;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let pct = |xs: &Vec<f64>, q| if xs.is_empty() { 0.0 } else { percentile(xs, q) };
+        MetricsSnapshot {
+            completed: self.completed,
+            wall_s: self.started.elapsed().as_secs_f64(),
+            host_p50_s: pct(&self.e2e_s, 50.0),
+            host_p95_s: pct(&self.e2e_s, 95.0),
+            host_p99_s: pct(&self.e2e_s, 99.0),
+            queue_p95_s: pct(&self.queued_s, 95.0),
+            mean_batch: if self.batch_sizes.is_empty() {
+                0.0
+            } else {
+                self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+            },
+            sim_latency_p50_s: pct(&self.sim_latency_s, 50.0),
+            sim_energy_total_j: self.sim_energy_j,
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable view for reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub wall_s: f64,
+    pub host_p50_s: f64,
+    pub host_p95_s: f64,
+    pub host_p99_s: f64,
+    pub queue_p95_s: f64,
+    pub mean_batch: f64,
+    pub sim_latency_p50_s: f64,
+    pub sim_energy_total_j: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self, title: &str) {
+        println!("== serving metrics: {title} ==");
+        println!("  completed            {}", self.completed);
+        println!("  host throughput      {:.1} inf/s", self.throughput());
+        println!(
+            "  host latency p50/p95/p99  {:.3}/{:.3}/{:.3} ms",
+            self.host_p50_s * 1e3,
+            self.host_p95_s * 1e3,
+            self.host_p99_s * 1e3
+        );
+        println!("  queue p95            {:.3} ms", self.queue_p95_s * 1e3);
+        println!("  mean batch           {:.2}", self.mean_batch);
+        println!("  sim hw latency p50   {:.3} us", self.sim_latency_p50_s * 1e6);
+        println!(
+            "  sim hw energy        {:.3} uJ total ({:.3} uJ/inf)",
+            self.sim_energy_total_j * 1e6,
+            if self.completed > 0 {
+                self.sim_energy_total_j * 1e6 / self.completed as f64
+            } else {
+                0.0
+            }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorF32;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let mut m = Metrics::new();
+        for i in 0..10 {
+            let resp = Response {
+                id: i,
+                output: TensorF32::new(vec![1], vec![0.0]),
+                queued: Duration::from_micros(10),
+                e2e: Duration::from_micros(100 + i * 10),
+                sim_latency_s: 1e-6,
+                sim_energy_j: 2e-6,
+            };
+            m.record(&resp, 2, Duration::from_micros(50));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10);
+        assert!(s.host_p95_s >= s.host_p50_s);
+        assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        assert!((s.sim_energy_total_j - 20e-6).abs() < 1e-12);
+        assert!(s.throughput() > 0.0);
+    }
+}

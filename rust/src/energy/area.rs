@@ -1,0 +1,162 @@
+//! Area model (Fig 10, Fig 15, Table IV/V).
+//!
+//! Composition: TPC = 720 F² (Fig 10 layout), 6T SRAM = 146 F²; periphery
+//! fractions back-solved so the tile and accelerator totals match Table V
+//! (0.058 mm²/tile ⇒ 61.39 TOPS/mm²) and §IV (1.96 mm² total), and the
+//! baseline tile is 0.52× the TiM tile (§IV).
+
+use super::constants::*;
+
+/// mm² of one feature-square at the evaluated node.
+fn f2_mm2() -> f64 {
+    let f_mm = FEATURE_NM * 1e-6;
+    f_mm * f_mm
+}
+
+/// Core TPC array of one TiM tile (256×256 cells).
+pub fn tim_array_mm2() -> f64 {
+    (TILE_L * TILE_K * TILE_N) as f64 * TPC_AREA_F2 * f2_mm2()
+}
+
+/// Tile periphery (PCUs + decoders + RWDs + S/H + column mux + scale-factor
+/// registers), back-solved: tile total 0.058 mm² − array.
+pub fn tim_tile_periphery_mm2() -> f64 {
+    tim_tile_mm2() - tim_array_mm2()
+}
+
+/// One TiM tile. Back-solved from Table V: 3.56 TOPS / 61.39 TOPS/mm².
+pub fn tim_tile_mm2() -> f64 {
+    0.058
+}
+
+/// One near-memory baseline tile (§IV: 0.52× the TiM tile).
+pub fn baseline_tile_mm2() -> f64 {
+    BASELINE_TILE_AREA_RATIO * tim_tile_mm2()
+}
+
+/// 6T-SRAM core array of a baseline tile (256×512 cells).
+pub fn baseline_array_mm2() -> f64 {
+    (256 * 512) as f64 * SRAM6T_AREA_F2 * f2_mm2()
+}
+
+/// Global (non-tile) area: buffers, RU, SFU, scheduler, I-mem.
+pub fn global_mm2() -> f64 {
+    ACCEL_AREA_MM2 - ACCEL_TILES as f64 * tim_tile_mm2()
+}
+
+/// A named area breakdown (Fig 15 panels).
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub title: &'static str,
+    pub parts: Vec<(&'static str, f64)>,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.parts.iter().map(|(_, a)| a).sum()
+    }
+
+    /// (name, mm², percent) rows.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let t = self.total();
+        self.parts.iter().map(|&(n, a)| (n, a, 100.0 * a / t)).collect()
+    }
+}
+
+/// Fig 15 left panel: the accelerator.
+pub fn accelerator_breakdown() -> Breakdown {
+    let tiles = ACCEL_TILES as f64 * tim_tile_mm2();
+    let global = global_mm2();
+    // Split the global area across its components with synthesis-class
+    // proportions (buffers dominate, then SFU, RU, scheduler+imem).
+    Breakdown {
+        title: "TiM-DNN accelerator",
+        parts: vec![
+            ("TiM tiles", tiles),
+            ("Buffers (Act+Psum)", 0.45 * global),
+            ("SFU", 0.30 * global),
+            ("RU", 0.15 * global),
+            ("Scheduler + I-Mem", 0.10 * global),
+        ],
+    }
+}
+
+/// Fig 15 middle panel: one TiM tile.
+pub fn tim_tile_breakdown() -> Breakdown {
+    let periph = tim_tile_periphery_mm2();
+    Breakdown {
+        title: "TiM tile",
+        parts: vec![
+            ("TPC array", tim_array_mm2()),
+            ("PCUs (ADCs + arith)", 0.62 * periph),
+            ("Row/block decoders + RWD", 0.18 * periph),
+            ("S/H + column mux", 0.12 * periph),
+            ("Write drivers + scale regs", 0.08 * periph),
+        ],
+    }
+}
+
+/// Fig 15 right panel: one baseline near-memory tile.
+pub fn baseline_tile_breakdown() -> Breakdown {
+    let periph = baseline_tile_mm2() - baseline_array_mm2();
+    Breakdown {
+        title: "Near-memory baseline tile",
+        parts: vec![
+            ("6T SRAM array", baseline_array_mm2()),
+            ("NMC units", 0.55 * periph),
+            ("Sense amps + drivers", 0.30 * periph),
+            ("Decoders", 0.15 * periph),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accelerator_area_matches_paper() {
+        let b = accelerator_breakdown();
+        assert!((b.total() - ACCEL_AREA_MM2).abs() < 1e-9, "total={}", b.total());
+    }
+
+    #[test]
+    fn tiles_dominate_accelerator_area() {
+        // Fig 15: "The major area consumer in TiM-DNN is the TiM-tile."
+        let b = accelerator_breakdown();
+        let (_, tiles, pct) = b.rows()[0];
+        assert!(tiles > 1.5 && pct > 80.0);
+    }
+
+    #[test]
+    fn array_dominates_tile_area() {
+        // Fig 15: "area mostly goes into the core array".
+        let b = tim_tile_breakdown();
+        let (_, _, pct) = b.rows()[0];
+        assert!(pct > 70.0, "array pct={pct}");
+    }
+
+    #[test]
+    fn tile_capacity_ratio_matches_paper() {
+        // §V-D: "TiM tiles are 1.89x larger than the baseline tile at
+        // iso-capacity" (1/0.52 ≈ 1.92; paper rounds).
+        let ratio = tim_tile_mm2() / baseline_tile_mm2();
+        assert!((ratio - 1.0 / 0.52).abs() < 1e-9);
+        assert!(ratio > 1.85 && ratio < 1.95);
+    }
+
+    #[test]
+    fn baseline_periphery_positive() {
+        assert!(baseline_tile_mm2() > baseline_array_mm2());
+        assert!(tim_tile_mm2() > tim_array_mm2());
+    }
+
+    #[test]
+    fn iso_area_tile_count_is_60() {
+        // §IV: iso-area baseline uses 60 tiles in the same die area.
+        let avail = ACCEL_TILES as f64 * tim_tile_mm2();
+        let count = (avail / baseline_tile_mm2()).floor() as usize;
+        assert!((59..=62).contains(&count), "count={count}");
+        assert_eq!(BASELINE_ISO_AREA_TILES, 60);
+    }
+}

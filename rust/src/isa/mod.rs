@@ -1,0 +1,184 @@
+//! Accelerator ISA (paper §III-D: "TiM-DNN has a small instruction memory
+//! and a scheduler that reads instructions and orchestrates operations
+//! inside a bank").
+//!
+//! The mapper compiles a network into a [`Program`] of these instructions;
+//! the architectural simulator executes them against the timing/energy
+//! models. Instructions are deliberately macro-granular (one `Vmm` covers
+//! a layer's worth of block accesses) — the same granularity the paper's
+//! trace-driven simulator uses.
+
+use crate::model::VmmShape;
+
+/// Elementwise SFU work attached to a layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SfuWork {
+    pub relu: u64,
+    pub vpe: u64,
+    pub spe: u64,
+    pub quant: u64,
+}
+
+impl SfuWork {
+    pub fn total(&self) -> u64 {
+        self.relu + self.vpe + self.spe + self.quant
+    }
+}
+
+/// One macro-instruction.
+#[derive(Clone, Debug)]
+pub enum Instr {
+    /// Stream a layer's ternary weights from DRAM and write them row-by-row
+    /// into the tiles (overlapped: time = max(write, DRAM)).
+    LoadWeights {
+        layer: String,
+        /// Total ternary words fetched from DRAM.
+        words: u64,
+        /// Row writes on the critical path (per-tile maximum; tiles write
+        /// in parallel, each has its own write driver).
+        rows_critical: u64,
+    },
+    /// Stream input activations for a layer (DRAM or buffer).
+    LoadActs { layer: String, bytes: u64, from_dram: bool },
+    /// A layer's worth of in-memory VMM accesses.
+    Vmm {
+        layer: String,
+        /// Total block accesses (all tiles, all positions, all passes).
+        accesses: u64,
+        /// Tiles operating in parallel.
+        tiles_used: usize,
+        /// Expected output sparsity (drives BL energy).
+        output_sparsity: f64,
+        /// Requested activation precision in bit-serial passes (TiM bakes
+        /// this into `accesses`; the digital NMC baseline pays it in MAC
+        /// energy instead).
+        act_passes: u32,
+        /// The layer's VMM shape (for reporting).
+        shape: VmmShape,
+    },
+    /// Cross-tile partial-sum reduction in the global RU.
+    Reduce { layer: String, adds: u64 },
+    /// SFU work (ReLU/pool/special-functions/quantization).
+    Sfu { layer: String, work: SfuWork },
+    /// Write output activations back (buffer or DRAM).
+    StoreActs { layer: String, bytes: u64, to_dram: bool },
+    /// Layer boundary (used for per-layer reporting).
+    Barrier { layer: String },
+}
+
+impl Instr {
+    pub fn layer(&self) -> &str {
+        match self {
+            Instr::LoadWeights { layer, .. }
+            | Instr::LoadActs { layer, .. }
+            | Instr::Vmm { layer, .. }
+            | Instr::Reduce { layer, .. }
+            | Instr::Sfu { layer, .. }
+            | Instr::StoreActs { layer, .. }
+            | Instr::Barrier { layer } => layer,
+        }
+    }
+
+    /// Is this instruction part of the MAC-Ops phase (Fig 12's split)?
+    pub fn is_mac_op(&self) -> bool {
+        matches!(self, Instr::Vmm { .. })
+    }
+}
+
+/// A compiled program plus bookkeeping the simulator reports.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub network: String,
+    pub instrs: Vec<Instr>,
+    /// True when the network was spatially mapped (weights pre-loaded once,
+    /// excluded from the steady-state inference loop).
+    pub spatial: bool,
+}
+
+impl Program {
+    pub fn new(network: &str, spatial: bool) -> Self {
+        Self { network: network.to_string(), instrs: Vec::new(), spatial }
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.instrs.push(i);
+    }
+
+    pub fn total_vmm_accesses(&self) -> u64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Vmm { accesses, .. } => *accesses,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn total_weight_words(&self) -> u64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::LoadWeights { words, .. } => *words,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn layers(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        for i in &self.instrs {
+            if let Instr::Barrier { layer } = i {
+                out.push(layer.as_str());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> VmmShape {
+        VmmShape { rows: 16, cols: 256, positions: 1, unique_inputs: 16 }
+    }
+
+    #[test]
+    fn program_accumulates() {
+        let mut p = Program::new("net", false);
+        p.push(Instr::LoadWeights { layer: "l1".into(), words: 4096, rows_critical: 16 });
+        p.push(Instr::Vmm {
+            layer: "l1".into(),
+            accesses: 10,
+            tiles_used: 2,
+            output_sparsity: 0.5,
+            act_passes: 1,
+            shape: shape(),
+        });
+        p.push(Instr::Barrier { layer: "l1".into() });
+        assert_eq!(p.total_vmm_accesses(), 10);
+        assert_eq!(p.total_weight_words(), 4096);
+        assert_eq!(p.layers(), vec!["l1"]);
+    }
+
+    #[test]
+    fn mac_op_classification() {
+        let v = Instr::Vmm {
+            layer: "x".into(),
+            accesses: 1,
+            tiles_used: 1,
+            output_sparsity: 0.0,
+            act_passes: 1,
+            shape: shape(),
+        };
+        assert!(v.is_mac_op());
+        assert!(!Instr::Barrier { layer: "x".into() }.is_mac_op());
+        assert_eq!(v.layer(), "x");
+    }
+
+    #[test]
+    fn sfu_work_total() {
+        let w = SfuWork { relu: 1, vpe: 2, spe: 3, quant: 4 };
+        assert_eq!(w.total(), 10);
+    }
+}

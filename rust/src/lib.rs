@@ -1,0 +1,40 @@
+//! # TiM-DNN — Ternary in-Memory accelerator for Deep Neural Networks
+//!
+//! Full-system reproduction of *TiM-DNN: Ternary in-Memory accelerator for
+//! Deep Neural Networks* (Jain, Gupta, Raghunathan, 2019).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** (build-time python): a Pallas kernel implementing the
+//!   in-memory ternary vector–matrix multiplication (VMM) with ADC
+//!   saturation, validated against a pure-jnp oracle.
+//! * **Layer 2** (build-time python): JAX models (ternary FC/conv/LSTM/GRU,
+//!   plus a small trained ternary CNN) that call the kernel and are lowered
+//!   AOT to HLO text artifacts.
+//! * **Layer 3** (this crate): the accelerator model itself — TPC bit-cell,
+//!   TiM tile, analog bitline/ADC models, the architectural simulator, the
+//!   near-memory baselines, the DNN mapper, the Monte-Carlo variation
+//!   engine — plus a PJRT runtime that loads the AOT artifacts and a
+//!   serving coordinator that batches requests over the simulated hardware.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index that
+//! maps every table/figure of the paper to a module and a bench target.
+
+pub mod analog;
+pub mod arch;
+pub mod baseline;
+pub mod coordinator;
+pub mod energy;
+pub mod isa;
+pub mod mapper;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod tile;
+pub mod tpc;
+pub mod util;
+pub mod variation;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

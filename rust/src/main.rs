@@ -1,0 +1,222 @@
+//! `timdnn` — CLI for the TiM-DNN reproduction.
+//!
+//! Subcommands:
+//!   tables                       print Tables II–V (paper-calibrated)
+//!   sim --benchmark <name>       simulate a benchmark on all three archs
+//!   sweep                        Fig 12/13 full-suite sweep
+//!   kernel                       Fig 14 kernel-level comparison
+//!   variation [--samples N]      Figs 17/18 Monte-Carlo study
+//!   serve [--requests N]         serve the e2e model via PJRT (needs
+//!                                `make artifacts`)
+//!   info                         architecture summary
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{BatchPolicy, PjrtExecutor, Server};
+use timdnn::energy::{self, constants::*};
+use timdnn::model;
+use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
+use timdnn::sim;
+use timdnn::util::cli::Args;
+use timdnn::util::prng::Rng;
+use timdnn::util::table::{sig, Table};
+use timdnn::variation::VariationStudy;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("tables") => tables(),
+        Some("sim") => sim_cmd(&args),
+        Some("sweep") => sweep(),
+        Some("kernel") => kernel(),
+        Some("variation") => variation(&args),
+        Some("trace") => trace_cmd(&args)?,
+        Some("serve") => serve(&args)?,
+        Some("info") | None => info(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            info();
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn info() {
+    println!("TiM-DNN reproduction — see DESIGN.md and EXPERIMENTS.md");
+    println!();
+    println!(
+        "32-tile instance: {:.1} TOPS peak, {:.0} TOPS/W, {:.1} TOPS/mm²",
+        energy::accelerator_peak_tops(ACCEL_TILES),
+        energy::peak_tops_per_watt(),
+        energy::peak_tops_per_mm2()
+    );
+    println!("subcommands: tables | sim | sweep | kernel | variation | trace | serve | info");
+}
+
+fn tables() {
+    let mut t2 = Table::new(
+        "Table II: TiM-DNN micro-architectural parameters",
+        &["Component", "Value"],
+    );
+    t2.row(&["No. of processing tiles", "32 TiM tiles"]);
+    t2.row(&["TiM tile", "256x256 TPCs, 32 PCUs, (M=32, N=256, L=K=16)"]);
+    t2.row(&["Buffer (Act + Psum)", "16 KB + 8 KB"]);
+    t2.row(&["I-Mem", "128 entries"]);
+    t2.row(&["Global Reduce Unit", "256 adders (12-bit)"]);
+    t2.row(&["SFU", "64 ReLU, 8 vPE x 4 lanes, 20 SPE, 32 QU"]);
+    t2.row(&["Main memory", "HBM2 (256 GB/s)"]);
+    t2.print();
+
+    let mut t4 = Table::new(
+        "Table IV: system-level comparison",
+        &["Design", "Precision", "Tech", "TOPS/W", "TOPS/mm2", "TOPS"],
+    );
+    for d in timdnn::baseline::prior::table4_designs() {
+        t4.row(&[
+            d.name.to_string(),
+            d.precision.to_string(),
+            format!("{}nm", d.technology_nm),
+            sig(d.tops_per_w, 3),
+            sig(d.tops_per_mm2, 3),
+            sig(d.tops, 3),
+        ]);
+    }
+    t4.row(&[
+        "TiM-DNN (this work)".to_string(),
+        "Ternary".to_string(),
+        "32nm".to_string(),
+        sig(energy::peak_tops_per_watt(), 3),
+        sig(energy::peak_tops_per_mm2(), 3),
+        sig(energy::accelerator_peak_tops(ACCEL_TILES), 3),
+    ]);
+    t4.print();
+}
+
+fn sim_cmd(args: &Args) {
+    let which = args.str_or("benchmark", "alexnet");
+    let bench = model::zoo()
+        .into_iter()
+        .find(|b| b.net.name.to_lowercase().contains(&which.to_lowercase()))
+        .unwrap_or_else(|| panic!("unknown benchmark '{which}'"));
+    let mut t = Table::new(
+        &format!("{} on three architectures", bench.net.name),
+        &["Architecture", "inf/s", "MAC ms", "non-MAC ms", "Energy/inf (uJ)"],
+    );
+    for arch in [
+        ArchConfig::tim_dnn(),
+        ArchConfig::baseline_iso_area(),
+        ArchConfig::baseline_iso_capacity(),
+    ] {
+        let r = sim::run(&bench.net, &arch);
+        t.row(&[
+            arch.name.clone(),
+            sig(r.inf_per_s, 4),
+            sig(r.mac_s * 1e3, 3),
+            sig(r.nonmac_s * 1e3, 3),
+            sig(r.energy.total() * 1e6, 3),
+        ]);
+    }
+    t.footnote(&format!("paper: {} inf/s on TiM-DNN", bench.paper_inf_per_s));
+    t.print();
+}
+
+fn sweep() {
+    let mut t = Table::new(
+        "Fig 12/13 sweep: TiM-DNN vs near-memory baselines",
+        &["Benchmark", "TiM inf/s", "spdup vs iso-cap", "spdup vs iso-area", "energy benefit"],
+    );
+    for bench in model::zoo() {
+        let tim = sim::run(&bench.net, &ArchConfig::tim_dnn());
+        let cap = sim::run(&bench.net, &ArchConfig::baseline_iso_capacity());
+        let area = sim::run(&bench.net, &ArchConfig::baseline_iso_area());
+        t.row(&[
+            bench.net.name.clone(),
+            sig(tim.inf_per_s, 4),
+            format!("{:.1}x", cap.total_s / tim.total_s),
+            format!("{:.1}x", area.total_s / tim.total_s),
+            format!("{:.1}x", area.energy.total() / tim.energy.total()),
+        ]);
+    }
+    t.footnote("paper: 5.1-7.7x iso-capacity, 3.2-4.2x iso-area, 3.9-4.7x energy");
+    t.print();
+}
+
+fn kernel() {
+    let base_t = energy::baseline_vmm_time();
+    println!("== Fig 14: 16x256 VMM kernel ==");
+    for (name, acc) in [("TiM-16", 1u32), ("TiM-8", 2)] {
+        let t = energy::tim_vmm_time(acc);
+        println!("{name}: speedup {:.1}x over baseline", base_t / t);
+    }
+    for s in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        println!(
+            "output sparsity {:.2}: energy benefit TiM-16 {:.1}x, TiM-8 {:.1}x",
+            s,
+            energy::baseline_vmm_energy() / energy::tim_vmm_energy(s, 1),
+            energy::baseline_vmm_energy() / energy::tim_vmm_energy(s, 2),
+        );
+    }
+}
+
+fn variation(args: &Args) {
+    let samples = args.usize_or("samples", 20_000);
+    let study = VariationStudy::paper();
+    let mut rng = Rng::seeded(args.u64_or("seed", 42));
+    let (p_se, p_n, p_e) = study.run_paper_study(samples, 400, &mut rng);
+    let mut t = Table::new("Fig 18: error probabilities", &["n", "P_SE(SE|n)", "P_n", "product"]);
+    for n in 0..p_se.len() {
+        t.row(&[n.to_string(), sig(p_se[n], 3), sig(p_n[n], 3), sig(p_se[n] * p_n[n], 3)]);
+    }
+    t.footnote(&format!("P_E = {:.2e} (paper: 1.5e-4)", p_e));
+    t.print();
+}
+
+/// Export a chrome://tracing JSON of one simulated inference.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    let which = args.str_or("benchmark", "alexnet");
+    let out = args.str_or("out", "/tmp/timdnn_trace.json");
+    let bench = model::zoo()
+        .into_iter()
+        .find(|b| b.net.name.to_lowercase().contains(&which.to_lowercase()))
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{which}'"))?;
+    let arch = ArchConfig::tim_dnn();
+    let prog = timdnn::mapper::map_network(&bench.net, &arch);
+    let events = sim::trace::trace(&prog, &arch);
+    let json = sim::trace::to_chrome_json(&events, &format!("{} on {}", bench.net.name, arch.name));
+    std::fs::write(&out, &json)?;
+    println!("wrote {} trace events to {out} (open in chrome://tracing or Perfetto)", events.len());
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let requests = args.usize_or("requests", 256);
+    let batch = args.usize_or("batch", 8);
+    let artifact = format!("tiny_cnn_b{batch}");
+    let hw = sim::run(&model::tiny_cnn(), &ArchConfig::tim_dnn());
+    let factory = move || -> anyhow::Result<PjrtExecutor> {
+        let mut rt = Runtime::cpu()?;
+        rt.load_dir(&artifacts_dir())?;
+        anyhow::ensure!(
+            rt.names().iter().any(|n| *n == artifact),
+            "artifact {artifact} missing (have {:?}) — run `make artifacts`",
+            rt.names()
+        );
+        Ok(PjrtExecutor::new(rt, &artifact, batch, vec![16, 16, 1]))
+    };
+    let server = Server::spawn(factory, BatchPolicy::default(), hw);
+    let client = server.client();
+    let mut rng = Rng::seeded(7);
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            let img: Vec<f32> = (0..256).map(|_| rng.next_f32()).collect();
+            client.submit(TensorF32::new(vec![16, 16, 1], img))
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv()?;
+    }
+    drop(client);
+    let snap = server.shutdown();
+    snap.report("tiny_cnn via PJRT on simulated TiM-DNN");
+    Ok(())
+}

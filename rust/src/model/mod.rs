@@ -1,0 +1,231 @@
+//! DNN graph IR + the paper's benchmark suite (Table III).
+//!
+//! The simulator consumes networks as a sequence of layers with exact
+//! shapes; the mapper turns each Conv/FC/recurrent layer into tiled
+//! ternary VMMs. The zoo defines the five benchmarks the paper evaluates
+//! — AlexNet, ResNet-34, Inception (GoogLeNet-v1), and PTB LSTM/GRU —
+//! plus the small in-repo "TiMNet" CNN used for end-to-end functional
+//! validation through the PJRT runtime.
+
+mod zoo;
+
+pub use zoo::{alexnet, gru_ptb, inception_v1, lstm_ptb, resnet34, tiny_cnn, zoo, Benchmark};
+
+/// Activation precision of a layer's inputs (Table III "[A,W]" column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActPrecision {
+    /// Signed ternary activations — one pass per VMM ([T,T] RNNs).
+    Ternary,
+    /// 2-bit unsigned activations — bit-serial, two passes ([2,T] CNNs).
+    TwoBit,
+}
+
+impl ActPrecision {
+    /// TiM accesses needed per block VMM due to activation precision.
+    pub fn passes(&self) -> u32 {
+        match self {
+            ActPrecision::Ternary => 1,
+            ActPrecision::TwoBit => 2,
+        }
+    }
+}
+
+/// One layer of a network, shapes chosen to be what the mapper needs.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// 2-D convolution lowered as im2col VMM: weight matrix is
+    /// (kh·kw·c_in) × c_out applied at h_out·w_out positions.
+    Conv2d {
+        name: String,
+        c_in: usize,
+        c_out: usize,
+        kh: usize,
+        kw: usize,
+        h_out: usize,
+        w_out: usize,
+    },
+    /// Fully-connected: (d_in × d_out) at one position.
+    Fc { name: String, d_in: usize, d_out: usize },
+    /// LSTM cell over a sequence: per step, 4 gate matrices
+    /// (d_in + hidden) × hidden, plus SFU tanh/sigmoid.
+    Lstm { name: String, d_in: usize, hidden: usize, seq: usize },
+    /// GRU cell over a sequence: 3 gate matrices.
+    Gru { name: String, d_in: usize, hidden: usize, seq: usize },
+    /// Max/avg pooling (SFU vPE work, no weights).
+    Pool { name: String, elems: usize },
+    /// Elementwise ReLU (SFU).
+    Relu { name: String, elems: usize },
+    /// Quantization of activations back to ternary/2-bit (SFU QU).
+    Quant { name: String, elems: usize },
+}
+
+impl Layer {
+    pub fn name(&self) -> &str {
+        match self {
+            Layer::Conv2d { name, .. }
+            | Layer::Fc { name, .. }
+            | Layer::Lstm { name, .. }
+            | Layer::Gru { name, .. }
+            | Layer::Pool { name, .. }
+            | Layer::Relu { name, .. }
+            | Layer::Quant { name, .. } => name,
+        }
+    }
+
+    /// Weight-matrix shape (rows, cols) per VMM site, and how many VMM
+    /// "positions" (input vectors) the layer evaluates per inference.
+    /// Recurrent layers report the fused gate matrix × seq positions.
+    pub fn vmm_shape(&self) -> Option<VmmShape> {
+        match *self {
+            Layer::Conv2d { c_in, c_out, kh, kw, h_out, w_out, .. } => Some(VmmShape {
+                rows: kh * kw * c_in,
+                cols: c_out,
+                positions: h_out * w_out,
+                unique_inputs: c_in * h_out * w_out,
+            }),
+            Layer::Fc { d_in, d_out, .. } => {
+                Some(VmmShape { rows: d_in, cols: d_out, positions: 1, unique_inputs: d_in })
+            }
+            Layer::Lstm { d_in, hidden, seq, .. } => Some(VmmShape {
+                rows: d_in + hidden,
+                cols: 4 * hidden,
+                positions: seq,
+                unique_inputs: (d_in + hidden) * seq,
+            }),
+            Layer::Gru { d_in, hidden, seq, .. } => Some(VmmShape {
+                rows: d_in + hidden,
+                cols: 3 * hidden,
+                positions: seq,
+                unique_inputs: (d_in + hidden) * seq,
+            }),
+            _ => None,
+        }
+    }
+
+    /// MAC count per inference.
+    pub fn macs(&self) -> u64 {
+        self.vmm_shape().map(|s| (s.rows * s.cols * s.positions) as u64).unwrap_or(0)
+    }
+
+    /// Ternary weight words.
+    pub fn weight_words(&self) -> u64 {
+        self.vmm_shape().map(|s| (s.rows * s.cols) as u64).unwrap_or(0)
+    }
+
+    /// Elementwise SFU work (outputs needing ReLU/pool/quant/special fns).
+    pub fn sfu_elems(&self) -> u64 {
+        match *self {
+            Layer::Pool { elems, .. } | Layer::Relu { elems, .. } | Layer::Quant { elems, .. } => {
+                elems as u64
+            }
+            // Gate nonlinearities + elementwise cell updates.
+            Layer::Lstm { hidden, seq, .. } => (seq * hidden * 4) as u64,
+            Layer::Gru { hidden, seq, .. } => (seq * hidden * 3) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Is this a recurrent layer (sequentially-dependent positions)?
+    pub fn is_recurrent(&self) -> bool {
+        matches!(self, Layer::Lstm { .. } | Layer::Gru { .. })
+    }
+
+    /// Special-function (tanh/sigmoid) element count — SPE work.
+    pub fn spe_elems(&self) -> u64 {
+        match *self {
+            Layer::Lstm { hidden, seq, .. } => (seq * hidden * 4) as u64,
+            Layer::Gru { hidden, seq, .. } => (seq * hidden * 3) as u64,
+            _ => 0,
+        }
+    }
+}
+
+/// Shape of the VMM work a layer generates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VmmShape {
+    pub rows: usize,
+    pub cols: usize,
+    pub positions: usize,
+    /// Unique input activations feeding the layer per inference. For
+    /// convolutions this is the input feature map (each element is read
+    /// once into the activation buffer and broadcast by the RWDs), NOT
+    /// rows × positions — im2col inflates that by kh·kw.
+    pub unique_inputs: usize,
+}
+
+/// A whole network plus its Table III metadata.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub act_precision: ActPrecision,
+    /// Is this a recurrent model (spatial mapping expected)?
+    pub recurrent: bool,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weight_words(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_words()).sum()
+    }
+
+    pub fn total_sfu_elems(&self) -> u64 {
+        self.layers.iter().map(|l| l.sfu_elems()).sum()
+    }
+
+    /// Does the network fit in the accelerator's weight capacity (drives
+    /// the spatial vs temporal mapping decision, Fig 9)?
+    pub fn fits(&self, capacity_words: usize) -> bool {
+        self.total_weight_words() <= capacity_words as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes() {
+        let l = Layer::Conv2d {
+            name: "c1".into(),
+            c_in: 3,
+            c_out: 64,
+            kh: 3,
+            kw: 3,
+            h_out: 32,
+            w_out: 32,
+        };
+        let s = l.vmm_shape().unwrap();
+        assert_eq!(s.rows, 27);
+        assert_eq!(s.cols, 64);
+        assert_eq!(s.positions, 1024);
+        assert_eq!(l.macs(), 27 * 64 * 1024);
+        assert_eq!(l.weight_words(), 27 * 64);
+    }
+
+    #[test]
+    fn lstm_gates() {
+        let l = Layer::Lstm { name: "l".into(), d_in: 300, hidden: 300, seq: 35 };
+        let s = l.vmm_shape().unwrap();
+        assert_eq!(s.rows, 600);
+        assert_eq!(s.cols, 1200);
+        assert_eq!(s.positions, 35);
+    }
+
+    #[test]
+    fn act_passes() {
+        assert_eq!(ActPrecision::Ternary.passes(), 1);
+        assert_eq!(ActPrecision::TwoBit.passes(), 2);
+    }
+
+    #[test]
+    fn non_vmm_layers_have_no_weights() {
+        let l = Layer::Relu { name: "r".into(), elems: 100 };
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.weight_words(), 0);
+        assert_eq!(l.sfu_elems(), 100);
+    }
+}

@@ -1,0 +1,140 @@
+//! Ternary quantization (paper §I, §III-B; refs [7]–[12]).
+//!
+//! TiM-DNN is programmable across three ternary systems:
+//!
+//! * **unweighted** {−1, 0, +1},
+//! * **symmetric weighted** {−a, 0, +a} (TWN-style),
+//! * **asymmetric weighted** {−a, 0, +b} (TTQ-style),
+//!
+//! and supports 2-bit activations evaluated bit-serially (WRPN-style
+//! [2,T] networks). This module implements the quantizers, the encoding
+//! metadata (scale factors kept in the tile's scale-factor registers),
+//! and sparsity statistics used for calibration.
+
+mod quantizers;
+
+pub use quantizers::{
+    quantize_activations_2bit, ternarize_asymmetric, ternarize_symmetric, ternarize_threshold,
+};
+
+use crate::tpc::Trit;
+
+/// The ternary number system used by a layer (paper §III-B, Fig 5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TernarySystem {
+    /// {−1, 0, +1} — single tile access per block VMM.
+    Unweighted,
+    /// {−a, 0, +a} — single access; PCU multiplies by `a`.
+    Symmetric { a: f32 },
+    /// {−w2, 0, +w1} weights with {−i2, 0, +i1} inputs — two accesses
+    /// computing pOut₁ = I₁(W₁·n − W₂·k) and pOut₂ = −I₂(W₁·n − W₂·k).
+    Asymmetric { w1: f32, w2: f32, i1: f32, i2: f32 },
+}
+
+impl TernarySystem {
+    /// Tile accesses needed per block VMM (Fig 5: asymmetric needs 2).
+    pub fn accesses_per_vmm(&self) -> u32 {
+        match self {
+            TernarySystem::Unweighted | TernarySystem::Symmetric { .. } => 1,
+            TernarySystem::Asymmetric { .. } => 2,
+        }
+    }
+
+    /// Combine digitized (n, k) counts into the layer's real-valued
+    /// partial output, mirroring the PCU datapath of Fig 4(b)/5(a).
+    pub fn combine(&self, n: u32, k: u32) -> f32 {
+        let (n, k) = (n as f32, k as f32);
+        match *self {
+            TernarySystem::Unweighted => n - k,
+            TernarySystem::Symmetric { a } => a * a * (n - k),
+            TernarySystem::Asymmetric { .. } => {
+                // Asymmetric systems need two execution steps with per-plane
+                // counts (Fig 5(b)); callers must use `combine_step`.
+                unreachable!("asymmetric systems combine per-step; use combine_step")
+            }
+        }
+    }
+
+    /// Per-step combination for weighted systems: `i_alpha * (w1*n - w2*k)`
+    /// with the sign handled by the caller (step 2 negates).
+    pub fn combine_step(&self, n: u32, k: u32, step: u32) -> f32 {
+        let (nf, kf) = (n as f32, k as f32);
+        match *self {
+            TernarySystem::Unweighted => nf - kf,
+            TernarySystem::Symmetric { a } => a * a * (nf - kf),
+            TernarySystem::Asymmetric { w1, w2, i1, i2 } => match step {
+                0 => i1 * (w1 * nf - w2 * kf),
+                1 => -i2 * (w1 * nf - w2 * kf),
+                _ => panic!("asymmetric systems have exactly 2 steps"),
+            },
+        }
+    }
+}
+
+/// A quantized ternary tensor plus its scale metadata.
+#[derive(Clone, Debug)]
+pub struct TernaryTensor {
+    pub values: Vec<Trit>,
+    pub system: TernarySystem,
+}
+
+impl TernaryTensor {
+    /// Dequantize back to f32 (for oracle comparisons).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.values
+            .iter()
+            .map(|&t| match self.system {
+                TernarySystem::Unweighted => t as f32,
+                TernarySystem::Symmetric { a } => a * t as f32,
+                TernarySystem::Asymmetric { w1, w2, .. } => match t {
+                    1 => w1,
+                    -1 => -w2,
+                    _ => 0.0,
+                },
+            })
+            .collect()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        if self.values.is_empty() {
+            return 1.0;
+        }
+        self.values.iter().filter(|&&t| t == 0).count() as f64 / self.values.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accesses_per_system() {
+        assert_eq!(TernarySystem::Unweighted.accesses_per_vmm(), 1);
+        assert_eq!(TernarySystem::Symmetric { a: 0.5 }.accesses_per_vmm(), 1);
+        let asym = TernarySystem::Asymmetric { w1: 0.3, w2: 0.2, i1: 1.0, i2: 1.0 };
+        assert_eq!(asym.accesses_per_vmm(), 2);
+    }
+
+    #[test]
+    fn combine_unweighted_is_n_minus_k() {
+        assert_eq!(TernarySystem::Unweighted.combine(5, 2), 3.0);
+    }
+
+    #[test]
+    fn combine_step_asymmetric_matches_fig5() {
+        // Fig 5(b): pOut1 = I1(W1*n − W2*k), pOut2 = −I2(W1*n − W2*k).
+        let sys = TernarySystem::Asymmetric { w1: 2.0, w2: 3.0, i1: 0.5, i2: 0.25 };
+        assert_eq!(sys.combine_step(4, 1, 0), 0.5 * (2.0 * 4.0 - 3.0 * 1.0));
+        assert_eq!(sys.combine_step(2, 2, 1), -0.25 * (2.0 * 2.0 - 3.0 * 2.0));
+    }
+
+    #[test]
+    fn dequantize_asymmetric() {
+        let t = TernaryTensor {
+            values: vec![1, 0, -1],
+            system: TernarySystem::Asymmetric { w1: 0.7, w2: 0.4, i1: 1.0, i2: 1.0 },
+        };
+        assert_eq!(t.dequantize(), vec![0.7, 0.0, -0.4]);
+        assert!((t.sparsity() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,146 @@
+//! Weight/activation quantizers for the three ternary systems.
+
+use super::{TernarySystem, TernaryTensor};
+use crate::tpc::Trit;
+
+/// Threshold ternarization: x → sign(x) if |x| > t else 0.
+/// The primitive every published ternary scheme builds on.
+pub fn ternarize_threshold(xs: &[f32], t: f32) -> Vec<Trit> {
+    xs.iter()
+        .map(|&x| {
+            if x > t {
+                1
+            } else if x < -t {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// TWN-style symmetric ternarization (Li & Liu; paper refs [7][8]):
+/// t = 0.7·E[|x|], a = E[|x_i| : |x_i| > t]. Returns {−a, 0, +a}.
+pub fn ternarize_symmetric(xs: &[f32]) -> TernaryTensor {
+    assert!(!xs.is_empty());
+    let mean_abs = xs.iter().map(|x| x.abs()).sum::<f32>() / xs.len() as f32;
+    let t = 0.7 * mean_abs;
+    let values = ternarize_threshold(xs, t);
+    let kept: Vec<f32> =
+        xs.iter().zip(&values).filter(|(_, &v)| v != 0).map(|(&x, _)| x.abs()).collect();
+    let a = if kept.is_empty() { 1.0 } else { kept.iter().sum::<f32>() / kept.len() as f32 };
+    TernaryTensor { values, system: TernarySystem::Symmetric { a } }
+}
+
+/// TTQ-style asymmetric ternarization (Zhu et al., paper ref [8]): separate
+/// positive and negative scales w1 = E[x_i : x_i > t], w2 = E[−x_i : x_i < −t].
+pub fn ternarize_asymmetric(xs: &[f32]) -> TernaryTensor {
+    assert!(!xs.is_empty());
+    let mean_abs = xs.iter().map(|x| x.abs()).sum::<f32>() / xs.len() as f32;
+    let t = 0.7 * mean_abs;
+    let values = ternarize_threshold(xs, t);
+    let pos: Vec<f32> = xs.iter().filter(|&&x| x > t).copied().collect();
+    let neg: Vec<f32> = xs.iter().filter(|&&x| x < -t).map(|&x| -x).collect();
+    let w1 = if pos.is_empty() { 1.0 } else { pos.iter().sum::<f32>() / pos.len() as f32 };
+    let w2 = if neg.is_empty() { 1.0 } else { neg.iter().sum::<f32>() / neg.len() as f32 };
+    TernaryTensor {
+        values,
+        system: TernarySystem::Asymmetric { w1, w2, i1: 1.0, i2: 1.0 },
+    }
+}
+
+/// WRPN-style 2-bit unsigned activation quantization to {0,1,2,3}/3 · scale.
+/// Returns the 2-bit codes (bit-serial planes are peeled in the tile model)
+/// and the scale such that `code/3 * scale` reconstructs the activation.
+pub fn quantize_activations_2bit(xs: &[f32]) -> (Vec<u8>, f32) {
+    assert!(!xs.is_empty());
+    let max = xs.iter().cloned().fold(0.0f32, |a, b| a.max(b.max(0.0)));
+    let scale = if max > 0.0 { max } else { 1.0 };
+    let codes = xs
+        .iter()
+        .map(|&x| {
+            let t = (x.max(0.0) / scale * 3.0).round();
+            t.clamp(0.0, 3.0) as u8
+        })
+        .collect();
+    (codes, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn threshold_basic() {
+        assert_eq!(ternarize_threshold(&[0.5, -0.5, 0.1, -0.1], 0.3), vec![1, -1, 0, 0]);
+    }
+
+    #[test]
+    fn symmetric_scale_is_mean_of_kept() {
+        let t = ternarize_symmetric(&[1.0, -1.0, 0.0, 0.0]);
+        // mean_abs = 0.5, t = 0.35 ⇒ keeps ±1.0; a = 1.0.
+        assert_eq!(t.values, vec![1, -1, 0, 0]);
+        match t.system {
+            TernarySystem::Symmetric { a } => assert!((a - 1.0).abs() < 1e-6),
+            _ => panic!("wrong system"),
+        }
+    }
+
+    #[test]
+    fn symmetric_dequant_reduces_error_vs_unweighted() {
+        let mut rng = Rng::seeded(17);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.gaussian() as f32 * 0.4).collect();
+        let t = ternarize_symmetric(&xs);
+        let deq = t.dequantize();
+        let err_w: f32 =
+            xs.iter().zip(&deq).map(|(x, d)| (x - d) * (x - d)).sum::<f32>() / xs.len() as f32;
+        let err_u: f32 = xs
+            .iter()
+            .zip(&t.values)
+            .map(|(x, &v)| (x - v as f32) * (x - v as f32))
+            .sum::<f32>()
+            / xs.len() as f32;
+        // The weighted system is the better approximation — the paper's
+        // motivation for supporting scale factors at all.
+        assert!(err_w < err_u, "weighted={err_w} unweighted={err_u}");
+    }
+
+    #[test]
+    fn asymmetric_separates_scales() {
+        let xs = [2.0f32, 2.0, -0.5, -0.5, 0.0, 0.0, 0.0, 0.0];
+        let t = ternarize_asymmetric(&xs);
+        match t.system {
+            TernarySystem::Asymmetric { w1, w2, .. } => {
+                assert!((w1 - 2.0).abs() < 1e-6);
+                assert!((w2 - 0.5).abs() < 1e-6);
+            }
+            _ => panic!("wrong system"),
+        }
+    }
+
+    #[test]
+    fn gaussian_weights_land_near_40pct_sparsity() {
+        // §III-B leans on "40% or more of the weights and inputs are zeros";
+        // the 0.7·E|x| threshold on a Gaussian yields ~52% zeros.
+        let mut rng = Rng::seeded(3);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.gaussian() as f32).collect();
+        let t = ternarize_symmetric(&xs);
+        assert!(t.sparsity() > 0.40, "sparsity={}", t.sparsity());
+        assert!(t.sparsity() < 0.65);
+    }
+
+    #[test]
+    fn act_2bit_codes_and_scale() {
+        let (codes, scale) = quantize_activations_2bit(&[0.0, 0.5, 1.0, 1.5, -1.0]);
+        assert_eq!(scale, 1.5);
+        assert_eq!(codes, vec![0, 1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn act_2bit_all_zero_input() {
+        let (codes, scale) = quantize_activations_2bit(&[0.0, -2.0]);
+        assert_eq!(codes, vec![0, 0]);
+        assert_eq!(scale, 1.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! This is the bridge to Layers 1–2: `make artifacts` runs
+//! `python/compile/aot.py`, which lowers the JAX/Pallas computations to
+//! **HLO text** files under `artifacts/`. This module loads those files,
+//! compiles them once on the PJRT CPU client, and executes them with
+//! concrete buffers — python never runs at inference time.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A dense f32 tensor crossing the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape, data }
+    }
+
+    pub fn scalar_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// One compiled executable.
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+/// The PJRT runtime: one CPU client, one compiled executable per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, Loaded>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.exes.insert(name.to_string(), Loaded { exe, path: path.to_path_buf() });
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; artifact name = file stem
+    /// without the `.hlo` suffix. Returns the loaded names (sorted).
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        if !dir.is_dir() {
+            bail!(
+                "artifact directory {} not found — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                self.load(stem, &path)?;
+                names.push(stem.to_string());
+            }
+        }
+        names.sort();
+        if names.is_empty() {
+            bail!("no *.hlo.txt artifacts in {} — run `make artifacts`", dir.display());
+        }
+        Ok(names)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Option<&Path> {
+        self.exes.get(name).map(|l| l.path.as_path())
+    }
+
+    /// Execute `name` with f32 inputs; returns the tuple of f32 outputs.
+    /// (All our AOT entry points are lowered with `return_tuple=True`.)
+    pub fn execute(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let loaded = self
+            .exes
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded (have: {:?})", self.names()))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input for '{name}': {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let bufs = loaded
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untupling '{name}': {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow!("output shape of '{name}': {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output data of '{name}': {e:?}"))?;
+                Ok(TensorF32::new(dims, data))
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory (repo-root relative, overridable by env).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TIMDNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.scalar_count(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_shape_mismatch_panics() {
+        TensorF32::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn missing_dir_is_actionable_error() {
+        let mut rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        let err = rt.load_dir(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Execution-trace export.
+//!
+//! The paper's simulator "produces execution traces consisting of
+//! off-chip accesses, write and vector-matrix multiply operations in TiM
+//! tiles, buffer reads and writes, and RU and SFU operations" (§IV).
+//! This module materializes that trace and exports it as Chrome-tracing
+//! JSON (`chrome://tracing` / Perfetto), with one lane per hardware unit
+//! — hand-rolled JSON, since the offline environment has no serde.
+
+use std::fmt::Write as _;
+
+use crate::arch::ArchConfig;
+use crate::isa::{Instr, Program};
+
+/// Hardware lane an event executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Dram,
+    TileWrite,
+    TileCompute,
+    Ru,
+    Sfu,
+    Buffer,
+}
+
+impl Lane {
+    fn name(self) -> &'static str {
+        match self {
+            Lane::Dram => "DRAM",
+            Lane::TileWrite => "Tile writes",
+            Lane::TileCompute => "Tile VMM",
+            Lane::Ru => "Reduce Unit",
+            Lane::Sfu => "SFU",
+            Lane::Buffer => "Buffers",
+        }
+    }
+
+    fn tid(self) -> u32 {
+        match self {
+            Lane::Dram => 0,
+            Lane::TileWrite => 1,
+            Lane::TileCompute => 2,
+            Lane::Ru => 3,
+            Lane::Sfu => 4,
+            Lane::Buffer => 5,
+        }
+    }
+}
+
+/// One traced hardware operation.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub layer: String,
+    pub lane: Lane,
+    /// Start time, seconds from inference start.
+    pub start_s: f64,
+    pub dur_s: f64,
+}
+
+/// Produce the §IV execution trace of one inference: per layer, the
+/// weight-load, activation, VMM, RU and SFU phases laid out on their
+/// lanes with the same timing rules as [`super::simulate`] (weight
+/// streaming overlaps writes; the non-MAC stream pipelines against the
+/// VMM stream at layer granularity).
+pub fn trace(prog: &Program, arch: &ArchConfig) -> Vec<TraceEvent> {
+    use crate::energy::constants::*;
+    let mut events = Vec::new();
+    let mut t = 0.0f64;
+    let mut layer_mac_end = 0.0f64;
+    let mut layer_stream_end = 0.0f64;
+
+    for instr in &prog.instrs {
+        let layer = instr.layer().to_string();
+        match instr {
+            Instr::LoadWeights { words, rows_critical, .. } => {
+                let t_write = *rows_critical as f64 * T_WRITE_ROW_S;
+                let bytes = *words as f64 * crate::mapper::WEIGHT_BYTES_PER_WORD;
+                let t_dram = bytes / arch.dram_bw;
+                if !prog.spatial {
+                    events.push(TraceEvent { layer: layer.clone(), lane: Lane::Dram, start_s: t, dur_s: t_dram });
+                    events.push(TraceEvent { layer, lane: Lane::TileWrite, start_s: t, dur_s: t_write });
+                    t += t_write.max(t_dram);
+                    layer_mac_end = t;
+                    layer_stream_end = t;
+                }
+            }
+            Instr::LoadActs { bytes, from_dram, .. } | Instr::StoreActs { bytes, to_dram: from_dram, .. } => {
+                let b = *bytes as f64;
+                let dur = if *from_dram { b / arch.dram_bw } else { b / 1.0e12 };
+                let lane = if *from_dram { Lane::Dram } else { Lane::Buffer };
+                events.push(TraceEvent { layer, lane, start_s: layer_stream_end, dur_s: dur });
+                layer_stream_end += dur;
+            }
+            Instr::Vmm { accesses, tiles_used, .. } => {
+                let serial = (*accesses as f64 / (*tiles_used).max(1) as f64).ceil();
+                let dur = serial * arch.block_vmm_time();
+                events.push(TraceEvent { layer, lane: Lane::TileCompute, start_s: t, dur_s: dur });
+                layer_mac_end = t + dur;
+            }
+            Instr::Reduce { adds, .. } => {
+                let dur = (*adds as f64 / RU_ADDERS as f64).ceil() / F_CLK_HZ;
+                events.push(TraceEvent { layer, lane: Lane::Ru, start_s: layer_stream_end, dur_s: dur });
+                layer_stream_end += dur;
+            }
+            Instr::Sfu { work, .. } => {
+                let cycles = (work.relu as f64 / SFU_RELU_UNITS as f64).ceil()
+                    + (work.vpe as f64 / SFU_VPE_LANES as f64).ceil()
+                    + (work.spe as f64 / SFU_SPE_UNITS as f64).ceil() * SPE_CYCLES
+                    + (work.quant as f64 / SFU_QUANT_UNITS as f64).ceil();
+                let dur = cycles / F_CLK_HZ;
+                events.push(TraceEvent { layer, lane: Lane::Sfu, start_s: layer_stream_end, dur_s: dur });
+                layer_stream_end += dur;
+            }
+            Instr::Barrier { .. } => {
+                // Layer boundary: next layer starts when both streams drain.
+                t = layer_mac_end.max(layer_stream_end);
+                layer_mac_end = t;
+                layer_stream_end = t;
+            }
+        }
+    }
+    events
+}
+
+/// Escape a string for JSON.
+fn esc(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Serialize events as Chrome-tracing JSON (microsecond timestamps).
+pub fn to_chrome_json(events: &[TraceEvent], process_name: &str) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    write!(
+        out,
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        esc(process_name)
+    )
+    .unwrap();
+    for lane in [Lane::Dram, Lane::TileWrite, Lane::TileCompute, Lane::Ru, Lane::Sfu, Lane::Buffer]
+    {
+        write!(
+            out,
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            lane.tid(),
+            lane.name()
+        )
+        .unwrap();
+    }
+    for e in events {
+        write!(
+            out,
+            ",{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{:.4},\"dur\":{:.4}}}",
+            esc(&e.layer),
+            e.lane.tid(),
+            e.start_s * 1e6,
+            e.dur_s.max(1e-12) * 1e6
+        )
+        .unwrap();
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+
+    #[test]
+    fn trace_covers_all_lanes_for_cnn() {
+        // AlexNet is temporally mapped with DRAM-resident feature maps,
+        // so every lane carries events.
+        let arch = ArchConfig::tim_dnn();
+        let prog = crate::mapper::map_network(&model::alexnet(), &arch);
+        let ev = trace(&prog, &arch);
+        assert!(!ev.is_empty());
+        for lane in [Lane::Dram, Lane::TileWrite, Lane::TileCompute, Lane::Sfu, Lane::Buffer] {
+            assert!(ev.iter().any(|e| e.lane == lane), "missing lane {lane:?}");
+        }
+        // Events are non-negative and finite.
+        for e in &ev {
+            assert!(e.start_s >= 0.0 && e.dur_s >= 0.0 && e.start_s.is_finite());
+        }
+    }
+
+    #[test]
+    fn spatial_nets_have_no_weight_lanes() {
+        let arch = ArchConfig::tim_dnn();
+        let prog = crate::mapper::map_network(&model::lstm_ptb(), &arch);
+        assert!(prog.spatial);
+        let ev = trace(&prog, &arch);
+        assert!(!ev.iter().any(|e| e.lane == Lane::TileWrite));
+    }
+
+    #[test]
+    fn trace_span_matches_simulated_time_scale() {
+        // The trace's makespan must be within 2× of the simulator's
+        // batch-1 per-inference time (the trace does not batch-amortize).
+        let arch = ArchConfig::tim_dnn();
+        let net = model::tiny_cnn();
+        let prog = crate::mapper::map_network(&net, &arch);
+        let ev = trace(&prog, &arch);
+        let span = ev.iter().map(|e| e.start_s + e.dur_s).fold(0.0f64, f64::max);
+        let sim =
+            crate::sim::simulate_with(&prog, &arch, crate::sim::SimOptions { batch: 1 });
+        assert!(span <= 2.0 * sim.total_s && span >= 0.3 * sim.total_s,
+            "span {span} vs sim {}", sim.total_s);
+    }
+
+    #[test]
+    fn chrome_json_is_structurally_valid() {
+        let arch = ArchConfig::tim_dnn();
+        let prog = crate::mapper::map_network(&model::tiny_cnn(), &arch);
+        let ev = trace(&prog, &arch);
+        let json = to_chrome_json(&ev, "TiMNet \"demo\"");
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), ev.len());
+        // Escaped quote in the process name survived.
+        assert!(json.contains("TiMNet \\\"demo\\\""));
+        // Balanced braces (cheap structural check).
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn esc_handles_controls() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+    }
+}

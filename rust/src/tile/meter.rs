@@ -1,0 +1,119 @@
+//! Per-tile time/energy accounting, split by the Fig 16 components.
+
+use crate::energy::constants::*;
+
+/// Energy by component (joules). Maps one-to-one onto Fig 16's bars plus
+/// the write/row categories the application-level Fig 13 needs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub bl: f64,
+    pub wl: f64,
+    pub pcu: f64,
+    pub dec_mux: f64,
+    pub write: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.bl + self.wl + self.pcu + self.dec_mux + self.write
+    }
+
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.bl += other.bl;
+        self.wl += other.wl;
+        self.pcu += other.pcu;
+        self.dec_mux += other.dec_mux;
+        self.write += other.write;
+    }
+}
+
+/// Activity + time/energy meter attached to a tile.
+#[derive(Clone, Debug, Default)]
+pub struct TileMeter {
+    /// VMM array accesses issued.
+    pub accesses: u64,
+    /// Row writes performed.
+    pub row_writes: u64,
+    /// Total bitline discharge events (sums n_raw + k_raw over columns).
+    pub discharges: u64,
+    /// Busy time, seconds (steady-state pipelined issue rate).
+    pub busy_s: f64,
+    pub energy: EnergyBreakdown,
+}
+
+impl TileMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one VMM access over `columns` columns with the given total
+    /// discharge-event count.
+    pub fn record_access(&mut self, discharges: u64) {
+        self.accesses += 1;
+        self.discharges += discharges;
+        self.busy_s += T_VMM_S;
+        self.energy.bl += discharges as f64 * E_BL_PER_DISCHARGE;
+        self.energy.wl += E_WL_PER_ACCESS;
+        self.energy.pcu += E_PCU_PER_ACCESS;
+        self.energy.dec_mux += E_DEC_MUX_PER_ACCESS;
+    }
+
+    /// Record one row write (N ternary words in parallel).
+    pub fn record_row_write(&mut self) {
+        self.row_writes += 1;
+        self.busy_s += T_WRITE_ROW_S;
+        self.energy.write += E_WRITE_ROW;
+    }
+
+    pub fn merge(&mut self, other: &TileMeter) {
+        self.accesses += other.accesses;
+        self.row_writes += other.row_writes;
+        self.discharges += other.discharges;
+        self.busy_s += other.busy_s;
+        self.energy.add(&other.energy);
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_accounting_matches_fig16_at_nominal() {
+        let mut m = TileMeter::new();
+        // Nominal output sparsity 0.64 over 16×256 products.
+        let discharges = ((TILE_L * TILE_N) as f64 * 0.36).round() as u64;
+        m.record_access(discharges);
+        let e = m.energy.total();
+        assert!((e - 26.84e-12).abs() < 0.05e-12, "e={e:e}");
+        assert!((m.busy_s - T_VMM_S).abs() < 1e-18);
+    }
+
+    #[test]
+    fn writes_accumulate() {
+        let mut m = TileMeter::new();
+        for _ in 0..10 {
+            m.record_row_write();
+        }
+        assert_eq!(m.row_writes, 10);
+        assert!((m.energy.write - 10.0 * E_WRITE_ROW).abs() < 1e-20);
+        assert!((m.busy_s - 10.0 * T_WRITE_ROW_S).abs() < 1e-18);
+    }
+
+    #[test]
+    fn merge_sums_components() {
+        let mut a = TileMeter::new();
+        a.record_access(100);
+        let mut b = TileMeter::new();
+        b.record_access(50);
+        b.record_row_write();
+        a.merge(&b);
+        assert_eq!(a.accesses, 2);
+        assert_eq!(a.discharges, 150);
+        assert_eq!(a.row_writes, 1);
+    }
+}

@@ -1,0 +1,99 @@
+//! TiM tile — the specialized memory array (paper §III-C, Fig 7).
+//!
+//! A tile is an L·K × N array of TPCs: K blocks of L rows, N columns.
+//! Writes are row-by-row (N ternary words per write). A vector–matrix
+//! multiplication is block-granular: the block decoder selects one block,
+//! the Read Wordline Drivers apply an encoded ternary input to all L rows
+//! simultaneously, the bitline pairs accumulate (n, k) per column in the
+//! analog domain, a sample-and-hold captures the voltages, and M PCUs
+//! (each two 3-bit flash ADCs + small arithmetic) digitize and reduce.
+//!
+//! The PCUs are bandwidth-matched to the array (M = 32 PCUs × 2 ADCs = 64
+//! conversions per step ⇒ 512 conversions in 8 steps) and operate as the
+//! second stage of a two-stage pipeline with the array access, so the
+//! steady-state VMM issue rate is one access per `T_VMM` (§III-C).
+
+mod meter;
+mod tim;
+
+pub use meter::{EnergyBreakdown, TileMeter};
+pub use tim::{TimTile, VmmMode, VmmResult};
+
+use crate::energy::constants::{N_MAX, TILE_K, TILE_L, TILE_M, TILE_N};
+
+/// Geometry + ADC configuration of a tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Rows enabled simultaneously per block.
+    pub l: usize,
+    /// Blocks per tile.
+    pub k: usize,
+    /// Columns (ternary words per row).
+    pub n: usize,
+    /// PCUs per tile.
+    pub m: usize,
+    /// ADC full-scale count.
+    pub n_max: u32,
+}
+
+impl TileConfig {
+    /// The paper's evaluated tile: 256×256 TPCs, L=K=16, N=256, M=32,
+    /// n_max=8 (Table II + §III-B).
+    pub fn paper() -> Self {
+        Self { l: TILE_L, k: TILE_K, n: TILE_N, m: TILE_M, n_max: N_MAX }
+    }
+
+    /// TiM-8 variant (Fig 14): 8 wordlines per access ⇒ two accesses per
+    /// 16-row block VMM. Modeled as l=8, k=32 over the same array.
+    pub fn tim8() -> Self {
+        Self { l: 8, k: 32, n: TILE_N, m: TILE_M, n_max: N_MAX }
+    }
+
+    /// Total rows of TPCs.
+    pub fn rows(&self) -> usize {
+        self.l * self.k
+    }
+
+    /// Ternary-word capacity.
+    pub fn capacity_words(&self) -> usize {
+        self.rows() * self.n
+    }
+
+    /// PCU pipeline steps per access (conversions / (M·2 ADCs)).
+    pub fn pcu_steps(&self) -> usize {
+        (2 * self.n).div_ceil(2 * self.m)
+    }
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_table2() {
+        let c = TileConfig::paper();
+        assert_eq!(c.rows(), 256);
+        assert_eq!(c.n, 256);
+        assert_eq!(c.capacity_words(), 65536);
+        assert_eq!(c.m, 32);
+        assert_eq!(c.n_max, 8);
+    }
+
+    #[test]
+    fn pcu_pipeline_is_8_steps() {
+        // 512 conversions / 64 ADCs = 8 steps (§III-C bandwidth matching).
+        assert_eq!(TileConfig::paper().pcu_steps(), 8);
+    }
+
+    #[test]
+    fn tim8_has_same_capacity() {
+        assert_eq!(TileConfig::tim8().capacity_words(), TileConfig::paper().capacity_words());
+        assert_eq!(TileConfig::tim8().l, 8);
+    }
+}

@@ -1,0 +1,416 @@
+//! Functional + analog model of one TiM tile.
+//!
+//! The weight storage is column-packed: each block keeps, per column, two
+//! L-bit masks (`plus`, `minus`). A block VMM is then, per column,
+//! `n_raw = popcount(wp & xp | wm & xm)`, `k_raw = popcount(wp & xm | wm & xp)`
+//! — the digital shadow of what the bitline pair accumulates — followed by
+//! ADC clipping at `n_max`. The analog mode replaces the clip with the
+//! full bitline-voltage → flash-ADC path (optionally with V_T variation
+//! noise), which is what the Monte-Carlo study exercises.
+
+use super::{TileConfig, TileMeter};
+use crate::analog::{sample_bl_voltage, Adc, BitlineCurve};
+use crate::quant::TernarySystem;
+use crate::tpc::{assert_ternary, Trit, TritMatrix};
+use crate::util::prng::Rng;
+
+/// How bitline counts are obtained.
+#[derive(Debug)]
+pub enum VmmMode<'a> {
+    /// Exact counts clipped at n_max — the tile's nominal digital behaviour.
+    Ideal,
+    /// Through the bitline-voltage + flash-ADC model, no device noise
+    /// (must agree exactly with `Ideal`; asserted in tests).
+    Analog,
+    /// Analog with V_T-variation noise on cells and ADC references.
+    AnalogNoisy(&'a mut Rng),
+}
+
+/// Result of one block VMM access.
+#[derive(Clone, Debug)]
+pub struct VmmResult {
+    /// Digitized (n, k) per column after ADC clipping.
+    pub counts: Vec<(u32, u32)>,
+    /// Raw discharge events (pre-clip), for energy accounting.
+    pub discharges: u64,
+}
+
+/// One block: per-column packed masks, bit i of a mask = row i of the block.
+#[derive(Clone, Debug)]
+struct Block {
+    plus: Vec<u32>,
+    minus: Vec<u32>,
+}
+
+/// A TiM tile with meters.
+pub struct TimTile {
+    cfg: TileConfig,
+    blocks: Vec<Block>,
+    curve: BitlineCurve,
+    adc: Adc,
+    /// Precomputed nominal V_BL per raw count 0..=L (analog fast path).
+    volt_lut: Vec<f64>,
+    pub meter: TileMeter,
+}
+
+impl TimTile {
+    pub fn new(cfg: TileConfig) -> Self {
+        assert!(cfg.l <= 32, "block masks are u32-packed (L ≤ 32)");
+        let curve = BitlineCurve::calibrated();
+        let adc = Adc::for_curve(&curve, cfg.n_max);
+        let volt_lut = (0..=cfg.l as u32).map(|c| curve.voltage(c)).collect();
+        let blocks = (0..cfg.k)
+            .map(|_| Block { plus: vec![0; cfg.n], minus: vec![0; cfg.n] })
+            .collect();
+        Self { cfg, blocks, curve, adc, volt_lut, meter: TileMeter::new() }
+    }
+
+    pub fn config(&self) -> &TileConfig {
+        &self.cfg
+    }
+
+    /// Write one row (N ternary words in parallel) — the paper's row-by-row
+    /// write operation. `row` is tile-global in `0..L*K`.
+    pub fn write_row(&mut self, row: usize, words: &[Trit]) {
+        assert!(row < self.cfg.rows(), "row {row} out of range");
+        assert_eq!(words.len(), self.cfg.n, "a row write drives all N columns");
+        assert_ternary(words);
+        let block = &mut self.blocks[row / self.cfg.l];
+        let bit = 1u32 << (row % self.cfg.l);
+        for (c, &w) in words.iter().enumerate() {
+            block.plus[c] &= !bit;
+            block.minus[c] &= !bit;
+            match w {
+                1 => block.plus[c] |= bit,
+                -1 => block.minus[c] |= bit,
+                _ => {}
+            }
+        }
+        self.meter.record_row_write();
+    }
+
+    /// Load a full weight matrix (rows ≤ L·K, cols ≤ N) starting at row 0,
+    /// padding unused columns/rows with zeros. Returns rows written.
+    pub fn load_weights(&mut self, w: &TritMatrix) -> usize {
+        assert!(w.rows <= self.cfg.rows(), "matrix taller than tile");
+        assert!(w.cols <= self.cfg.n, "matrix wider than tile");
+        let mut row_buf = vec![0i8; self.cfg.n];
+        for r in 0..w.rows {
+            row_buf[..w.cols].copy_from_slice(w.row(r));
+            row_buf[w.cols..].fill(0);
+            self.write_row(r, &row_buf);
+        }
+        w.rows
+    }
+
+    /// Read back the stored weight at (row, col) — test/debug path.
+    pub fn stored(&self, row: usize, col: usize) -> Trit {
+        let block = &self.blocks[row / self.cfg.l];
+        let bit = 1u32 << (row % self.cfg.l);
+        if block.plus[col] & bit != 0 {
+            1
+        } else if block.minus[col] & bit != 0 {
+            -1
+        } else {
+            0
+        }
+    }
+
+    /// Pack a ternary input vector (length ≤ L) into RWD masks.
+    fn pack_input(&self, input: &[Trit]) -> (u32, u32) {
+        assert!(input.len() <= self.cfg.l, "input longer than block rows");
+        assert_ternary(input);
+        let mut xp = 0u32;
+        let mut xm = 0u32;
+        for (i, &x) in input.iter().enumerate() {
+            match x {
+                1 => xp |= 1 << i,
+                -1 => xm |= 1 << i,
+                _ => {}
+            }
+        }
+        (xp, xm)
+    }
+
+    /// One block VMM access: all L rows of `block` enabled simultaneously,
+    /// N columns accumulated in parallel (paper Fig 4). Returns digitized
+    /// per-column (n, k).
+    ///
+    /// The `Ideal` path is the architectural simulator's inner loop and is
+    /// specialized: a single branch-free pass over the packed column
+    /// masks (iterator zip ⇒ no bounds checks), with the mode dispatch
+    /// hoisted out of the column loop (EXPERIMENTS.md §Perf).
+    pub fn vmm_block(&mut self, block: usize, input: &[Trit], mode: &mut VmmMode) -> VmmResult {
+        let mut counts = Vec::with_capacity(self.cfg.n);
+        let discharges = self.vmm_block_into(block, input, mode, &mut counts);
+        VmmResult { counts, discharges }
+    }
+
+    /// Allocation-free variant of [`Self::vmm_block`]: appends per-column
+    /// (n, k) into `counts` (cleared first) and returns the discharge
+    /// count. The full-tile VMM reuses one buffer across all K blocks.
+    pub fn vmm_block_into(
+        &mut self,
+        block: usize,
+        input: &[Trit],
+        mode: &mut VmmMode,
+        counts: &mut Vec<(u32, u32)>,
+    ) -> u64 {
+        assert!(block < self.cfg.k, "block {block} out of range");
+        let (xp, xm) = self.pack_input(input);
+        let blk = &self.blocks[block];
+        let n_max = self.cfg.n_max;
+        counts.clear();
+        counts.reserve(self.cfg.n);
+        let mut discharges = 0u64;
+        match mode {
+            VmmMode::Ideal => {
+                for (&wp, &wm) in blk.plus.iter().zip(blk.minus.iter()) {
+                    let n_raw = ((wp & xp) | (wm & xm)).count_ones();
+                    let k_raw = ((wp & xm) | (wm & xp)).count_ones();
+                    discharges += (n_raw + k_raw) as u64;
+                    counts.push((n_raw.min(n_max), k_raw.min(n_max)));
+                }
+            }
+            VmmMode::Analog => {
+                for (&wp, &wm) in blk.plus.iter().zip(blk.minus.iter()) {
+                    let n_raw = ((wp & xp) | (wm & xm)).count_ones();
+                    let k_raw = ((wp & xm) | (wm & xp)).count_ones();
+                    discharges += (n_raw + k_raw) as u64;
+                    let vn = self.volt_lut[n_raw as usize];
+                    let vk = self.volt_lut[k_raw as usize];
+                    counts.push((self.adc.decode(vn), self.adc.decode(vk)));
+                }
+            }
+            VmmMode::AnalogNoisy(rng) => {
+                for (&wp, &wm) in blk.plus.iter().zip(blk.minus.iter()) {
+                    let n_raw = ((wp & xp) | (wm & xm)).count_ones();
+                    let k_raw = ((wp & xm) | (wm & xp)).count_ones();
+                    discharges += (n_raw + k_raw) as u64;
+                    let vn = sample_bl_voltage(&self.curve, n_raw, rng);
+                    let vk = sample_bl_voltage(&self.curve, k_raw, rng);
+                    counts.push((self.adc.decode_noisy(vn, rng), self.adc.decode_noisy(vk, rng)));
+                }
+            }
+        }
+        self.meter.record_access(discharges);
+        discharges
+    }
+
+    /// Full-matrix VMM: the input spans `rows ≤ L·K`; blocks are accessed
+    /// sequentially and the PCUs reduce partial sums digitally (§III-C).
+    /// Scale factors are applied per the tile's ternary system registers.
+    pub fn vmm(&mut self, input: &[Trit], system: TernarySystem, mode: &mut VmmMode) -> Vec<f32> {
+        assert!(input.len() <= self.cfg.rows(), "input taller than tile");
+        let mut out = vec![0f32; self.cfg.n];
+        let mut counts: Vec<(u32, u32)> = Vec::with_capacity(self.cfg.n);
+        let mut plane: Vec<Trit> = Vec::with_capacity(self.cfg.l);
+        let steps = system.accesses_per_vmm();
+        for (b, chunk) in input.chunks(self.cfg.l).enumerate() {
+            for step in 0..steps {
+                // Weighted asymmetric systems split the input into its
+                // positive plane (step 0) and negative plane (step 1),
+                // applying each as unsigned {0,1} (Fig 5(b)).
+                match (steps, step) {
+                    // Single-pass systems apply the chunk directly (no copy).
+                    (1, _) => {
+                        self.vmm_block_into(b, chunk, mode, &mut counts);
+                    }
+                    (2, 0) => {
+                        plane.clear();
+                        plane.extend(chunk.iter().map(|&x| i8::from(x == 1)));
+                        self.vmm_block_into(b, &plane, mode, &mut counts);
+                    }
+                    (2, 1) => {
+                        plane.clear();
+                        plane.extend(chunk.iter().map(|&x| i8::from(x == -1)));
+                        self.vmm_block_into(b, &plane, mode, &mut counts);
+                    }
+                    _ => unreachable!(),
+                }
+                for (c, &(n, k)) in counts.iter().enumerate() {
+                    out[c] += system.combine_step(n, k, step);
+                }
+            }
+        }
+        out
+    }
+
+    /// Bit-serial VMM for 2-bit unsigned activations (WRPN [2,T] layers):
+    /// each bit plane is applied as a {0,1} input and the PCU shifter
+    /// weights plane p by 2^p (§III-C "The activations are evaluated
+    /// bit-serially using multiple TiM accesses").
+    pub fn vmm_2bit(
+        &mut self,
+        codes: &[u8],
+        system: TernarySystem,
+        mode: &mut VmmMode,
+    ) -> Vec<f32> {
+        assert!(codes.len() <= self.cfg.rows());
+        assert!(codes.iter().all(|&c| c < 4), "2-bit codes only");
+        let mut out = vec![0f32; self.cfg.n];
+        for plane in 0..2u32 {
+            let plane_input: Vec<Trit> =
+                codes.iter().map(|&c| ((c >> plane) & 1) as Trit).collect();
+            let plane_out = self.vmm(&plane_input, system, mode);
+            let shift = (1 << plane) as f32;
+            for (o, p) in out.iter_mut().zip(&plane_out) {
+                *o += shift * p;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::constants::N_MAX;
+    use crate::util::prng::Rng;
+
+    fn small_cfg() -> TileConfig {
+        TileConfig { l: 16, k: 4, n: 32, m: 8, n_max: N_MAX }
+    }
+
+    #[test]
+    fn write_then_readback() {
+        let mut tile = TimTile::new(small_cfg());
+        let mut rng = Rng::seeded(1);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        tile.load_weights(&w);
+        for r in 0..64 {
+            for c in 0..32 {
+                assert_eq!(tile.stored(r, c), w.get(r, c), "({r},{c})");
+            }
+        }
+        assert_eq!(tile.meter.row_writes, 64);
+    }
+
+    #[test]
+    fn block_vmm_matches_exact_when_under_nmax() {
+        // With very sparse data, raw counts stay < n_max so no clipping.
+        let mut rng = Rng::seeded(2);
+        let w = TritMatrix::random(16, 32, 0.8, &mut rng);
+        let x = rng.trit_vec(16, 0.8);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let res = tile.vmm_block(0, &x, &mut VmmMode::Ideal);
+        let exact = w.vmm_exact(&x);
+        for (c, &(n, k)) in res.counts.iter().enumerate() {
+            assert_eq!(n as i32 - k as i32, exact[c], "col {c}");
+        }
+    }
+
+    #[test]
+    fn clipping_engages_at_dense_inputs() {
+        // All-ones weights and inputs: n_raw = 16 > n_max = 8.
+        let w = TritMatrix::from_vec(16, 32, vec![1; 16 * 32]);
+        let x = vec![1i8; 16];
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let res = tile.vmm_block(0, &x, &mut VmmMode::Ideal);
+        for &(n, k) in &res.counts {
+            assert_eq!(n, N_MAX);
+            assert_eq!(k, 0);
+        }
+    }
+
+    #[test]
+    fn analog_mode_agrees_with_ideal() {
+        let mut rng = Rng::seeded(3);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        let x = rng.trit_vec(16, 0.4);
+        let mut t1 = TimTile::new(small_cfg());
+        let mut t2 = TimTile::new(small_cfg());
+        t1.load_weights(&w);
+        t2.load_weights(&w);
+        for b in 0..4 {
+            let r1 = t1.vmm_block(b, &x, &mut VmmMode::Ideal);
+            let r2 = t2.vmm_block(b, &x, &mut VmmMode::Analog);
+            assert_eq!(r1.counts, r2.counts, "block {b}");
+        }
+    }
+
+    #[test]
+    fn full_vmm_matches_block_clipped_reference() {
+        let mut rng = Rng::seeded(4);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        let x = rng.trit_vec(64, 0.4);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let got = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        // Reference: per 16-row block, clip n and k at n_max, then sum.
+        for c in 0..32 {
+            let mut want = 0i32;
+            for b in 0..4 {
+                let (mut n, mut k) = (0u32, 0u32);
+                for r in 0..16 {
+                    match w.get(b * 16 + r, c) as i32 * x[b * 16 + r] as i32 {
+                        1 => n += 1,
+                        -1 => k += 1,
+                        _ => {}
+                    }
+                }
+                want += n.min(N_MAX) as i32 - k.min(N_MAX) as i32;
+            }
+            assert_eq!(got[c] as i32, want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn asymmetric_two_step_equals_weighted_product() {
+        // With sparse data (no clipping), the two-step asymmetric VMM must
+        // equal the dequantized dot product.
+        let mut rng = Rng::seeded(5);
+        let sys = TernarySystem::Asymmetric { w1: 0.5, w2: 0.25, i1: 0.75, i2: 1.5 };
+        let w = TritMatrix::random(16, 32, 0.85, &mut rng);
+        let x = rng.trit_vec(16, 0.85);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let got = tile.vmm(&x, sys, &mut VmmMode::Ideal);
+        for c in 0..32 {
+            let mut want = 0f32;
+            for r in 0..16 {
+                let wv = match w.get(r, c) {
+                    1 => 0.5,
+                    -1 => -0.25,
+                    _ => 0.0,
+                };
+                let xv = match x[r] {
+                    1 => 0.75,
+                    -1 => -1.5,
+                    _ => 0.0,
+                };
+                want += wv * xv;
+            }
+            assert!((got[c] - want).abs() < 1e-5, "col {c}: got {} want {want}", got[c]);
+        }
+    }
+
+    #[test]
+    fn two_bit_serial_equals_direct_weighted_sum() {
+        let mut rng = Rng::seeded(6);
+        let w = TritMatrix::random(16, 32, 0.85, &mut rng);
+        let codes: Vec<u8> = (0..16).map(|_| rng.below(4) as u8).collect();
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let got = tile.vmm_2bit(&codes, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        for c in 0..32 {
+            let want: i32 =
+                (0..16).map(|r| w.get(r, c) as i32 * codes[r] as i32).sum();
+            assert_eq!(got[c] as i32, want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn meter_counts_accesses() {
+        let mut tile = TimTile::new(small_cfg());
+        let x = vec![0i8; 64];
+        tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        // 64 rows / 16 per block = 4 accesses.
+        assert_eq!(tile.meter.accesses, 4);
+        // All-zero input ⇒ no discharges, but fixed PCU/WL energy spent.
+        assert_eq!(tile.meter.discharges, 0);
+        assert!(tile.meter.energy.pcu > 0.0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Digital-behaviour model of a single TPC.
+
+use super::{decode_weight, encode_input, encode_weight, Trit};
+
+/// What a scalar ternary multiplication does to the two bitlines
+/// (paper Fig 3). `bl`/`blb` are true when the respective bitline is
+/// discharged by Δ; both false means both lines stay at V_DD (product 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TpcOutput {
+    /// BL discharged ⇒ product = +1 contribution.
+    pub bl: bool,
+    /// BLB discharged ⇒ product = −1 contribution.
+    pub blb: bool,
+}
+
+impl TpcOutput {
+    /// The inferred ternary product (output encoding of Fig 3).
+    pub fn value(self) -> Trit {
+        match (self.bl, self.blb) {
+            (false, false) => 0,
+            (true, false) => 1,
+            (false, true) => -1,
+            (true, true) => unreachable!("a TPC never discharges both bitlines"),
+        }
+    }
+}
+
+/// Drive values applied during a write (both bits written simultaneously:
+/// `A` via BL and SL2, `B` via BLB and SL1 — paper §III-A).
+#[derive(Clone, Copy, Debug)]
+pub struct WriteDrive {
+    pub bl: bool,
+    pub blb: bool,
+    pub sl1: bool,
+    pub sl2: bool,
+}
+
+impl WriteDrive {
+    /// Drive pattern that writes the ternary weight `w`.
+    pub fn for_weight(w: Trit) -> Self {
+        let (a, b) = encode_weight(w);
+        // A is written through BL/SL2 (true rail/complement), B through
+        // BLB/SL1. The complementary source-lines model the paper's
+        // "driving the source-lines and the bitlines to either VDD or 0".
+        WriteDrive { bl: a, sl2: !a, blb: b, sl1: !b }
+    }
+}
+
+/// A single Ternary Processing Cell.
+///
+/// State is the two stored bits; the read path is combinational. The
+/// separate read/write wordlines mean in-memory multiplications can never
+/// disturb the stored bits — mirrored here by `multiply` taking `&self`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Tpc {
+    a: bool,
+    b: bool,
+}
+
+impl Tpc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write with `WL_W` asserted and the given rail drives.
+    pub fn write(&mut self, drive: WriteDrive) {
+        // Cross-coupled pairs latch the driven rails.
+        self.a = drive.bl && !drive.sl2;
+        self.b = drive.blb && !drive.sl1;
+    }
+
+    /// Convenience: write a ternary weight.
+    pub fn write_weight(&mut self, w: Trit) {
+        self.write(WriteDrive::for_weight(w));
+    }
+
+    /// The stored ternary weight.
+    pub fn stored(&self) -> Trit {
+        decode_weight(self.a, self.b)
+    }
+
+    /// Raw stored bits (A, B).
+    pub fn bits(&self) -> (bool, bool) {
+        (self.a, self.b)
+    }
+
+    /// Scalar ternary multiplication W·I (paper Fig 3).
+    ///
+    /// The bitlines are precharged; the encoded input is applied on
+    /// `WL_R1/WL_R2`. Which bitline discharges depends on both the input
+    /// encoding and the stored bits:
+    ///
+    /// * W=0 or I=0 → neither discharges (product 0)
+    /// * W=I=±1    → BL discharges (product +1)
+    /// * W=−I=±1   → BLB discharges (product −1)
+    pub fn multiply(&self, input: Trit) -> TpcOutput {
+        let (wl_r1, wl_r2) = encode_input(input);
+        if !self.a {
+            // Stored 0: pulldown paths gated off; floating M6-M7 node has
+            // no effect (bitline cap ≫ node cap, §III-B).
+            return TpcOutput { bl: false, blb: false };
+        }
+        let w = decode_weight(self.a, self.b);
+        debug_assert!(w != 0);
+        // Read port behaviour: WL_R1 senses through the W=+1 path onto BL
+        // and the W=−1 path onto BLB; WL_R2 swaps the rails.
+        let bl = (wl_r1 && w == 1) || (wl_r2 && w == -1);
+        let blb = (wl_r1 && w == -1) || (wl_r2 && w == 1);
+        TpcOutput { bl, blb }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full 3×3 product truth table of Fig 3.
+    #[test]
+    fn multiply_truth_table() {
+        for w in [-1i8, 0, 1] {
+            for i in [-1i8, 0, 1] {
+                let mut c = Tpc::new();
+                c.write_weight(w);
+                let out = c.multiply(i);
+                assert_eq!(out.value(), w * i, "W={w} I={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn never_discharges_both_bitlines() {
+        for w in [-1i8, 0, 1] {
+            for i in [-1i8, 0, 1] {
+                let mut c = Tpc::new();
+                c.write_weight(w);
+                let out = c.multiply(i);
+                assert!(!(out.bl && out.blb), "W={w} I={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut c = Tpc::new();
+        for w in [-1i8, 0, 1, 1, -1, 0] {
+            c.write_weight(w);
+            assert_eq!(c.stored(), w);
+        }
+    }
+
+    #[test]
+    fn multiplication_does_not_disturb_storage() {
+        let mut c = Tpc::new();
+        c.write_weight(-1);
+        for _ in 0..1000 {
+            c.multiply(1);
+            c.multiply(-1);
+            c.multiply(0);
+        }
+        assert_eq!(c.stored(), -1);
+    }
+
+    #[test]
+    fn default_cell_stores_zero() {
+        assert_eq!(Tpc::new().stored(), 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Ternary Processing Cell (TPC) and ternary value types.
+//!
+//! The TPC (paper §III-A, Figs 2–3) is a 10-transistor CMOS bit-cell made
+//! of two cross-coupled inverter pairs storing bits `A` and `B`, with
+//! separate write (`WL_W`, `SL1/SL2`, `BL/BLB`) and read (`WL_R1/WL_R2`)
+//! paths. It acts simultaneously as
+//!
+//! * a **ternary storage cell** — (A,B) encodes a weight W ∈ {−1, 0, +1},
+//! * a **signed ternary scalar multiplier** — applying an encoded ternary
+//!   input on the read wordlines conditionally discharges BL (product +1)
+//!   or BLB (product −1), leaving both precharged when the product is 0.
+//!
+//! This module gives the exact digital-behaviour model; the analog bitline
+//! voltages those discharges produce live in [`crate::analog`].
+
+mod cell;
+mod tritvec;
+
+pub use cell::{Tpc, TpcOutput, WriteDrive};
+pub use tritvec::{TritMatrix, TritVec};
+
+/// A signed ternary value. Only −1, 0, +1 are legal; helpers below enforce.
+pub type Trit = i8;
+
+/// Check a slice is composed solely of legal ternary values.
+pub fn assert_ternary(xs: &[Trit]) {
+    for (i, &x) in xs.iter().enumerate() {
+        assert!(
+            (-1..=1).contains(&x),
+            "non-ternary value {x} at index {i}"
+        );
+    }
+}
+
+/// Weight encoding (Fig 2, top-right table): (A,B) → W.
+///
+/// | A | B | W  |
+/// |---|---|----|
+/// | 0 | x |  0 |
+/// | 1 | 0 | +1 |
+/// | 1 | 1 | −1 |
+pub fn decode_weight(a: bool, b: bool) -> Trit {
+    match (a, b) {
+        (false, _) => 0,
+        (true, false) => 1,
+        (true, true) => -1,
+    }
+}
+
+/// Inverse of [`decode_weight`]: W → (A,B). `0` canonically stores B=0.
+pub fn encode_weight(w: Trit) -> (bool, bool) {
+    match w {
+        0 => (false, false),
+        1 => (true, false),
+        -1 => (true, true),
+        _ => panic!("non-ternary weight {w}"),
+    }
+}
+
+/// Input encoding (Fig 2, bottom-right table): I → (WL_R1, WL_R2).
+///
+/// | I  | WL_R1 | WL_R2 |
+/// |----|-------|-------|
+/// |  0 |   0   |   0   |
+/// | +1 |   1   |   0   |
+/// | −1 |   0   |   1   |
+pub fn encode_input(i: Trit) -> (bool, bool) {
+    match i {
+        0 => (false, false),
+        1 => (true, false),
+        -1 => (false, true),
+        _ => panic!("non-ternary input {i}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_encoding_roundtrips() {
+        for w in [-1i8, 0, 1] {
+            let (a, b) = encode_weight(w);
+            assert_eq!(decode_weight(a, b), w);
+        }
+    }
+
+    #[test]
+    fn a_low_means_zero_regardless_of_b() {
+        assert_eq!(decode_weight(false, false), 0);
+        assert_eq!(decode_weight(false, true), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ternary")]
+    fn rejects_out_of_range() {
+        encode_weight(2);
+    }
+
+    #[test]
+    fn assert_ternary_accepts_legal() {
+        assert_ternary(&[-1, 0, 1, 1, 0, -1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_ternary_rejects_illegal() {
+        assert_ternary(&[0, 3]);
+    }
+}

@@ -1,0 +1,254 @@
+//! Bit-packed ternary vectors and dense ternary matrices.
+//!
+//! `TritVec` packs a ternary vector into two bitmask planes (`plus`,
+//! `minus`) of `u64` words. A signed ternary dot product then reduces to
+//! four ANDs and two popcounts per word — this is the performance-critical
+//! representation used by the functional TiM-tile model (the simulator's
+//! hot path, see EXPERIMENTS.md §Perf).
+
+use super::{assert_ternary, Trit};
+
+/// A ternary vector packed as two bit-planes.
+///
+/// Invariant: `plus & minus == 0` for every word, and bits at positions
+/// `>= len` are zero in both planes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TritVec {
+    len: usize,
+    plus: Vec<u64>,
+    minus: Vec<u64>,
+}
+
+impl TritVec {
+    pub fn zeros(len: usize) -> Self {
+        let words = len.div_ceil(64);
+        Self { len, plus: vec![0; words], minus: vec![0; words] }
+    }
+
+    pub fn from_slice(xs: &[Trit]) -> Self {
+        assert_ternary(xs);
+        let mut v = Self::zeros(xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            match x {
+                1 => v.plus[i / 64] |= 1 << (i % 64),
+                -1 => v.minus[i / 64] |= 1 << (i % 64),
+                _ => {}
+            }
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> Trit {
+        assert!(i < self.len);
+        let (w, b) = (i / 64, 1u64 << (i % 64));
+        if self.plus[w] & b != 0 {
+            1
+        } else if self.minus[w] & b != 0 {
+            -1
+        } else {
+            0
+        }
+    }
+
+    pub fn set(&mut self, i: usize, x: Trit) {
+        assert!(i < self.len);
+        let (w, b) = (i / 64, 1u64 << (i % 64));
+        self.plus[w] &= !b;
+        self.minus[w] &= !b;
+        match x {
+            1 => self.plus[w] |= b,
+            -1 => self.minus[w] |= b,
+            0 => {}
+            _ => panic!("non-ternary value {x}"),
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<Trit> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    pub fn words(&self) -> (&[u64], &[u64]) {
+        (&self.plus, &self.minus)
+    }
+
+    /// Count of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.plus.iter().chain(self.minus.iter()).map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.len == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz() as f64 / self.len as f64
+    }
+
+    /// Signed ternary dot product counts: returns `(n, k)` where `n` is
+    /// the number of +1 products and `k` the number of −1 products —
+    /// exactly what the TiM bitline pair accumulates (BL ← n, BLB ← k).
+    pub fn match_counts(&self, other: &TritVec) -> (u32, u32) {
+        assert_eq!(self.len, other.len, "dot of mismatched lengths");
+        let mut n = 0u32;
+        let mut k = 0u32;
+        for w in 0..self.plus.len() {
+            let (ap, am) = (self.plus[w], self.minus[w]);
+            let (bp, bm) = (other.plus[w], other.minus[w]);
+            n += ((ap & bp) | (am & bm)).count_ones();
+            k += ((ap & bm) | (am & bp)).count_ones();
+        }
+        (n, k)
+    }
+
+    /// Exact signed dot product (no ADC clipping): n − k.
+    pub fn dot(&self, other: &TritVec) -> i32 {
+        let (n, k) = self.match_counts(other);
+        n as i32 - k as i32
+    }
+}
+
+/// Dense ternary matrix, row-major. Used by the quantizers, the mapper and
+/// as the source from which tile blocks are loaded (column-packed there).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TritMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<Trit>,
+}
+
+impl TritMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Trit>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        assert_ternary(&data);
+        Self { rows, cols, data }
+    }
+
+    /// Random ternary matrix with the given zero probability.
+    pub fn random(rows: usize, cols: usize, p_zero: f64, rng: &mut crate::util::prng::Rng) -> Self {
+        Self { rows, cols, data: rng.trit_vec(rows * cols, p_zero) }
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> Trit {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, x: Trit) {
+        assert!((-1..=1).contains(&x));
+        self.data[r * self.cols + c] = x;
+    }
+
+    pub fn row(&self, r: usize) -> &[Trit] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col_vec(&self, c: usize) -> Vec<Trit> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    pub fn data(&self) -> &[Trit] {
+        &self.data
+    }
+
+    /// Fraction of zero entries (the paper leans on ≥40 % weight sparsity).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 1.0;
+        }
+        self.data.iter().filter(|&&x| x == 0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Exact (infinite-precision) ternary VMM `x · W` for an input of
+    /// length `rows`, producing `cols` outputs. Reference for tile tests.
+    pub fn vmm_exact(&self, x: &[Trit]) -> Vec<i32> {
+        assert_eq!(x.len(), self.rows);
+        assert_ternary(x);
+        let mut out = vec![0i32; self.cols];
+        for r in 0..self.rows {
+            let xv = x[r] as i32;
+            if xv == 0 {
+                continue;
+            }
+            let row = self.row(r);
+            for c in 0..self.cols {
+                out[c] += xv * row[c] as i32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pack_roundtrip() {
+        let xs: Vec<Trit> = vec![1, -1, 0, 0, 1, -1, 1, 0, -1];
+        let v = TritVec::from_slice(&xs);
+        assert_eq!(v.to_vec(), xs);
+        assert_eq!(v.len(), 9);
+        assert_eq!(v.nnz(), 6);
+    }
+
+    #[test]
+    fn pack_roundtrip_across_word_boundary() {
+        let mut rng = Rng::seeded(2);
+        let xs = rng.trit_vec(193, 0.3);
+        let v = TritVec::from_slice(&xs);
+        assert_eq!(v.to_vec(), xs);
+    }
+
+    #[test]
+    fn set_overwrites() {
+        let mut v = TritVec::zeros(10);
+        v.set(3, 1);
+        v.set(3, -1);
+        assert_eq!(v.get(3), -1);
+        v.set(3, 0);
+        assert_eq!(v.get(3), 0);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::seeded(4);
+        for _ in 0..50 {
+            let len = rng.range_usize(1, 300);
+            let a = rng.trit_vec(len, 0.4);
+            let b = rng.trit_vec(len, 0.4);
+            let naive: i32 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as i32).sum();
+            let va = TritVec::from_slice(&a);
+            let vb = TritVec::from_slice(&b);
+            assert_eq!(va.dot(&vb), naive);
+            let (n, k) = va.match_counts(&vb);
+            let n_naive = a.iter().zip(&b).filter(|(&x, &y)| x * y == 1).count() as u32;
+            let k_naive = a.iter().zip(&b).filter(|(&x, &y)| x * y == -1).count() as u32;
+            assert_eq!((n, k), (n_naive, k_naive));
+        }
+    }
+
+    #[test]
+    fn matrix_vmm_exact_small() {
+        // W = [[1,-1],[0,1],[-1,0]] ; x = [1,-1,1] -> x·W = [1-0-1, -1-1+0] = [0,-2]
+        let w = TritMatrix::from_vec(3, 2, vec![1, -1, 0, 1, -1, 0]);
+        assert_eq!(w.vmm_exact(&[1, -1, 1]), vec![0, -2]);
+    }
+
+    #[test]
+    fn matrix_sparsity() {
+        let w = TritMatrix::from_vec(2, 2, vec![0, 1, 0, -1]);
+        assert!((w.sparsity() - 0.5).abs() < 1e-12);
+    }
+}

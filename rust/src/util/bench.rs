@@ -1,0 +1,100 @@
+//! Criterion-style micro-benchmark harness (the offline environment has no
+//! `criterion` crate). Provides warmup, adaptive iteration counts, and
+//! mean/median/p95 reporting, plus a `black_box` to defeat constant folding.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// Prevent the optimizer from eliding a value (same trick criterion uses).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} iters {:>8}  mean {:>12?}  median {:>12?}  p95 {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95
+        );
+    }
+
+    /// Throughput helper: items per second given items-per-iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: ~`warmup` of warmup then enough samples to cover
+/// `measure` wall time (at least 10 samples).
+pub fn bench<F: FnMut()>(name: &str, warmup: Duration, measure: Duration, mut f: F) -> BenchResult {
+    // Warmup and estimate per-iter cost.
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warmup.as_secs_f64() / warm_iters.max(1) as f64;
+    // Batch iterations so each sample is >= ~50us (timer noise floor).
+    let batch = ((50e-6 / per_iter).ceil() as u64).max(1);
+    let target_samples = ((measure.as_secs_f64() / (per_iter * batch as f64)).ceil() as u64)
+        .clamp(10, 100_000);
+
+    let mut samples = Vec::with_capacity(target_samples as usize);
+    for _ in 0..target_samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    let secs: Vec<f64> = samples.clone();
+    let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: target_samples * batch,
+        mean: Duration::from_secs_f64(mean),
+        median: Duration::from_secs_f64(percentile(&secs, 50.0)),
+        p95: Duration::from_secs_f64(percentile(&secs, 95.0)),
+    };
+    res.report();
+    res
+}
+
+/// Short-form bench with defaults suitable for `cargo bench` targets.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_millis(200), Duration::from_millis(600), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let r = bench(
+            "noop-ish",
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            || {
+                acc = black_box(acc.wrapping_add(1));
+            },
+        );
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p95 >= r.median);
+    }
+}

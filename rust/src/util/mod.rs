@@ -1,0 +1,19 @@
+//! Self-contained utilities.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `criterion`, `proptest`, `clap`, `serde`) are unavailable.
+//! This module provides small, deterministic, well-tested replacements:
+//!
+//! * [`prng`] — SplitMix64 / xoshiro256** PRNG + Gaussian sampling,
+//! * [`stats`] — summary statistics, percentiles, histograms,
+//! * [`table`] — ASCII table rendering for the paper-table benches,
+//! * [`cli`] — a tiny `--flag value` argument parser,
+//! * [`bench`] — a criterion-style micro-benchmark harness,
+//! * [`prop`] — a lightweight randomized property-test harness.
+
+pub mod bench;
+pub mod cli;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,65 @@
+//! A lightweight randomized property-test harness (the offline environment
+//! has no `proptest`). Each property runs `cases` random cases from a
+//! deterministic seed; on failure the seed and case index are printed so
+//! the exact case can be replayed. `TIMDNN_PROP_CASES` scales case counts
+//! up for soak runs.
+
+use super::prng::Rng;
+
+/// Number of cases per property (overridable via env for soak testing).
+pub fn default_cases() -> u64 {
+    std::env::var("TIMDNN_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop(rng, case_index)`; panics with a replayable message on failure.
+pub fn check<F: FnMut(&mut Rng, u64)>(name: &str, seed: u64, mut prop: F) {
+    let cases = default_cases();
+    for case in 0..cases {
+        // Each case gets an independent, replayable stream.
+        let mut rng = Rng::seeded(seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed={seed}): {msg}\n\
+                 replay: seed ^ (case * 0x9E3779B97F4A7C15)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 1, |rng, _| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 7, |_, _| panic!("boom"));
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed=7"), "msg={msg}");
+        assert!(msg.contains("always-fails"));
+    }
+}

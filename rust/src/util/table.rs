@@ -1,0 +1,118 @@
+//! ASCII table rendering for the paper-table/figure benches.
+//!
+//! Every `benches/tableXX_*.rs` / `benches/figXX_*.rs` target prints the
+//! same rows the paper reports using this renderer, so the regenerated
+//! output is directly comparable to the published table.
+
+/// A simple column-aligned table with a title and optional footnote.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub footnotes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            footnotes: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    pub fn footnote(&mut self, note: &str) -> &mut Self {
+        self.footnotes.push(note.to_string());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncols)
+                .map(|i| format!(" {:<w$} ", cells[i], w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        for note in &self.footnotes {
+            out.push_str(&format!("  * {note}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with engineering-style significant digits (for table cells).
+pub fn sig(x: f64, digits: usize) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["1", "2"]);
+        t.row(&["333", "4"]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("a"));
+        // all data lines same length
+        let lines: Vec<&str> = r.lines().skip(1).take(4).collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["1"]);
+    }
+
+    #[test]
+    fn sig_digits() {
+        assert_eq!(sig(123.456, 3), "123");
+        assert_eq!(sig(0.0123456, 3), "0.0123");
+        assert_eq!(sig(1.5e-4, 2), "0.00015");
+        assert_eq!(sig(0.0, 3), "0");
+    }
+}

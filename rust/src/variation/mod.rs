@@ -1,0 +1,249 @@
+//! Monte-Carlo process-variation study (paper §V-F, Figs 17–18, Eq. 1).
+//!
+//! Reproduces the paper's three-step analysis:
+//!
+//! 1. **Per-state V_BL spread** — sample the final bitline voltage for each
+//!    state S_n under V_T variation (σ/μ = 5 %) and histogram it (Fig 17).
+//! 2. **Conditional sensing-error probability** P_SE(SE|n) — how often the
+//!    flash ADC decodes a state other than n (Fig 18, left axis); the
+//!    error magnitude is always ±1 because only adjacent histograms
+//!    overlap.
+//! 3. **State occupancy** P_n — from partial-sum traces of ternary
+//!    workloads running on the functional tile model, weighted into the
+//!    total error probability P_E = Σₙ P_SE(SE|n)·P_n (Eq. 1), which the
+//!    paper reports as ≈ 1.5×10⁻⁴.
+//!
+//! The same machinery injects sensing errors into functional inference to
+//! confirm the paper's claim that P_E has no accuracy impact.
+
+use crate::analog::{sample_bl_voltage, Adc, BitlineCurve};
+use crate::energy::constants::{N_MAX, TILE_L};
+use crate::tile::{TimTile, TileConfig, VmmMode};
+use crate::tpc::TritMatrix;
+use crate::util::prng::Rng;
+use crate::util::stats::Histogram;
+
+/// Monte-Carlo engine for the variation study.
+pub struct VariationStudy {
+    pub curve: BitlineCurve,
+    pub adc: Adc,
+    pub n_max: u32,
+}
+
+impl VariationStudy {
+    pub fn paper() -> Self {
+        let curve = BitlineCurve::calibrated();
+        let adc = Adc::for_curve(&curve, N_MAX);
+        Self { curve, adc, n_max: N_MAX }
+    }
+
+    /// Fig 17: per-state V_BL histograms. Returns one histogram per state
+    /// S_0..S_n_max, each over `samples` Monte-Carlo samples.
+    pub fn bl_histograms(&self, samples: usize, rng: &mut Rng) -> Vec<Histogram> {
+        (0..=self.n_max)
+            .map(|n| {
+                let mut h = Histogram::new(0.0, 0.95, 190); // 5 mV bins
+                for _ in 0..samples {
+                    h.push(sample_bl_voltage(&self.curve, n, rng));
+                }
+                h
+            })
+            .collect()
+    }
+
+    /// Fig 18 (left): conditional sensing-error probability P_SE(SE|n),
+    /// estimated over `samples` Monte-Carlo trials per state.
+    pub fn sensing_error_prob(&self, samples: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..=self.n_max)
+            .map(|n| {
+                let errors = (0..samples)
+                    .filter(|_| {
+                        let v = sample_bl_voltage(&self.curve, n, rng);
+                        self.adc.decode_noisy(v, rng) != n
+                    })
+                    .count();
+                errors as f64 / samples as f64
+            })
+            .collect()
+    }
+
+    /// Magnitude distribution of sensing errors for state `n`: returns
+    /// (p_minus_1, p_plus_1, p_other). The paper observes p_other ≈ 0.
+    pub fn error_magnitudes(&self, n: u32, samples: usize, rng: &mut Rng) -> (f64, f64, f64) {
+        let (mut m1, mut p1, mut other) = (0u64, 0u64, 0u64);
+        for _ in 0..samples {
+            let v = sample_bl_voltage(&self.curve, n, rng);
+            let d = self.adc.decode_noisy(v, rng);
+            match d as i64 - n as i64 {
+                0 => {}
+                -1 => m1 += 1,
+                1 => p1 += 1,
+                _ => other += 1,
+            }
+        }
+        let s = samples as f64;
+        (m1 as f64 / s, p1 as f64 / s, other as f64 / s)
+    }
+
+    /// Fig 18 (right): state-occupancy P_n from partial-sum traces of a
+    /// ternary workload running on the functional tile model. Weights and
+    /// inputs are drawn at the paper's ≥40 % sparsity; every column of
+    /// every block access contributes two samples (BL count n and BLB
+    /// count k — the lines are symmetric).
+    pub fn state_occupancy(
+        &self,
+        accesses: usize,
+        weight_sparsity: f64,
+        input_sparsity: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        let cfg = TileConfig { l: TILE_L, k: 1, n: 64, m: 8, n_max: self.n_max };
+        let mut counts = vec![0u64; (self.n_max + 1) as usize];
+        let mut total = 0u64;
+        for _ in 0..accesses {
+            let w = TritMatrix::random(cfg.l, cfg.n, weight_sparsity, rng);
+            let mut tile = TimTile::new(cfg);
+            tile.load_weights(&w);
+            let x = rng.trit_vec(cfg.l, input_sparsity);
+            let res = tile.vmm_block(0, &x, &mut VmmMode::Ideal);
+            for &(n, k) in &res.counts {
+                counts[n as usize] += 1;
+                counts[k as usize] += 1;
+                total += 2;
+            }
+        }
+        counts.iter().map(|&c| c as f64 / total as f64).collect()
+    }
+
+    /// Eq. 1: P_E = Σₙ P_SE(SE|n) · P_n.
+    pub fn total_error_prob(&self, p_se: &[f64], p_n: &[f64]) -> f64 {
+        assert_eq!(p_se.len(), p_n.len());
+        p_se.iter().zip(p_n).map(|(a, b)| a * b).sum()
+    }
+
+    /// Run the full §V-F pipeline with the paper's parameters and return
+    /// (P_SE(SE|n), P_n, P_E). Trace sparsity is 55 % — the paper states
+    /// "40 % or more of the weights and inputs are zeros", and the WRPN /
+    /// HitNet checkpoints it samples sit in the 50–60 % range, which is
+    /// also what makes P_n peak at n = 1 as Fig 18 shows.
+    pub fn run_paper_study(
+        &self,
+        mc_samples: usize,
+        trace_accesses: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f64>, Vec<f64>, f64) {
+        let p_se = self.sensing_error_prob(mc_samples, rng);
+        let p_n = self.state_occupancy(trace_accesses, 0.55, 0.55, rng);
+        let p_e = self.total_error_prob(&p_se, &p_n);
+        (p_se, p_n, p_e)
+    }
+}
+
+/// Inject sensing errors into an exact count with the measured conditional
+/// error probabilities (error injection for application-accuracy studies).
+pub fn inject_error(n: u32, p_se: &[f64], n_max: u32, rng: &mut Rng) -> u32 {
+    let p = p_se.get(n as usize).copied().unwrap_or(0.0);
+    if rng.chance(p) {
+        // Magnitude is ±1; direction towards the closer overlapping state.
+        if n == 0 || (n < n_max && rng.chance(0.5)) {
+            n + 1
+        } else {
+            n - 1
+        }
+    } else {
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_states_never_err_high_states_sometimes() {
+        // Fig 17: "the histograms for S7 and S8 overlap but those for S1
+        // and S2 do not".
+        let study = VariationStudy::paper();
+        let mut rng = Rng::seeded(1001);
+        let p_se = study.sensing_error_prob(20_000, &mut rng);
+        assert!(p_se[1] < 1e-4, "P_SE(1)={}", p_se[1]);
+        assert!(p_se[2] < 1e-3, "P_SE(2)={}", p_se[2]);
+        assert!(p_se[7] > 1e-4, "P_SE(7)={}", p_se[7]);
+        assert!(p_se[8] > p_se[2], "P_SE(8)={} P_SE(2)={}", p_se[8], p_se[2]);
+    }
+
+    #[test]
+    fn p_se_grows_with_n() {
+        // Fig 18: "P_SE(SE|n) … the probability of sensing error is higher
+        // for larger n" — check the trend over a coarse split.
+        let study = VariationStudy::paper();
+        let mut rng = Rng::seeded(1002);
+        let p_se = study.sensing_error_prob(20_000, &mut rng);
+        let low: f64 = p_se[0..4].iter().sum();
+        let high: f64 = p_se[5..9].iter().sum();
+        assert!(high > 10.0 * low, "low={low} high={high}");
+    }
+
+    #[test]
+    fn error_magnitude_is_plus_minus_one() {
+        // §V-F: "the error magnitude is always ±1".
+        let study = VariationStudy::paper();
+        let mut rng = Rng::seeded(1003);
+        for n in 0..=8 {
+            let (_, _, other) = study.error_magnitudes(n, 20_000, &mut rng);
+            assert_eq!(other, 0.0, "state {n} has |err| > 1");
+        }
+    }
+
+    #[test]
+    fn occupancy_peaks_at_low_n() {
+        // Fig 18: "P_n is maximum at n=1 and drastically decreases with
+        // higher values of n" (n=0 excluded: the figure plots the error-
+        // relevant states; our trace includes n=0 which dominates).
+        let study = VariationStudy::paper();
+        let mut rng = Rng::seeded(1004);
+        let p_n = study.state_occupancy(300, 0.4, 0.4, &mut rng);
+        let nonzero_peak =
+            (1..=8).max_by(|&a, &b| p_n[a].partial_cmp(&p_n[b]).unwrap()).unwrap();
+        assert!(nonzero_peak <= 3, "peak at n={nonzero_peak}, p_n={p_n:?}");
+        assert!(p_n[8] < p_n[1] / 20.0, "p_n={p_n:?}");
+        let sum: f64 = p_n.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_error_prob_matches_paper_order() {
+        // §V-F: "P_E is found to be 1.5×10⁻⁴" — same order of magnitude.
+        let study = VariationStudy::paper();
+        let mut rng = Rng::seeded(1005);
+        let (_, _, p_e) = study.run_paper_study(30_000, 300, &mut rng);
+        // Same order of magnitude as the paper's 1.5e-4 (the exact value
+        // is sharply sensitive to the trace sparsity; EXPERIMENTS.md
+        // reports the sweep).
+        assert!(
+            (1e-5..6e-4).contains(&p_e),
+            "P_E={p_e:e} (paper: 1.5e-4)"
+        );
+    }
+
+    #[test]
+    fn inject_error_respects_probability() {
+        let mut rng = Rng::seeded(1006);
+        let p_se = vec![0.0, 0.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let flips = (0..10_000).filter(|_| inject_error(1, &p_se, 8, &mut rng) != 1).count();
+        assert!((flips as f64 / 10_000.0 - 0.5).abs() < 0.03);
+        // Zero-probability states never flip.
+        assert_eq!(inject_error(3, &p_se, 8, &mut rng), 3);
+    }
+
+    #[test]
+    fn histograms_have_all_samples() {
+        let study = VariationStudy::paper();
+        let mut rng = Rng::seeded(1007);
+        let hists = study.bl_histograms(500, &mut rng);
+        assert_eq!(hists.len(), 9);
+        for h in &hists {
+            assert_eq!(h.total(), 500);
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration: the rust-native functional accelerator (arch::functional)
+//! running the trained TiMNet on real hardware models — the vehicle for
+//! the paper's §V-F "no accuracy impact" claim and the §III-B n_max
+//! choice. Skips when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use timdnn::arch::functional::{read_eval_set, TimNetAccelerator, TimNetWeights};
+use timdnn::energy::constants::{N_MAX, N_MAX_CONSERVATIVE};
+use timdnn::runtime::artifacts_dir;
+use timdnn::tile::{TileConfig, VmmMode};
+use timdnn::util::prng::Rng;
+
+fn load() -> Option<(TimNetWeights, Vec<Vec<f32>>, Vec<u32>)> {
+    let dir: PathBuf = artifacts_dir();
+    let wpath = dir.join("timnet_weights.bin");
+    let epath = dir.join("eval_set.bin");
+    if !wpath.exists() || !epath.exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    let weights = TimNetWeights::load(&wpath).expect("weights");
+    let (images, labels) = read_eval_set(&epath).expect("eval set");
+    Some((weights, images, labels))
+}
+
+fn accuracy(preds: &[usize], labels: &[u32]) -> f64 {
+    preds.iter().zip(labels).filter(|(&p, &l)| p as u32 == l).count() as f64
+        / preds.len() as f64
+}
+
+#[test]
+fn rust_native_inference_matches_trained_accuracy() {
+    let Some((weights, images, labels)) = load() else { return };
+    let mut acc_machine = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let preds = acc_machine.classify(&images[..128], &mut VmmMode::Ideal);
+    let acc = accuracy(&preds, &labels[..128]);
+    assert!(acc >= 0.95, "rust-native accuracy {acc}");
+}
+
+#[test]
+fn variation_noise_has_no_accuracy_impact() {
+    // §V-F: P_E ≈ 1e-4 sensing errors do not change DNN accuracy.
+    let Some((weights, images, labels)) = load() else { return };
+    let mut acc_machine = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let ideal = acc_machine.classify(&images[..96], &mut VmmMode::Ideal);
+    let mut rng = Rng::seeded(555);
+    let noisy = acc_machine.classify(&images[..96], &mut VmmMode::AnalogNoisy(&mut rng));
+    let acc_ideal = accuracy(&ideal, &labels[..96]);
+    let acc_noisy = accuracy(&noisy, &labels[..96]);
+    assert!(
+        (acc_ideal - acc_noisy).abs() <= 0.02,
+        "ideal {acc_ideal} vs noisy {acc_noisy}"
+    );
+    assert!(acc_noisy >= 0.93);
+}
+
+#[test]
+fn nmax8_matches_conservative_nmax10() {
+    // §III-B: "Our experiments indicate that this choice [n_max = 8,
+    // L = 16] has no impact on DNN accuracy compared to the conservative
+    // case [n_max = 10]."
+    let Some((weights, images, labels)) = load() else { return };
+    let mut cfg8 = TileConfig::paper();
+    cfg8.n_max = N_MAX;
+    let mut cfg10 = TileConfig::paper();
+    cfg10.n_max = N_MAX_CONSERVATIVE;
+    let preds8 =
+        TimNetAccelerator::new(&weights, cfg8).classify(&images[..96], &mut VmmMode::Ideal);
+    let preds10 =
+        TimNetAccelerator::new(&weights, cfg10).classify(&images[..96], &mut VmmMode::Ideal);
+    let a8 = accuracy(&preds8, &labels[..96]);
+    let a10 = accuracy(&preds10, &labels[..96]);
+    assert!((a8 - a10).abs() <= 0.02, "n_max=8: {a8}, n_max=10: {a10}");
+}
+
+#[test]
+fn functional_accelerator_agrees_with_pjrt_artifact() {
+    // The rust-native hardware model and the AOT-compiled JAX/Pallas
+    // artifact must make the same predictions (same arithmetic, two
+    // implementations — float-epilogue rounding may differ, so compare
+    // argmax rather than raw logits).
+    let Some((weights, images, labels)) = load() else { return };
+    let dir = artifacts_dir();
+    if !dir.join("tiny_cnn_b1.hlo.txt").exists() {
+        eprintln!("SKIP: tiny_cnn_b1 artifact missing");
+        return;
+    }
+    let mut rt = timdnn::runtime::Runtime::cpu().expect("PJRT");
+    rt.load("tiny_cnn_b1", &dir.join("tiny_cnn_b1.hlo.txt")).unwrap();
+    let mut acc_machine = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let mut agree = 0;
+    let n = 48;
+    for img in &images[..n] {
+        let rust_logits = acc_machine.forward(img, &mut VmmMode::Ideal);
+        let rust_pred = rust_logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let out = rt
+            .execute(
+                "tiny_cnn_b1",
+                &[timdnn::runtime::TensorF32::new(vec![1, 16, 16, 1], img.clone())],
+            )
+            .unwrap();
+        let pjrt_pred = out[0]
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if rust_pred == pjrt_pred {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 / n as f64 >= 0.95, "agreement {agree}/{n}");
+    let _ = labels;
+}

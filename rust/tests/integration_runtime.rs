@@ -1,0 +1,128 @@
+//! Integration across the three layers: the AOT artifacts produced by
+//! python (Pallas kernel → HLO text) executed through the rust PJRT
+//! runtime, cross-checked against the rust functional tile model.
+//!
+//! These tests require `make artifacts`; they SKIP (not fail) when the
+//! artifacts are absent so `cargo test` works in a fresh checkout.
+
+use timdnn::quant::TernarySystem;
+use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
+use timdnn::tile::{TileConfig, TimTile, VmmMode};
+use timdnn::tpc::TritMatrix;
+use timdnn::util::prng::Rng;
+
+fn runtime_with(artifact: &str) -> Option<Runtime> {
+    let dir = artifacts_dir();
+    let path = dir.join(format!("{artifact}.hlo.txt"));
+    if !path.exists() {
+        eprintln!("SKIP: {} missing — run `make artifacts`", path.display());
+        return None;
+    }
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    rt.load(artifact, &path).expect("load artifact");
+    Some(rt)
+}
+
+/// The cross-layer correctness anchor: Pallas kernel (via PJRT) must agree
+/// with the rust TiM-tile functional model bit-for-bit, including ADC
+/// clipping, across random ternary data.
+#[test]
+fn pallas_kernel_matches_rust_tile_model() {
+    let Some(rt) = runtime_with("ternary_vmm") else { return };
+    let mut rng = Rng::seeded(77);
+    for trial in 0..5 {
+        // Vary sparsity per trial — denser data exercises clipping.
+        let p_zero = [0.0, 0.2, 0.4, 0.6, 0.9][trial];
+        let w = TritMatrix::random(256, 256, p_zero, &mut rng);
+        let x = rng.trit_vec(256, p_zero);
+
+        let mut tile = TimTile::new(TileConfig::paper());
+        tile.load_weights(&w);
+        let want = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+
+        let x_f: Vec<f32> = x.iter().map(|&t| t as f32).collect();
+        let w_f: Vec<f32> = w.data().iter().map(|&t| t as f32).collect();
+        let out = rt
+            .execute(
+                "ternary_vmm",
+                &[TensorF32::new(vec![256], x_f), TensorF32::new(vec![256, 256], w_f)],
+            )
+            .expect("execute");
+        let counts = &out[0];
+        assert_eq!(counts.shape, vec![2, 256]);
+        for c in 0..256 {
+            let got = counts.data[c] - counts.data[256 + c];
+            assert_eq!(got, want[c], "trial {trial} col {c}");
+        }
+    }
+}
+
+/// The TiMNet artifact must classify deterministically and match between
+/// batch-1 and batch-8 compilations.
+#[test]
+fn timnet_batch_variants_agree() {
+    let Some(mut rt) = runtime_with("tiny_cnn_b1") else { return };
+    let dir = artifacts_dir();
+    let b8 = dir.join("tiny_cnn_b8.hlo.txt");
+    if !b8.exists() {
+        eprintln!("SKIP: tiny_cnn_b8 missing");
+        return;
+    }
+    rt.load("tiny_cnn_b8", &b8).unwrap();
+
+    let mut rng = Rng::seeded(5);
+    let imgs: Vec<Vec<f32>> =
+        (0..8).map(|_| (0..256).map(|_| rng.next_f32()).collect()).collect();
+
+    // batch-8 run
+    let mut flat = Vec::with_capacity(8 * 256);
+    for img in &imgs {
+        flat.extend_from_slice(img);
+    }
+    let out8 = rt
+        .execute("tiny_cnn_b8", &[TensorF32::new(vec![8, 16, 16, 1], flat)])
+        .expect("b8");
+    let logits8 = &out8[0];
+    assert_eq!(logits8.shape, vec![8, 10]);
+
+    // batch-1 runs must reproduce each row exactly (same baked weights,
+    // same integer arithmetic).
+    for (i, img) in imgs.iter().enumerate() {
+        let out1 = rt
+            .execute("tiny_cnn_b1", &[TensorF32::new(vec![1, 16, 16, 1], img.clone())])
+            .expect("b1");
+        let row = &logits8.data[i * 10..(i + 1) * 10];
+        assert_eq!(out1[0].data.as_slice(), row, "sample {i}");
+    }
+}
+
+/// The LSTM-cell artifact: ternary hidden state, deterministic, and the
+/// cell state evolves (not a constant function).
+#[test]
+fn lstm_cell_artifact_behaves() {
+    let Some(rt) = runtime_with("lstm_cell") else { return };
+    let h0 = TensorF32::new(vec![300], vec![0.0; 300]);
+    let mut rng = Rng::seeded(9);
+    let x: Vec<f32> = (0..300).map(|_| rng.trit_sparse(0.4) as f32).collect();
+    let xt = TensorF32::new(vec![300], x);
+
+    let out1 = rt.execute("lstm_cell", &[xt.clone(), h0.clone(), h0.clone()]).unwrap();
+    let out2 = rt.execute("lstm_cell", &[xt.clone(), h0.clone(), h0.clone()]).unwrap();
+    assert_eq!(out1[0], out2[0], "deterministic h");
+    assert_eq!(out1[1], out2[1], "deterministic c");
+    assert!(out1[0].data.iter().all(|&v| v == -1.0 || v == 0.0 || v == 1.0));
+    assert!(out1[1].data.iter().any(|&v| v != 0.0), "cell state must move");
+
+    // Feeding the new state back must change the output (stateful).
+    let out3 = rt.execute("lstm_cell", &[xt, out1[0].clone(), out1[1].clone()]).unwrap();
+    assert_ne!(out3[1], out1[1]);
+}
+
+/// Runtime error paths are actionable.
+#[test]
+fn unknown_artifact_is_actionable() {
+    let Some(rt) = runtime_with("ternary_vmm") else { return };
+    let err = rt.execute("nonexistent", &[]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not loaded"), "{msg}");
+}

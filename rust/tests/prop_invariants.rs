@@ -1,0 +1,170 @@
+//! Property-based invariants over the coordinator-facing core: routing
+//! (mapper), batching arithmetic (tile), and state management (TPC array,
+//! quantizers). Uses the in-repo randomized harness (`util::prop`) — the
+//! offline environment has no proptest.
+
+use timdnn::arch::ArchConfig;
+use timdnn::mapper::map_layer;
+use timdnn::model::VmmShape;
+use timdnn::quant::{ternarize_asymmetric, ternarize_symmetric, TernarySystem};
+use timdnn::tile::{TileConfig, TimTile, VmmMode};
+use timdnn::tpc::{Tpc, TritMatrix, TritVec};
+use timdnn::util::prop::check;
+
+#[test]
+fn prop_tritvec_roundtrip_and_dot() {
+    check("tritvec-roundtrip-dot", 101, |rng, _| {
+        let len = rng.range_usize(1, 500);
+        let (pa, pb) = (rng.next_f64(), rng.next_f64());
+        let a = rng.trit_vec(len, pa);
+        let b = rng.trit_vec(len, pb);
+        let va = TritVec::from_slice(&a);
+        let vb = TritVec::from_slice(&b);
+        assert_eq!(va.to_vec(), a);
+        let naive: i32 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as i32).sum();
+        assert_eq!(va.dot(&vb), naive);
+    });
+}
+
+#[test]
+fn prop_tpc_multiply_is_signed_product() {
+    check("tpc-multiply", 102, |rng, _| {
+        let w = rng.trit_sparse(0.3);
+        let i = rng.trit_sparse(0.3);
+        let mut cell = Tpc::new();
+        cell.write_weight(w);
+        assert_eq!(cell.multiply(i).value(), w * i);
+        assert_eq!(cell.stored(), w);
+    });
+}
+
+#[test]
+fn prop_tile_vmm_equals_clipped_reference() {
+    check("tile-vmm-clipped-ref", 103, |rng, _| {
+        let cfg = TileConfig { l: 16, k: 4, n: 24, m: 8, n_max: 8 };
+        let rows = 16 * rng.range_usize(1, 4);
+        let (pw, px) = (rng.next_f64(), rng.next_f64());
+        let w = TritMatrix::random(rows, cfg.n, pw, rng);
+        let x = rng.trit_vec(rows, px);
+        let mut tile = TimTile::new(cfg);
+        tile.load_weights(&w);
+        let got = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        for c in 0..cfg.n {
+            let mut want = 0i32;
+            for b in 0..rows / 16 {
+                let (mut n, mut k) = (0u32, 0u32);
+                for r in 0..16 {
+                    match (w.get(b * 16 + r, c) as i32) * (x[b * 16 + r] as i32) {
+                        1 => n += 1,
+                        -1 => k += 1,
+                        _ => {}
+                    }
+                }
+                want += n.min(8) as i32 - k.min(8) as i32;
+            }
+            assert_eq!(got[c] as i32, want, "col {c}");
+        }
+    });
+}
+
+#[test]
+fn prop_tile_vmm_bounded_by_nmax_times_blocks() {
+    check("tile-vmm-bounds", 104, |rng, _| {
+        let cfg = TileConfig { l: 16, k: 4, n: 16, m: 8, n_max: 8 };
+        let rows = 64;
+        let w = TritMatrix::random(rows, cfg.n, 0.1, rng);
+        let x = rng.trit_vec(rows, 0.1);
+        let mut tile = TimTile::new(cfg);
+        tile.load_weights(&w);
+        let out = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        let bound = (8 * (rows / 16)) as f32;
+        for v in out {
+            assert!(v.abs() <= bound, "|{v}| > {bound}");
+        }
+    });
+}
+
+#[test]
+fn prop_analog_equals_ideal_without_noise() {
+    check("analog-vs-ideal", 105, |rng, _| {
+        let cfg = TileConfig { l: 16, k: 2, n: 16, m: 4, n_max: 8 };
+        let (pw, px) = (rng.next_f64(), rng.next_f64());
+        let w = TritMatrix::random(32, 16, pw, rng);
+        let x = rng.trit_vec(32, px);
+        let mut tile = TimTile::new(cfg);
+        tile.load_weights(&w);
+        let a = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        let b = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Analog);
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_mapper_conserves_work() {
+    // Routing invariant: accesses = blocks × positions × passes; blocks
+    // cover the matrix exactly; tiles_used never exceeds the machine.
+    check("mapper-conservation", 106, |rng, _| {
+        let arch = ArchConfig::tim_dnn();
+        let rows = rng.range_usize(1, 5000);
+        let shape = VmmShape {
+            rows,
+            cols: rng.range_usize(1, 3000),
+            positions: rng.range_usize(1, 200),
+            unique_inputs: rows,
+        };
+        let passes = if rng.chance(0.5) { 1 } else { 2 };
+        let m = map_layer("p", shape, passes, rng.chance(0.25), &arch);
+        assert_eq!(m.blocks, m.row_tiles * m.col_tiles);
+        assert!(m.row_tiles * arch.tile.l >= shape.rows);
+        assert!((m.row_tiles - 1) * arch.tile.l < shape.rows);
+        assert!(m.col_tiles * arch.tile.n >= shape.cols);
+        assert_eq!(
+            m.accesses,
+            (m.blocks * shape.positions) as u64 * m.passes as u64
+        );
+        assert!(m.tiles_used >= 1 && m.tiles_used <= arch.tiles);
+        assert!(m.replication >= 1);
+        assert!(m.steps >= 1);
+        // Either it fits in one step, or there is no replication.
+        assert!(m.steps == 1 || m.replication == 1);
+    });
+}
+
+#[test]
+fn prop_quantizers_preserve_sign_and_sparsify() {
+    check("quantizer-signs", 107, |rng, _| {
+        let n = rng.range_usize(8, 2000);
+        let xs: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        for t in [ternarize_symmetric(&xs), ternarize_asymmetric(&xs)] {
+            let deq = t.dequantize();
+            for (x, d) in xs.iter().zip(&deq) {
+                assert!(
+                    *d == 0.0 || (d.signum() == x.signum()),
+                    "sign flipped: x={x} d={d}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_state_write_any_order_readback() {
+    // State management: interleaved row writes land in the right cells
+    // regardless of order.
+    check("tile-write-order", 108, |rng, _| {
+        let cfg = TileConfig { l: 16, k: 2, n: 8, m: 2, n_max: 8 };
+        let mut tile = TimTile::new(cfg);
+        let mut shadow = vec![vec![0i8; 8]; 32];
+        for _ in 0..50 {
+            let row = rng.range_usize(0, 31);
+            let words = rng.trit_vec(8, 0.5);
+            tile.write_row(row, &words);
+            shadow[row] = words;
+        }
+        for r in 0..32 {
+            for c in 0..8 {
+                assert_eq!(tile.stored(r, c), shadow[r][c], "({r},{c})");
+            }
+        }
+    });
+}
