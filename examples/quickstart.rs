@@ -17,7 +17,7 @@ use timdnn::tile::{TileConfig, TimTile, VmmMode};
 use timdnn::tpc::TritMatrix;
 use timdnn::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> timdnn::Result<()> {
     let mut rng = Rng::seeded(42);
 
     // A full tile's worth of ternary weights at the paper's sparsity.
@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- cross-layer check via PJRT ---------------------------------------
     let dir = artifacts_dir();
-    if dir.join("ternary_vmm.hlo.txt").exists() {
+    if cfg!(feature = "pjrt") && dir.join("ternary_vmm.hlo.txt").exists() {
         let mut rt = Runtime::cpu()?;
         rt.load("ternary_vmm", &dir.join("ternary_vmm.hlo.txt"))?;
         let x_f: Vec<f32> = x.iter().map(|&t| t as f32).collect();
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(kernel_out, ideal, "Pallas kernel != rust tile model");
         println!("  PJRT Pallas kernel == rust tile model across all 256 columns: OK");
     } else {
-        println!("  (run `make artifacts` to enable the PJRT cross-layer check)");
+        println!("  (run `make artifacts` with a pjrt-enabled build for the cross-layer check)");
     }
 
     println!("quickstart OK");

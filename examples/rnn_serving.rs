@@ -1,26 +1,45 @@
 //! RNN serving: drive the AOT-compiled ternary LSTM cell (h = 300)
-//! through PJRT token by token — the spatially-mapped workload of §V-B —
-//! and report both host throughput and simulated-TiM-DNN throughput.
+//! through the Engine token by token — the spatially-mapped workload of
+//! §V-B — using multi-input requests (`[x, h, c]` per step) on the
+//! per-request PJRT backend, and report both host throughput and
+//! simulated-TiM-DNN throughput.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a `pjrt`-enabled build; skips otherwise.
 //! Run: `cargo run --release --example rnn_serving`
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{BatchPolicy, Engine, ModelSpec, PjrtBackend};
 use timdnn::model;
 use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
-use timdnn::sim;
 use timdnn::util::prng::Rng;
 
 const HIDDEN: usize = 300;
 const SEQ: usize = 35;
 const SEQUENCES: usize = 8;
 
-fn main() -> anyhow::Result<()> {
-    let mut rt = Runtime::cpu()?;
+fn main() -> timdnn::Result<()> {
     let dir = artifacts_dir();
-    rt.load("lstm_cell", &dir.join("lstm_cell.hlo.txt"))?;
+    let cell = dir.join("lstm_cell.hlo.txt");
+    if !cfg!(feature = "pjrt") || !cell.exists() {
+        println!("SKIP: rnn_serving needs `make artifacts` and a pjrt-enabled build");
+        return Ok(());
+    }
+
+    // One registered model: the LSTM, spatially mapped; each request is
+    // one token step carrying [x, h, c].
+    let engine = Engine::builder()
+        .register(
+            ModelSpec::for_network("lstm", &model::lstm_ptb(), &ArchConfig::tim_dnn(), move || {
+                let mut rt = Runtime::cpu()?;
+                rt.load("lstm_cell", &cell)?;
+                Ok(Box::new(PjrtBackend::per_request(rt, "lstm_cell")))
+            })
+            .with_policy(BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(0) }),
+        )?
+        .build()?;
+    let session = engine.session("lstm")?;
 
     let mut rng = Rng::seeded(11);
     let mut tokens = 0usize;
@@ -33,12 +52,13 @@ fn main() -> anyhow::Result<()> {
         for _ in 0..SEQ {
             // Ternary token embedding (HitNet-style [T,T] input).
             let x: Vec<f32> = (0..HIDDEN).map(|_| rng.trit_sparse(0.4) as f32).collect();
-            let out = rt.execute(
-                "lstm_cell",
-                &[TensorF32::new(vec![HIDDEN], x), h.clone(), c.clone()],
-            )?;
-            h = out[0].clone();
-            c = out[1].clone();
+            let resp = session.infer_multi(vec![
+                TensorF32::new(vec![HIDDEN], x),
+                h.clone(),
+                c.clone(),
+            ])?;
+            h = resp.outputs[0].clone();
+            c = resp.outputs[1].clone();
             tokens += 1;
         }
         // State sanity: ternary hidden values, non-degenerate.
@@ -47,24 +67,24 @@ fn main() -> anyhow::Result<()> {
     }
 
     let host_s = t0.elapsed().as_secs_f64();
-    println!("LSTM (h={HIDDEN}) served {tokens} tokens through PJRT");
+    println!("LSTM (h={HIDDEN}) served {tokens} tokens through the Engine");
     println!("  host:       {:.0} tokens/s (functional path)", tokens as f64 / host_s);
     println!(
         "  final hidden-state density: {:.2} (ternary, non-degenerate)",
         h_nonzero_total as f64 / (SEQUENCES * HIDDEN) as f64
     );
 
-    // Simulated hardware: the paper's spatially-mapped LSTM.
-    let hw = sim::run(&model::lstm_ptb(), &ArchConfig::tim_dnn());
+    // Simulated hardware: the paper's spatially-mapped LSTM. The engine
+    // charged each token a full 35-step sequence inference; normalize to
+    // per-token numbers here.
+    let snaps = engine.shutdown();
+    let hw = &snaps["lstm"];
     println!(
-        "  simulated TiM-DNN: {:.2e} tokens/s, {:.1} nJ/token (paper: ~2e6 inf/s)",
-        hw.inf_per_s * SEQ as f64, // sim counts a 35-token sequence as one inference
-        hw.energy.total() * 1e9 / SEQ as f64,
+        "  simulated TiM-DNN: {:.2e} tokens/s equivalent (paper: ~2e6 inf/s)",
+        SEQ as f64 / hw.sim_latency_p50_s.max(1e-12),
     );
-    println!(
-        "  deploy-time weight load (spatial mapping, one-time): {:.1} us",
-        hw.deploy_s * 1e6
-    );
+    println!();
+    hw.report("LSTM token serving (per-request PJRT backend)");
     println!("rnn_serving OK");
     Ok(())
 }

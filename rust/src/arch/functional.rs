@@ -17,8 +17,7 @@
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
-
+use crate::error::{Result, TimError};
 use crate::quant::TernarySystem;
 use crate::tile::{TileConfig, TimTile, VmmMode};
 use crate::tpc::{Trit, TritMatrix};
@@ -42,8 +41,10 @@ pub struct TimNetWeights {
 impl TimNetWeights {
     /// Load the flat binary written by `aot.write_weights_bin`.
     pub fn load(path: &Path) -> Result<Self> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("{} — run `make artifacts`", path.display()))?;
+        let mut f = std::fs::File::open(path).map_err(|e| TimError::Artifact {
+            path: path.to_path_buf(),
+            reason: e.to_string(),
+        })?;
         let mut layer = || -> Result<TernaryLayer> {
             let mut b4 = [0u8; 4];
             f.read_exact(&mut b4)?;
@@ -55,7 +56,12 @@ impl TimNetWeights {
             let trits: Vec<Trit> = data.iter().map(|&b| b as i8).collect();
             f.read_exact(&mut b4)?;
             let scale = f32::from_le_bytes(b4);
-            ensure!(scale > 0.0, "non-positive scale");
+            if scale <= 0.0 {
+                return Err(TimError::Data {
+                    what: "timnet weights".into(),
+                    reason: format!("non-positive scale {scale}"),
+                });
+            }
             Ok(TernaryLayer { weights: TritMatrix::from_vec(rows, cols, trits), scale })
         };
         let conv1 = layer()?;
@@ -69,6 +75,27 @@ impl TimNetWeights {
             *c = f32::from_le_bytes(b4);
         }
         Ok(Self { conv1, conv2, fc1, fc2, clips })
+    }
+
+    /// Synthesize structurally-valid (but untrained) TiMNet weights:
+    /// random ternary matrices at the paper's nominal density with unit-ish
+    /// scales and clips. This lets the functional serving path
+    /// ([`crate::coordinator::FunctionalBackend`]) run without
+    /// `make artifacts` — values are deterministic per seed, predictions
+    /// are meaningless.
+    pub fn synthetic(seed: u64) -> Self {
+        let mut rng = crate::util::prng::Rng::seeded(seed);
+        let mut layer = |rows: usize, cols: usize| TernaryLayer {
+            weights: TritMatrix::random(rows, cols, 0.4, &mut rng),
+            scale: 0.05,
+        };
+        // Shapes mirror python/compile/train.py: conv1 9×16 (3×3×1 → 16),
+        // conv2 144×32 (3×3×16 → 32), fc1 512×64 (4·4·32 → 64), fc2 64×10.
+        let conv1 = layer(9, 16);
+        let conv2 = layer(144, 32);
+        let fc1 = layer(512, 64);
+        let fc2 = layer(64, 10);
+        Self { conv1, conv2, fc1, fc2, clips: [1.0, 3.0, 3.0, 3.0] }
     }
 }
 
@@ -264,8 +291,10 @@ impl TimNetAccelerator {
 
 /// Read the eval set exported by aot.py.
 pub fn read_eval_set(path: &Path) -> Result<(Vec<Vec<f32>>, Vec<u32>)> {
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("{} — run `make artifacts`", path.display()))?;
+    let mut f = std::fs::File::open(path).map_err(|e| TimError::Artifact {
+        path: path.to_path_buf(),
+        reason: e.to_string(),
+    })?;
     let mut b4 = [0u8; 4];
     f.read_exact(&mut b4)?;
     let n = u32::from_le_bytes(b4) as usize;
@@ -327,5 +356,22 @@ mod tests {
         let mut xs = vec![-1.0, 0.5];
         sfu::relu(&mut xs);
         assert_eq!(xs, vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn synthetic_weights_forward_deterministically() {
+        let w = TimNetWeights::synthetic(42);
+        assert_eq!(w.conv1.weights.rows, 9);
+        assert_eq!(w.fc2.weights.cols, 10);
+        let mut acc = TimNetAccelerator::new(&w, TileConfig::paper());
+        let img: Vec<f32> = (0..256).map(|i| (i % 7) as f32 / 7.0).collect();
+        let a = acc.forward(&img, &mut VmmMode::Ideal);
+        let b = acc.forward(&img, &mut VmmMode::Ideal);
+        assert_eq!(a.len(), 10);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Same seed ⇒ same weights ⇒ same logits from a fresh accelerator.
+        let mut acc2 = TimNetAccelerator::new(&TimNetWeights::synthetic(42), TileConfig::paper());
+        assert_eq!(acc2.forward(&img, &mut VmmMode::Ideal), a);
     }
 }

@@ -1,0 +1,338 @@
+//! Pluggable executor backends — how a batch of requests becomes a batch
+//! of outputs.
+//!
+//! Three implementations cover the backend matrix (see `DESIGN.md`):
+//!
+//! | backend              | computes values | needs `make artifacts` | use |
+//! |----------------------|-----------------|------------------------|-----|
+//! | [`PjrtBackend`]      | yes (AOT HLO)   | yes (+ `pjrt` feature) | production path |
+//! | [`FunctionalBackend`]| yes (rust tile model) | optional (synthetic weights) | artifact-free serving, parity tests |
+//! | [`SimOnlyBackend`]   | no (echo)       | no                     | load studies / batching experiments |
+
+use crate::arch::functional::{TimNetAccelerator, TimNetWeights};
+use crate::error::{Result, TimError};
+use crate::runtime::{Runtime, TensorF32};
+use crate::tile::{TileConfig, VmmMode};
+use crate::util::prng::Rng;
+
+/// Abstraction over batch execution so the engine can serve any model
+/// without knowing how it computes.
+///
+/// Note: deliberately **not** `Send` — PJRT executables hold raw pointers
+/// the bindings do not mark `Send`, so the engine constructs each backend
+/// *inside* its worker thread via a [`BackendFactory`].
+pub trait ExecutorBackend: 'static {
+    /// Execute one batch: `batch[i]` is request *i*'s input tensors, the
+    /// result's element *i* is request *i*'s output tensors. When
+    /// [`fixed_batch`](Self::fixed_batch) is `Some(b)`, the engine pads
+    /// the batch to exactly `b` entries before calling.
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>>;
+
+    /// The fixed batch size the backend was compiled for, or `None` when
+    /// any batch size works (no padding needed).
+    fn fixed_batch(&self) -> Option<usize> {
+        None
+    }
+
+    /// Short backend name for logs/metrics.
+    fn name(&self) -> &str;
+}
+
+/// Constructor run inside the engine's worker thread (backends need not
+/// be `Send`; the factory must be).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn ExecutorBackend>> + Send + 'static>;
+
+// ---------------------------------------------------------------------------
+// PJRT
+// ---------------------------------------------------------------------------
+
+/// How a PJRT artifact consumes requests.
+enum PjrtMode {
+    /// The artifact was compiled with a leading batch axis: requests carry
+    /// one input each, the backend packs them along axis 0.
+    Batched { batch: usize, input_shape: Vec<usize> },
+    /// The artifact is executed once per request with that request's full
+    /// input list (stateful cells like the LSTM step).
+    PerRequest,
+}
+
+/// Production executor: runs a named AOT artifact through the PJRT
+/// runtime. With the `pjrt` cargo feature off, construction still works
+/// but any [`Runtime`] handed in is the stub, so execution fails with
+/// [`TimError::BackendUnavailable`] at `Runtime::cpu()` time — before the
+/// backend is ever built.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    artifact: String,
+    mode: PjrtMode,
+}
+
+impl PjrtBackend {
+    /// Batch-compiled artifact; `input_shape` excludes the batch
+    /// dimension.
+    pub fn batched(
+        runtime: Runtime,
+        artifact: &str,
+        batch: usize,
+        input_shape: Vec<usize>,
+    ) -> Self {
+        assert!(batch >= 1, "batch must be >= 1");
+        Self {
+            runtime,
+            artifact: artifact.to_string(),
+            mode: PjrtMode::Batched { batch, input_shape },
+        }
+    }
+
+    /// Artifact executed once per request with the request's input list.
+    pub fn per_request(runtime: Runtime, artifact: &str) -> Self {
+        Self { runtime, artifact: artifact.to_string(), mode: PjrtMode::PerRequest }
+    }
+}
+
+impl ExecutorBackend for PjrtBackend {
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+        match &self.mode {
+            PjrtMode::Batched { batch: b, input_shape } => {
+                if batch.len() != *b {
+                    return Err(TimError::BatchMismatch { expected: *b, got: batch.len() });
+                }
+                let per = input_shape.iter().product::<usize>();
+                let mut data = Vec::with_capacity(*b * per);
+                for inputs in batch {
+                    if inputs.len() != 1 {
+                        return Err(TimError::InputArity { expected: 1, got: inputs.len() });
+                    }
+                    let t = &inputs[0];
+                    if t.data.len() != per {
+                        return Err(TimError::ShapeMismatch {
+                            context: format!("input for '{}'", self.artifact),
+                            expected: per,
+                            got: t.data.len(),
+                        });
+                    }
+                    data.extend_from_slice(&t.data);
+                }
+                let mut shape = vec![*b];
+                shape.extend_from_slice(input_shape);
+                let out =
+                    self.runtime.execute(&self.artifact, &[TensorF32::new(shape, data)])?;
+                // Validate the artifact's output instead of indexing into
+                // it — a batch-size mismatch between the compiled artifact
+                // and this backend must surface as a typed error, not a
+                // panic inside the worker thread.
+                let logits = out.first().ok_or_else(|| TimError::Exec {
+                    what: format!("artifact '{}'", self.artifact),
+                    reason: "returned an empty output tuple".into(),
+                })?;
+                if logits.shape.first() != Some(b) {
+                    return Err(TimError::Exec {
+                        what: format!("artifact '{}'", self.artifact),
+                        reason: format!(
+                            "output shape {:?} lacks the leading batch dim {}",
+                            logits.shape, b
+                        ),
+                    });
+                }
+                let out_per = logits.data.len() / *b;
+                let out_shape: Vec<usize> = logits.shape[1..].to_vec();
+                Ok((0..*b)
+                    .map(|i| {
+                        vec![TensorF32::new(
+                            out_shape.clone(),
+                            logits.data[i * out_per..(i + 1) * out_per].to_vec(),
+                        )]
+                    })
+                    .collect())
+            }
+            PjrtMode::PerRequest => batch
+                .iter()
+                .map(|inputs| self.runtime.execute(&self.artifact, inputs))
+                .collect(),
+        }
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        match &self.mode {
+            PjrtMode::Batched { batch, .. } => Some(*batch),
+            PjrtMode::PerRequest => None,
+        }
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional (pure rust)
+// ---------------------------------------------------------------------------
+
+/// Pure-rust backend: runs the ternary forward pass on the functional
+/// tile model ([`crate::arch::functional`]) — im2col, TiM-tile block
+/// VMMs, PCU scaling, SFU ReLU/pool/requant. Serves TiMNet (16×16×1
+/// images → 10 logits) with trained weights when artifacts exist, or
+/// [`TimNetWeights::synthetic`] weights otherwise, so the full serving
+/// stack runs without `make artifacts` and without PJRT.
+pub struct FunctionalBackend {
+    acc: TimNetAccelerator,
+    /// `Some` injects V_T-variation sensing noise per VMM.
+    noise: Option<Rng>,
+}
+
+/// TiMNet input: 16×16×1 image = 256 scalars.
+const TIMNET_PIXELS: usize = 256;
+
+impl FunctionalBackend {
+    pub fn from_weights(weights: &TimNetWeights, cfg: TileConfig) -> Self {
+        Self { acc: TimNetAccelerator::new(weights, cfg), noise: None }
+    }
+
+    /// Deterministic untrained weights — structural serving without
+    /// artifacts (predictions are meaningless, values are reproducible).
+    pub fn synthetic(seed: u64) -> Self {
+        Self::from_weights(&TimNetWeights::synthetic(seed), TileConfig::paper())
+    }
+
+    /// Trained weights from `artifacts/timnet_weights.bin` when present,
+    /// otherwise synthetic weights under `seed`. A weights file that
+    /// exists but fails to load is an error, not a silent fallback —
+    /// serving untrained weights when the operator trained some would be
+    /// a lie.
+    pub fn from_artifacts_or_synthetic(seed: u64) -> Result<Self> {
+        let path = crate::runtime::artifacts_dir().join("timnet_weights.bin");
+        if path.exists() {
+            Ok(Self::from_weights(&TimNetWeights::load(&path)?, TileConfig::paper()))
+        } else {
+            // Loud, because a wrong cwd/TIMDNN_ARTIFACTS would otherwise
+            // silently serve garbage predictions after the operator ran
+            // `make artifacts`.
+            eprintln!(
+                "warning: {} not found — serving synthetic (untrained) TiMNet weights",
+                path.display()
+            );
+            Ok(Self::synthetic(seed))
+        }
+    }
+
+    /// Enable V_T-variation sensing noise on every VMM.
+    pub fn with_noise(mut self, rng: Rng) -> Self {
+        self.noise = Some(rng);
+        self
+    }
+}
+
+impl ExecutorBackend for FunctionalBackend {
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+        let mut out = Vec::with_capacity(batch.len());
+        for inputs in batch {
+            if inputs.len() != 1 {
+                return Err(TimError::InputArity { expected: 1, got: inputs.len() });
+            }
+            let img = &inputs[0];
+            if img.data.len() != TIMNET_PIXELS {
+                return Err(TimError::ShapeMismatch {
+                    context: "TiMNet image".into(),
+                    expected: TIMNET_PIXELS,
+                    got: img.data.len(),
+                });
+            }
+            let logits = match self.noise.as_mut() {
+                None => self.acc.forward(&img.data, &mut VmmMode::Ideal),
+                Some(rng) => self.acc.forward(&img.data, &mut VmmMode::AnalogNoisy(rng)),
+            };
+            out.push(vec![TensorF32::new(vec![10], logits)]);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &str {
+        "functional"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sim-only
+// ---------------------------------------------------------------------------
+
+/// No-compute backend for load studies: echoes each request's inputs as
+/// its outputs. Host execution cost is ~zero, so metrics isolate the
+/// batching/queueing behaviour and the simulated-hardware accounting.
+#[derive(Default)]
+pub struct SimOnlyBackend;
+
+impl SimOnlyBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl ExecutorBackend for SimOnlyBackend {
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+        Ok(batch.to_vec())
+    }
+
+    fn name(&self) -> &str {
+        "sim-only"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_only_echoes() {
+        let mut b = SimOnlyBackend::new();
+        let batch = vec![vec![TensorF32::new(vec![2], vec![1.0, 2.0])]];
+        let out = b.execute_batch(&batch).unwrap();
+        assert_eq!(out, batch);
+        assert_eq!(b.fixed_batch(), None);
+    }
+
+    #[test]
+    fn functional_rejects_bad_shapes() {
+        let mut b = FunctionalBackend::synthetic(1);
+        let bad = vec![vec![TensorF32::new(vec![3], vec![0.0; 3])]];
+        match b.execute_batch(&bad) {
+            Err(TimError::ShapeMismatch { expected, got, .. }) => {
+                assert_eq!(expected, 256);
+                assert_eq!(got, 3);
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+        let arity = vec![vec![]];
+        assert!(matches!(
+            b.execute_batch(&arity),
+            Err(TimError::InputArity { expected: 1, got: 0 })
+        ));
+    }
+
+    #[test]
+    fn functional_flexible_batch_produces_logits() {
+        let mut b = FunctionalBackend::synthetic(7);
+        let img = |s: f32| vec![TensorF32::new(vec![16, 16, 1], vec![s; 256])];
+        let out = b.execute_batch(&[img(0.1), img(0.9), img(0.5)]).unwrap();
+        assert_eq!(out.len(), 3);
+        for o in &out {
+            assert_eq!(o[0].shape, vec![10]);
+        }
+        assert_eq!(b.fixed_batch(), None);
+    }
+
+    #[test]
+    fn pjrt_batched_rejects_wrong_batch_without_executing() {
+        // The stub runtime can't be constructed, but the mismatch check
+        // fires before execution — build the backend only when PJRT
+        // exists; otherwise the typed-error path is covered by unit logic
+        // in `PjrtBackend::execute_batch` via the engine tests.
+        if let Ok(rt) = Runtime::cpu() {
+            let mut b = PjrtBackend::batched(rt, "x", 4, vec![2]);
+            let one = vec![vec![TensorF32::new(vec![2], vec![0.0; 2])]];
+            assert!(matches!(
+                b.execute_batch(&one),
+                Err(TimError::BatchMismatch { expected: 4, got: 1 })
+            ));
+        }
+    }
+}

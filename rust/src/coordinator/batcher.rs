@@ -75,15 +75,19 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::{InflightGuard, Response};
     use crate::runtime::TensorF32;
+    use std::sync::atomic::AtomicUsize;
     use std::sync::mpsc;
+    use std::sync::Arc;
 
-    fn req(id: u64, reply: mpsc::Sender<super::super::Response>) -> Msg {
+    fn req(id: u64, reply: mpsc::Sender<crate::error::Result<Response>>) -> Msg {
         Msg::Req(Request {
             id,
-            input: TensorF32::new(vec![1], vec![0.0]),
+            inputs: vec![TensorF32::new(vec![1], vec![0.0])],
             submitted: Instant::now(),
             reply,
+            guard: InflightGuard::adopt(Arc::new(AtomicUsize::new(1))),
         })
     }
 

@@ -1,0 +1,350 @@
+//! The `Engine` facade: admission-controlled multi-model serving.
+//!
+//! One worker thread per registered model. Each worker constructs its
+//! backend in-thread (PJRT handles are not `Send`), clamps its batch
+//! policy to the backend's compiled batch size, and drains batches —
+//! padding only when the backend demands a fixed batch, and never
+//! charging padded lanes to metrics. Request ids are engine-global
+//! (`AtomicU64`); queue-depth admission is per model (`AtomicUsize`
+//! in-flight counters, released by each request's `InflightGuard` on
+//! every exit path). Failed batches answer each request with a typed
+//! `TimError` instead of dropping the reply channel.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{Result, TimError};
+use crate::runtime::TensorF32;
+use crate::sim::SimReport;
+
+use super::backend::{BackendFactory, ExecutorBackend};
+use super::batcher::Batcher;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::registry::{ModelRegistry, ModelSpec};
+use super::{Msg, Request, Response};
+
+/// Builder: collect specs, set the tile budget, build the engine.
+#[derive(Debug)]
+pub struct EngineBuilder {
+    registry: ModelRegistry,
+    tile_budget: Option<usize>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self { registry: ModelRegistry::new(), tile_budget: None }
+    }
+
+    /// Cap the summed tile footprint of all registered models (e.g.
+    /// [`crate::energy::constants::ACCEL_TILES`] for one 32-tile
+    /// instance). Unset = unlimited.
+    pub fn tile_budget(mut self, tiles: usize) -> Self {
+        self.tile_budget = Some(tiles);
+        self
+    }
+
+    /// Register one model (chainable); typed error on duplicates.
+    pub fn register(mut self, spec: ModelSpec) -> Result<Self> {
+        self.registry.register(spec)?;
+        Ok(self)
+    }
+
+    /// Use a pre-built registry (replaces anything registered so far).
+    pub fn with_registry(mut self, registry: ModelRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    /// Run admission control and spawn one worker per model.
+    pub fn build(self) -> Result<Engine> {
+        if let Some(budget) = self.tile_budget {
+            let mut used = 0usize;
+            for spec in self.registry.iter() {
+                if used + spec.tiles_required > budget {
+                    return Err(TimError::AdmissionRejected {
+                        model: spec.name.clone(),
+                        tiles_required: spec.tiles_required,
+                        tiles_available: budget - used,
+                    });
+                }
+                used += spec.tiles_required;
+            }
+        }
+        let next_id = Arc::new(AtomicU64::new(1));
+        let mut models = BTreeMap::new();
+        for (name, spec) in self.registry.into_specs() {
+            models.insert(name, ModelWorker::spawn(spec));
+        }
+        Ok(Engine { models, next_id })
+    }
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-model worker handle.
+#[derive(Debug)]
+struct ModelWorker {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    inflight: Arc<AtomicUsize>,
+    max_queue: usize,
+}
+
+impl ModelWorker {
+    fn spawn(spec: ModelSpec) -> Self {
+        let ModelSpec { name, hardware, policy, factory, max_queue, .. } = spec;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let metrics_w = Arc::clone(&metrics);
+        let handle = std::thread::Builder::new()
+            .name(format!("timdnn-engine-{name}"))
+            .spawn(move || worker_loop(&name, rx, factory, policy, hardware, metrics_w))
+            .expect("spawn engine worker thread");
+        ModelWorker { tx, handle: Some(handle), metrics, inflight, max_queue }
+    }
+}
+
+/// The per-model serve loop (runs on the worker thread).
+fn worker_loop(
+    name: &str,
+    rx: Receiver<Msg>,
+    factory: BackendFactory,
+    mut policy: super::BatchPolicy,
+    hardware: SimReport,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    // Fail each batch's requests with a typed error (the engine stays up).
+    let fail_batch = |batch: Vec<Request>, what: &str, reason: &str| {
+        for req in batch {
+            let Request { reply, guard, .. } = req;
+            drop(guard); // release the admission slot
+            let _ = reply.send(Err(TimError::Exec {
+                what: what.to_string(),
+                reason: reason.to_string(),
+            }));
+        }
+    };
+    let mut backend: Box<dyn ExecutorBackend> = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            // Dropping `rx` fails later submissions with `EngineStopped`;
+            // anything already queued is failed here, and every pending
+            // `InflightGuard` releases its admission slot on drop.
+            eprintln!("engine[{name}]: backend construction failed: {e}");
+            let reason = e.to_string();
+            let mut batcher = Batcher::new(policy);
+            while let Some(batch) = batcher.next_batch(&rx) {
+                fail_batch(batch, &format!("model '{name}' backend"), &reason);
+            }
+            return;
+        }
+    };
+    // A fixed-batch backend caps how much a batch can hold; clamping here
+    // makes a policy/backend mismatch impossible by construction.
+    if let Some(b) = backend.fixed_batch() {
+        policy.max_batch = policy.max_batch.min(b.max(1));
+    }
+    let mut batcher = Batcher::new(policy);
+    while let Some(mut batch) = batcher.next_batch(&rx) {
+        let real = batch.len();
+        let t0 = Instant::now();
+        // Move the tensors out instead of cloning — the reply loop below
+        // only needs id/submitted/reply/guard.
+        let mut inputs: Vec<Vec<TensorF32>> =
+            batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)).collect();
+        // Pad with copies of the first request's inputs only when the
+        // backend was compiled for a fixed batch.
+        let target = backend.fixed_batch().map_or(real, |b| b.max(real));
+        while inputs.len() < target {
+            let pad = inputs[0].clone();
+            inputs.push(pad);
+        }
+        let padded_lanes = inputs.len() - real;
+        let outputs = match backend.execute_batch(&inputs) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("engine[{name}]: batch execution failed: {e}");
+                fail_batch(batch, &format!("model '{name}' batch"), &e.to_string());
+                continue;
+            }
+        };
+        if outputs.len() < real {
+            let reason =
+                format!("backend returned {} outputs for {} requests", outputs.len(), real);
+            eprintln!("engine[{name}]: {reason}");
+            fail_batch(batch, &format!("model '{name}' batch"), &reason);
+            continue;
+        }
+        // Hardware accounting: the simulated accelerator processes the
+        // *real* requests back-to-back; padded lanes are free in the sim
+        // (the real array computes them, but no one is charged) and are
+        // excluded from every per-request metric.
+        let sim_latency_s = hardware.batch_latency_s(real);
+        let sim_energy_j = hardware.energy.total();
+        let host_exec = t0.elapsed();
+        let mut m = metrics.lock().unwrap();
+        m.record_padding(padded_lanes);
+        for (req, outs) in batch.into_iter().zip(outputs) {
+            // zip truncates at `real`: padded outputs are discarded here.
+            let Request { id, submitted, reply, guard, .. } = req;
+            let queued = t0.duration_since(submitted);
+            let resp = Response {
+                id,
+                outputs: outs,
+                queued,
+                e2e: submitted.elapsed(),
+                sim_latency_s,
+                sim_energy_j,
+            };
+            m.record(&resp, real, host_exec);
+            // Release the admission slot before the reply lands so a
+            // client that just received its response can immediately
+            // submit again without racing the counter.
+            drop(guard);
+            let _ = reply.send(Ok(resp));
+        }
+    }
+}
+
+/// The multi-model serving engine.
+#[derive(Debug)]
+pub struct Engine {
+    models: BTreeMap<String, ModelWorker>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Registered model names (sorted).
+    pub fn models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// Open a session on one model; typed error when unknown.
+    pub fn session(&self, model: &str) -> Result<Session> {
+        let w = self.models.get(model).ok_or_else(|| TimError::ModelNotFound {
+            name: model.to_string(),
+            available: self.models(),
+        })?;
+        Ok(Session {
+            model: model.to_string(),
+            tx: w.tx.clone(),
+            next_id: Arc::clone(&self.next_id),
+            inflight: Arc::clone(&w.inflight),
+            max_queue: w.max_queue,
+        })
+    }
+
+    /// Current metrics snapshot for one model.
+    pub fn metrics(&self, model: &str) -> Result<MetricsSnapshot> {
+        let w = self.models.get(model).ok_or_else(|| TimError::ModelNotFound {
+            name: model.to_string(),
+            available: self.models(),
+        })?;
+        Ok(w.metrics.lock().unwrap().snapshot())
+    }
+
+    /// Snapshots for every model.
+    pub fn metrics_all(&self) -> BTreeMap<String, MetricsSnapshot> {
+        self.models
+            .iter()
+            .map(|(name, w)| (name.clone(), w.metrics.lock().unwrap().snapshot()))
+            .collect()
+    }
+
+    /// Stop accepting requests, drain everything already queued, join all
+    /// workers, and return the final per-model snapshots. Safe to call
+    /// while [`Session`] clones are alive — their later submissions fail
+    /// with [`TimError::EngineStopped`].
+    pub fn shutdown(mut self) -> BTreeMap<String, MetricsSnapshot> {
+        for w in self.models.values() {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+        let mut out = BTreeMap::new();
+        for (name, w) in self.models.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+            out.insert(name.clone(), w.metrics.lock().unwrap().snapshot());
+        }
+        out
+    }
+}
+
+/// Handle for submitting requests to one model. Cheap to clone; clones
+/// share the model's queue and in-flight accounting.
+#[derive(Clone, Debug)]
+pub struct Session {
+    model: String,
+    tx: Sender<Msg>,
+    next_id: Arc<AtomicU64>,
+    inflight: Arc<AtomicUsize>,
+    max_queue: usize,
+}
+
+impl Session {
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    /// Submit a single-input request; returns a receiver for the typed
+    /// per-request outcome (`Ok(Response)` or the batch's `TimError`).
+    /// Typed submission errors: [`TimError::QueueFull`] when the model's
+    /// in-flight cap is hit, [`TimError::EngineStopped`] after shutdown.
+    pub fn submit(&self, input: TensorF32) -> Result<Receiver<Result<Response>>> {
+        self.submit_multi(vec![input])
+    }
+
+    /// Submit a multi-input request (e.g. `[x, h, c]` for an RNN cell).
+    pub fn submit_multi(&self, inputs: Vec<TensorF32>) -> Result<Receiver<Result<Response>>> {
+        if inputs.is_empty() {
+            return Err(TimError::InputArity { expected: 1, got: 0 });
+        }
+        // Optimistic reservation keeps the check race-free across clones;
+        // the guard adopts the reservation and releases it on drop,
+        // whatever path the request takes.
+        let depth = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if self.max_queue > 0 && depth >= self.max_queue {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(TimError::QueueFull {
+                model: self.model.clone(),
+                depth,
+                limit: self.max_queue,
+            });
+        }
+        let guard = super::InflightGuard::adopt(Arc::clone(&self.inflight));
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, inputs, submitted: Instant::now(), reply, guard };
+        if self.tx.send(Msg::Req(req)).is_err() {
+            // The SendError drops the request — and with it the guard.
+            return Err(TimError::EngineStopped { model: self.model.clone() });
+        }
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, input: TensorF32) -> Result<Response> {
+        self.infer_multi(vec![input])
+    }
+
+    /// Submit a multi-input request and wait.
+    pub fn infer_multi(&self, inputs: Vec<TensorF32>) -> Result<Response> {
+        self.submit_multi(inputs)?
+            .recv()
+            .map_err(|_| TimError::EngineStopped { model: self.model.clone() })?
+    }
+}

@@ -16,6 +16,7 @@ pub struct Metrics {
     sim_latency_s: Vec<f64>,
     sim_energy_j: f64,
     completed: u64,
+    padded_lanes: u64,
 }
 
 impl Metrics {
@@ -29,9 +30,14 @@ impl Metrics {
             sim_latency_s: Vec::new(),
             sim_energy_j: 0.0,
             completed: 0,
+            padded_lanes: 0,
         }
     }
 
+    /// Record one *real* completed request. `batch` is the number of real
+    /// requests in its batch — padded lanes are never passed here; they
+    /// are tallied separately via [`Metrics::record_padding`], so padding
+    /// cannot inflate completions, batch means, or energy.
     pub fn record(&mut self, resp: &Response, batch: usize, host_exec: Duration) {
         self.completed += 1;
         self.e2e_s.push(resp.e2e.as_secs_f64());
@@ -40,6 +46,11 @@ impl Metrics {
         self.host_exec_s.push(host_exec.as_secs_f64());
         self.sim_latency_s.push(resp.sim_latency_s);
         self.sim_energy_j += resp.sim_energy_j;
+    }
+
+    /// Tally lanes added to fill a fixed-size executor batch.
+    pub fn record_padding(&mut self, lanes: usize) {
+        self.padded_lanes += lanes as u64;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -58,6 +69,7 @@ impl Metrics {
             },
             sim_latency_p50_s: pct(&self.sim_latency_s, 50.0),
             sim_energy_total_j: self.sim_energy_j,
+            padded_lanes: self.padded_lanes,
         }
     }
 }
@@ -80,6 +92,9 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     pub sim_latency_p50_s: f64,
     pub sim_energy_total_j: f64,
+    /// Lanes added to fill fixed-size executor batches (never counted as
+    /// completions or charged energy).
+    pub padded_lanes: u64,
 }
 
 impl MetricsSnapshot {
@@ -103,6 +118,7 @@ impl MetricsSnapshot {
         );
         println!("  queue p95            {:.3} ms", self.queue_p95_s * 1e3);
         println!("  mean batch           {:.2}", self.mean_batch);
+        println!("  padded lanes         {}", self.padded_lanes);
         println!("  sim hw latency p50   {:.3} us", self.sim_latency_p50_s * 1e6);
         println!(
             "  sim hw energy        {:.3} uJ total ({:.3} uJ/inf)",
@@ -127,7 +143,7 @@ mod tests {
         for i in 0..10 {
             let resp = Response {
                 id: i,
-                output: TensorF32::new(vec![1], vec![0.0]),
+                outputs: vec![TensorF32::new(vec![1], vec![0.0])],
                 queued: Duration::from_micros(10),
                 e2e: Duration::from_micros(100 + i * 10),
                 sim_latency_s: 1e-6,
@@ -135,11 +151,14 @@ mod tests {
             };
             m.record(&resp, 2, Duration::from_micros(50));
         }
+        m.record_padding(3);
         let s = m.snapshot();
         assert_eq!(s.completed, 10);
         assert!(s.host_p95_s >= s.host_p50_s);
         assert!((s.mean_batch - 2.0).abs() < 1e-9);
         assert!((s.sim_energy_total_j - 20e-6).abs() < 1e-12);
         assert!(s.throughput() > 0.0);
+        // Padding is visible in the snapshot but never in completions.
+        assert_eq!(s.padded_lanes, 3);
     }
 }

@@ -1,60 +1,83 @@
 //! Serving coordinator — the Layer-3 request path.
 //!
-//! TiM-DNN is an inference accelerator, so the coordinator is an
-//! inference server: a request router feeds per-model dynamic batchers;
-//! a worker drains each batch, executes the **functional** forward pass
-//! through the PJRT runtime (the AOT-compiled JAX/Pallas artifact), and
-//! charges the batch against the **simulated** TiM-DNN hardware for
-//! latency/energy accounting. Metrics report both host wall-clock and
-//! simulated-hardware numbers.
+//! TiM-DNN is a *programmable* ternary accelerator meant to run a whole
+//! suite of DNNs on one 32-tile instance, so the coordinator is a
+//! multi-model inference engine:
+//!
+//! * a [`ModelRegistry`] binds each model name to a simulated-hardware
+//!   profile ([`crate::sim::SimReport`]), a [`BatchPolicy`], a tile
+//!   footprint, and an [`ExecutorBackend`] factory;
+//! * the [`Engine`] admits the registered set against a tile budget,
+//!   spawns one worker per model (each with its own dynamic [`Batcher`]),
+//!   and hands out per-model [`Session`]s;
+//! * each worker drains batches, executes them on its backend —
+//!   [`PjrtBackend`] (AOT JAX/Pallas artifact via PJRT),
+//!   [`FunctionalBackend`] (pure-rust ternary forward pass on the tile
+//!   model, no artifacts needed), or [`SimOnlyBackend`] (echo, for load
+//!   studies) — and charges the batch against the simulated TiM-DNN
+//!   hardware for latency/energy accounting;
+//! * [`Metrics`] report host wall-clock and simulated-hardware numbers
+//!   per model.
 //!
 //! Everything is std-only (threads + channels): the offline build
 //! environment has no tokio, and the workload is compute-bound anyway.
+//! Errors on the request path are typed ([`crate::TimError`]).
 
+mod backend;
 mod batcher;
+mod engine;
 mod metrics;
+mod registry;
 
+pub use backend::{
+    BackendFactory, ExecutorBackend, FunctionalBackend, PjrtBackend, SimOnlyBackend,
+};
 pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, EngineBuilder, Session};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use registry::{ModelRegistry, ModelSpec};
 
-use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use crate::runtime::TensorF32;
-use crate::sim::SimReport;
 
-/// Abstraction over batch execution so the coordinator can be tested
-/// without PJRT artifacts. The production impl wraps [`crate::runtime`].
-///
-/// Note: deliberately **not** `Send` — PJRT executables hold raw pointers
-/// the bindings do not mark `Send`, so the coordinator constructs the
-/// executor *inside* its worker thread via the factory passed to
-/// [`Server::spawn`].
-pub trait ModelExecutor: 'static {
-    /// Execute a fixed-size batch (padded by the batcher); returns one
-    /// output tensor per batch element.
-    fn execute_batch(&mut self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>>;
-    /// The fixed batch size the executor was compiled for.
-    fn batch_size(&self) -> usize;
+/// RAII admission slot: decrements the model's in-flight counter when the
+/// request leaves the system — reply sent, batch dropped on failure, or
+/// queue drained at shutdown — so no path can leak queue capacity.
+#[derive(Debug)]
+pub(crate) struct InflightGuard(Arc<AtomicUsize>);
+
+impl InflightGuard {
+    /// Adopts an already-incremented reservation (see `Session::submit_multi`).
+    pub(crate) fn adopt(counter: Arc<AtomicUsize>) -> Self {
+        Self(counter)
+    }
 }
 
-/// One inference request.
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// One inference request. Most models take a single input tensor;
+/// stateful cells (e.g. the LSTM step) carry several.
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
-    pub input: TensorF32,
+    pub inputs: Vec<TensorF32>,
     pub submitted: Instant,
-    reply: Sender<Response>,
+    reply: Sender<crate::error::Result<Response>>,
+    pub(crate) guard: InflightGuard,
 }
 
 /// Channel message: a request, or an in-band shutdown marker. The marker
-/// makes `Server::shutdown` robust even while external `Client` clones
-/// are still alive — everything queued before it is drained first (mpsc
-/// preserves order), everything after is dropped.
+/// makes [`Engine::shutdown`] robust even while external [`Session`]
+/// clones are still alive — everything queued before it is drained first
+/// (mpsc preserves order), everything after is dropped.
 #[derive(Debug)]
 pub(crate) enum Msg {
     Req(Request),
@@ -65,7 +88,8 @@ pub(crate) enum Msg {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub output: TensorF32,
+    /// All output tensors (one for classifiers, `[h, c]` for RNN cells…).
+    pub outputs: Vec<TensorF32>,
     /// Time waiting in the batcher queue.
     pub queued: Duration,
     /// End-to-end host wall-clock latency.
@@ -76,179 +100,10 @@ pub struct Response {
     pub sim_energy_j: f64,
 }
 
-/// Handle for submitting requests.
-#[derive(Clone)]
-pub struct Client {
-    tx: Sender<Msg>,
-    next_id: Arc<Mutex<u64>>,
-}
-
-impl Client {
-    /// Submit an input; returns a receiver for the response.
-    pub fn submit(&self, input: TensorF32) -> Receiver<Response> {
-        let (reply, rx) = mpsc::channel();
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            *g += 1;
-            *g
-        };
-        let req = Request { id, input, submitted: Instant::now(), reply };
-        // Send fails only after shutdown; drop the request in that case.
-        let _ = self.tx.send(Msg::Req(req));
-        rx
-    }
-
-    /// Submit and wait.
-    pub fn infer(&self, input: TensorF32) -> Result<Response> {
-        Ok(self.submit(input).recv()?)
-    }
-}
-
-/// The serving coordinator for one model.
-pub struct Server {
-    client: Client,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<Mutex<Metrics>>,
-}
-
-impl Server {
-    /// Spawn the worker. The executor is built inside the worker thread by
-    /// `factory` (PJRT handles are not `Send`). `hardware` is the simulated
-    /// per-inference report used for hardware accounting
-    /// (from [`crate::sim::run`]).
-    pub fn spawn<E, F>(factory: F, policy: BatchPolicy, hardware: SimReport) -> Self
-    where
-        E: ModelExecutor,
-        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let metrics_worker = Arc::clone(&metrics);
-        let worker = std::thread::spawn(move || {
-            let mut executor = match factory() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("coordinator: executor construction failed: {e:#}");
-                    return;
-                }
-            };
-            let mut batcher = Batcher::new(policy);
-            loop {
-                let batch = match batcher.next_batch(&rx) {
-                    Some(b) => b,
-                    None => break, // channel closed and drained
-                };
-                let t0 = Instant::now();
-                let real = batch.len();
-                // Pad to the executor's compiled batch size.
-                let mut inputs: Vec<TensorF32> =
-                    batch.iter().map(|r| r.input.clone()).collect();
-                while inputs.len() < executor.batch_size() {
-                    inputs.push(inputs[0].clone());
-                }
-                let outputs = match executor.execute_batch(&inputs) {
-                    Ok(o) => o,
-                    Err(e) => {
-                        eprintln!("coordinator: batch execution failed: {e:#}");
-                        continue;
-                    }
-                };
-                // Hardware accounting: the simulated accelerator processes
-                // the batch back-to-back; energy is per-inference.
-                let sim_latency_s = hardware.total_s * real as f64;
-                let sim_energy_j = hardware.energy.total();
-                let host_exec = t0.elapsed();
-                let mut m = metrics_worker.lock().unwrap();
-                for (req, out) in batch.into_iter().zip(outputs) {
-                    let queued = t0.duration_since(req.submitted);
-                    let resp = Response {
-                        id: req.id,
-                        output: out,
-                        queued,
-                        e2e: req.submitted.elapsed(),
-                        sim_latency_s,
-                        sim_energy_j,
-                    };
-                    m.record(&resp, real, host_exec);
-                    let _ = req.reply.send(resp);
-                }
-            }
-        });
-        Server {
-            client: Client { tx, next_id: Arc::new(Mutex::new(0)) },
-            worker: Some(worker),
-            metrics,
-        }
-    }
-
-    pub fn client(&self) -> Client {
-        self.client.clone()
-    }
-
-    pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.lock().unwrap().snapshot()
-    }
-
-    /// Stop accepting requests, drain everything already queued, and join
-    /// the worker. Safe to call while `Client` clones are still alive —
-    /// their later submissions are dropped.
-    pub fn shutdown(mut self) -> MetricsSnapshot {
-        let _ = self.client.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-        self.metrics.lock().unwrap().snapshot()
-    }
-}
-
-/// Production executor: runs a named artifact through the PJRT runtime,
-/// batching along the leading axis.
-pub struct PjrtExecutor {
-    runtime: crate::runtime::Runtime,
-    artifact: String,
-    batch: usize,
-    input_shape: Vec<usize>,
-}
-
-impl PjrtExecutor {
-    /// `input_shape` excludes the batch dimension.
-    pub fn new(
-        runtime: crate::runtime::Runtime,
-        artifact: &str,
-        batch: usize,
-        input_shape: Vec<usize>,
-    ) -> Self {
-        Self { runtime, artifact: artifact.to_string(), batch, input_shape }
-    }
-}
-
-impl ModelExecutor for PjrtExecutor {
-    fn execute_batch(&mut self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        assert_eq!(inputs.len(), self.batch);
-        let per = self.input_shape.iter().product::<usize>();
-        let mut data = Vec::with_capacity(self.batch * per);
-        for t in inputs {
-            anyhow::ensure!(t.data.len() == per, "bad input shape");
-            data.extend_from_slice(&t.data);
-        }
-        let mut shape = vec![self.batch];
-        shape.extend_from_slice(&self.input_shape);
-        let out = self.runtime.execute(&self.artifact, &[TensorF32::new(shape, data)])?;
-        let logits = &out[0];
-        let out_per = logits.data.len() / self.batch;
-        let out_shape: Vec<usize> = logits.shape[1..].to_vec();
-        Ok((0..self.batch)
-            .map(|b| {
-                TensorF32::new(
-                    out_shape.clone(),
-                    logits.data[b * out_per..(b + 1) * out_per].to_vec(),
-                )
-            })
-            .collect())
-    }
-
-    fn batch_size(&self) -> usize {
-        self.batch
+impl Response {
+    /// The primary (first) output tensor.
+    pub fn output(&self) -> &TensorF32 {
+        &self.outputs[0]
     }
 }
 
@@ -256,61 +111,90 @@ impl ModelExecutor for PjrtExecutor {
 mod tests {
     use super::*;
     use crate::arch::ArchConfig;
+    use crate::error::{Result, TimError};
     use crate::model;
+    use crate::sim::{self, SimReport};
 
-    /// Doubles every element; batch size 4.
+    /// Doubles every element; compiled for a fixed batch of 4 (exercises
+    /// the padding path like a PJRT executable would).
     struct Doubler;
 
-    impl ModelExecutor for Doubler {
-        fn execute_batch(&mut self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-            Ok(inputs
+    impl ExecutorBackend for Doubler {
+        fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+            Ok(batch
                 .iter()
-                .map(|t| {
-                    TensorF32::new(t.shape.clone(), t.data.iter().map(|x| 2.0 * x).collect())
+                .map(|inputs| {
+                    inputs
+                        .iter()
+                        .map(|t| {
+                            TensorF32::new(
+                                t.shape.clone(),
+                                t.data.iter().map(|x| 2.0 * x).collect(),
+                            )
+                        })
+                        .collect()
                 })
                 .collect())
         }
 
-        fn batch_size(&self) -> usize {
-            4
+        fn fixed_batch(&self) -> Option<usize> {
+            Some(4)
+        }
+
+        fn name(&self) -> &str {
+            "doubler"
         }
     }
 
     fn hw() -> SimReport {
-        crate::sim::run(&model::tiny_cnn(), &ArchConfig::tim_dnn())
+        sim::run(&model::tiny_cnn(), &ArchConfig::tim_dnn())
+    }
+
+    fn doubler_engine(policy: BatchPolicy) -> Engine {
+        Engine::builder()
+            .register(
+                ModelSpec::new("doubler", hw(), || Ok(Box::new(Doubler)))
+                    .with_policy(policy),
+            )
+            .unwrap()
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn serves_single_request() {
-        let server = Server::spawn(
-            || Ok(Doubler),
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-            hw(),
-        );
-        let c = server.client();
-        let resp = c.infer(TensorF32::new(vec![2], vec![1.0, 3.0])).unwrap();
-        assert_eq!(resp.output.data, vec![2.0, 6.0]);
+        let engine = doubler_engine(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        let s = engine.session("doubler").unwrap();
+        let resp = s.infer(TensorF32::new(vec![2], vec![1.0, 3.0])).unwrap();
+        assert_eq!(resp.output().data, vec![2.0, 6.0]);
         assert!(resp.sim_latency_s > 0.0);
         assert!(resp.sim_energy_j > 0.0);
-        let snap = server.shutdown();
-        assert_eq!(snap.completed, 1);
+        let snaps = engine.shutdown();
+        assert_eq!(snaps["doubler"].completed, 1);
+        // The lone request was padded to the compiled batch of 4, and the
+        // padded lanes are accounted separately — never as completions.
+        assert_eq!(snaps["doubler"].padded_lanes, 3);
     }
 
     #[test]
     fn batches_concurrent_requests() {
-        let server = Server::spawn(
-            || Ok(Doubler),
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
-            hw(),
-        );
-        let c = server.client();
-        let rxs: Vec<_> =
-            (0..8).map(|i| c.submit(TensorF32::new(vec![1], vec![i as f32]))).collect();
+        let engine = doubler_engine(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(20),
+        });
+        let s = engine.session("doubler").unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| s.submit(TensorF32::new(vec![1], vec![i as f32])).unwrap())
+            .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv().unwrap();
-            assert_eq!(resp.output.data, vec![2.0 * i as f32]);
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.output().data, vec![2.0 * i as f32]);
         }
-        let snap = server.shutdown();
+        let snaps = engine.shutdown();
+        let snap = &snaps["doubler"];
         assert_eq!(snap.completed, 8);
         // 8 requests at max_batch 4 ⇒ at least one multi-request batch.
         assert!(snap.mean_batch > 1.0, "mean batch {}", snap.mean_batch);
@@ -318,18 +202,31 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queue() {
-        let server = Server::spawn(
-            || Ok(Doubler),
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
-            hw(),
-        );
-        let c = server.client();
-        let rxs: Vec<_> =
-            (0..5).map(|i| c.submit(TensorF32::new(vec![1], vec![i as f32]))).collect();
-        let snap = server.shutdown();
-        assert_eq!(snap.completed, 5);
+        let engine = doubler_engine(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        });
+        let s = engine.session("doubler").unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| s.submit(TensorF32::new(vec![1], vec![i as f32])).unwrap())
+            .collect();
+        let snaps = engine.shutdown();
+        assert_eq!(snaps["doubler"].completed, 5);
         for rx in rxs {
             assert!(rx.try_recv().is_ok());
         }
+    }
+
+    #[test]
+    fn session_for_unknown_model_is_typed() {
+        let engine = doubler_engine(BatchPolicy::default());
+        match engine.session("nope") {
+            Err(TimError::ModelNotFound { name, available }) => {
+                assert_eq!(name, "nope");
+                assert_eq!(available, vec!["doubler".to_string()]);
+            }
+            other => panic!("expected ModelNotFound, got {other:?}"),
+        }
+        engine.shutdown();
     }
 }

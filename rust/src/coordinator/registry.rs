@@ -1,0 +1,200 @@
+//! Multi-model registry: name → (hardware profile, batch policy, tile
+//! footprint, executor-backend factory).
+//!
+//! The registry is the engine's unit of configuration: callers describe
+//! *what* to serve ([`ModelSpec`]) and the engine decides admission and
+//! spawns workers. [`ModelSpec::for_network`] is the facade most callers
+//! want — it maps the network onto the architecture, simulates it for the
+//! hardware accounting, and derives the tile footprint, so nothing needs
+//! to wire mapper/sim/PJRT by hand.
+
+use std::collections::BTreeMap;
+
+use crate::arch::ArchConfig;
+use crate::error::{Result, TimError};
+use crate::model::Network;
+use crate::sim::SimReport;
+
+use super::backend::{BackendFactory, ExecutorBackend};
+use super::batcher::BatchPolicy;
+
+/// Everything the engine needs to serve one model.
+pub struct ModelSpec {
+    pub name: String,
+    /// Simulated per-inference hardware profile (latency/energy charging).
+    pub hardware: SimReport,
+    /// Dynamic batching policy for this model's worker.
+    pub policy: BatchPolicy,
+    /// Peak tiles the mapped model occupies — the admission-control
+    /// currency (see [`crate::mapper::tiles_required`]).
+    pub tiles_required: usize,
+    /// Max requests in flight before submissions are rejected with
+    /// [`TimError::QueueFull`]; 0 = unlimited.
+    pub max_queue: usize,
+    pub(crate) factory: BackendFactory,
+}
+
+impl ModelSpec {
+    /// Minimal spec: explicit hardware profile + backend factory, default
+    /// policy, no tile footprint, unbounded queue.
+    pub fn new<B, F>(name: &str, hardware: SimReport, factory: F) -> Self
+    where
+        B: ExecutorBackend,
+        F: FnOnce() -> Result<Box<B>> + Send + 'static,
+    {
+        Self {
+            name: name.to_string(),
+            hardware,
+            policy: BatchPolicy::default(),
+            tiles_required: 0,
+            max_queue: 0,
+            factory: Box::new(move || {
+                let backend: Box<dyn ExecutorBackend> = factory()?;
+                Ok(backend)
+            }),
+        }
+    }
+
+    /// Facade: map `net` onto `arch`, simulate it for hardware accounting,
+    /// and derive the tile footprint — callers only supply the backend.
+    pub fn for_network<B, F>(name: &str, net: &Network, arch: &ArchConfig, factory: F) -> Self
+    where
+        B: ExecutorBackend,
+        F: FnOnce() -> Result<Box<B>> + Send + 'static,
+    {
+        let prog = crate::mapper::map_network(net, arch);
+        let tiles = prog.max_tiles_used();
+        let hardware = crate::sim::simulate(&prog, arch);
+        Self::new(name, hardware, factory).with_tiles(tiles)
+    }
+
+    pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_tiles(mut self, tiles: usize) -> Self {
+        self.tiles_required = tiles;
+        self
+    }
+
+    pub fn with_max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = max_queue;
+        self
+    }
+}
+
+impl std::fmt::Debug for ModelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelSpec")
+            .field("name", &self.name)
+            .field("network", &self.hardware.network)
+            .field("tiles_required", &self.tiles_required)
+            .field("max_queue", &self.max_queue)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Name → spec map with duplicate detection. Iteration order is the
+/// registration key order (BTreeMap), so admission is deterministic.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    specs: BTreeMap<String, ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model; rejects duplicates with
+    /// [`TimError::DuplicateModel`] and invalid policies with
+    /// [`TimError::InvalidConfig`] (a `max_batch` of 0 would otherwise
+    /// panic the worker thread, not the caller).
+    pub fn register(&mut self, spec: ModelSpec) -> Result<()> {
+        if spec.policy.max_batch == 0 {
+            return Err(TimError::InvalidConfig(format!(
+                "model '{}': max_batch must be >= 1",
+                spec.name
+            )));
+        }
+        if self.specs.contains_key(&spec.name) {
+            return Err(TimError::DuplicateModel { name: spec.name.clone() });
+        }
+        self.specs.insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.specs.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub(crate) fn iter(&self) -> impl Iterator<Item = &ModelSpec> {
+        self.specs.values()
+    }
+
+    pub(crate) fn into_specs(self) -> BTreeMap<String, ModelSpec> {
+        self.specs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimOnlyBackend;
+    use crate::model;
+
+    fn spec(name: &str) -> ModelSpec {
+        ModelSpec::for_network(name, &model::tiny_cnn(), &ArchConfig::tim_dnn(), || {
+            Ok(Box::new(SimOnlyBackend::new()))
+        })
+    }
+
+    #[test]
+    fn double_registration_is_typed_error() {
+        let mut r = ModelRegistry::new();
+        r.register(spec("a")).unwrap();
+        match r.register(spec("a")) {
+            Err(TimError::DuplicateModel { name }) => assert_eq!(name, "a"),
+            other => panic!("expected DuplicateModel, got {other:?}"),
+        }
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn for_network_derives_footprint_and_hardware() {
+        let s = spec("timnet");
+        assert!(s.tiles_required > 0);
+        assert!(s.tiles_required <= 32);
+        assert!(s.hardware.total_s > 0.0);
+        assert_eq!(s.hardware.network, "TiMNet");
+    }
+
+    #[test]
+    fn zero_max_batch_rejected_at_registration() {
+        let mut r = ModelRegistry::new();
+        let s = spec("m").with_policy(BatchPolicy {
+            max_batch: 0,
+            max_wait: std::time::Duration::from_millis(1),
+        });
+        assert!(matches!(r.register(s), Err(TimError::InvalidConfig(_))));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn names_sorted_and_deterministic() {
+        let mut r = ModelRegistry::new();
+        r.register(spec("b")).unwrap();
+        r.register(spec("a")).unwrap();
+        assert_eq!(r.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(!r.is_empty());
+    }
+}

@@ -1,0 +1,146 @@
+//! Crate-wide typed errors (the request path speaks `TimError`, not
+//! `anyhow`).
+//!
+//! Every fallible operation on the serving path — registry lookups,
+//! admission control, backend construction/execution, artifact loading —
+//! returns a variant callers can match on. Binaries may still stringify at
+//! the very edge (`main` returning `timdnn::Result<()>` prints via
+//! `Debug`), but nothing inside the crate erases error types.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, TimError>;
+
+/// The typed error for every layer of the serving stack.
+#[derive(Debug)]
+pub enum TimError {
+    /// A model with this name is already registered.
+    DuplicateModel { name: String },
+    /// No model registered under this name.
+    ModelNotFound { name: String, available: Vec<String> },
+    /// Admission control: the model's tile footprint exceeds what remains
+    /// of the engine's tile budget.
+    AdmissionRejected { model: String, tiles_required: usize, tiles_available: usize },
+    /// Admission control: too many requests in flight for this model.
+    QueueFull { model: String, depth: usize, limit: usize },
+    /// The engine worker for this model is no longer running.
+    EngineStopped { model: String },
+    /// The executor was handed a batch of the wrong size.
+    BatchMismatch { expected: usize, got: usize },
+    /// A request carried the wrong number of input tensors.
+    InputArity { expected: usize, got: usize },
+    /// A tensor had the wrong number of scalar elements.
+    ShapeMismatch { context: String, expected: usize, got: usize },
+    /// The requested executor backend cannot run in this build/environment.
+    BackendUnavailable { backend: String, reason: String },
+    /// A build artifact is missing or unloadable (run `make artifacts`).
+    Artifact { path: PathBuf, reason: String },
+    /// A data file parsed but held invalid contents.
+    Data { what: String, reason: String },
+    /// A backend/runtime execution failure.
+    Exec { what: String, reason: String },
+    /// Invalid configuration or CLI usage.
+    InvalidConfig(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for TimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TimError::DuplicateModel { name } => {
+                write!(f, "model '{name}' is already registered")
+            }
+            TimError::ModelNotFound { name, available } => {
+                write!(f, "model '{name}' not found (registered: {available:?})")
+            }
+            TimError::AdmissionRejected { model, tiles_required, tiles_available } => {
+                write!(
+                    f,
+                    "admission rejected for '{model}': needs {tiles_required} tiles, \
+                     {tiles_available} left in the engine's tile budget"
+                )
+            }
+            TimError::QueueFull { model, depth, limit } => {
+                write!(f, "queue full for '{model}': {depth} requests in flight (limit {limit})")
+            }
+            TimError::EngineStopped { model } => {
+                write!(f, "engine worker for '{model}' has stopped")
+            }
+            TimError::BatchMismatch { expected, got } => {
+                write!(f, "batch size mismatch: executor expects {expected}, got {got}")
+            }
+            TimError::InputArity { expected, got } => {
+                write!(f, "request carries {got} input tensors, backend expects {expected}")
+            }
+            TimError::ShapeMismatch { context, expected, got } => {
+                write!(f, "{context}: expected {expected} elements, got {got}")
+            }
+            TimError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            TimError::Artifact { path, reason } => {
+                write!(f, "artifact {}: {reason} — run `make artifacts`", path.display())
+            }
+            TimError::Data { what, reason } => write!(f, "malformed {what}: {reason}"),
+            TimError::Exec { what, reason } => write!(f, "{what}: {reason}"),
+            TimError::InvalidConfig(msg) => write!(f, "{msg}"),
+            TimError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TimError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TimError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TimError {
+    fn from(e: std::io::Error) -> Self {
+        TimError::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = TimError::Artifact {
+            path: PathBuf::from("artifacts/x.hlo.txt"),
+            reason: "not found".into(),
+        };
+        assert!(e.to_string().contains("make artifacts"));
+
+        let e = TimError::ModelNotFound { name: "nope".into(), available: vec!["a".into()] };
+        assert!(e.to_string().contains("nope"));
+        assert!(e.to_string().contains('a'));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: TimError = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn variants_are_matchable() {
+        let e = TimError::QueueFull { model: "m".into(), depth: 4, limit: 4 };
+        match e {
+            TimError::QueueFull { depth, limit, .. } => {
+                assert_eq!(depth, 4);
+                assert_eq!(limit, 4);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+}

@@ -133,6 +133,19 @@ impl Program {
         }
         out
     }
+
+    /// Peak number of tiles any instruction uses in parallel — the
+    /// engine's admission-control currency (0 for programs with no VMM).
+    pub fn max_tiles_used(&self) -> usize {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Vmm { tiles_used, .. } => *tiles_used,
+                _ => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +172,7 @@ mod tests {
         assert_eq!(p.total_vmm_accesses(), 10);
         assert_eq!(p.total_weight_words(), 4096);
         assert_eq!(p.layers(), vec!["l1"]);
+        assert_eq!(p.max_tiles_used(), 2);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod arch;
 pub mod baseline;
 pub mod coordinator;
 pub mod energy;
+pub mod error;
 pub mod isa;
 pub mod mapper;
 pub mod model;
@@ -36,5 +37,7 @@ pub mod tpc;
 pub mod util;
 pub mod variation;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::TimError;
+
+/// Crate-wide result type (typed — see [`error::TimError`]).
+pub type Result<T> = error::Result<T>;

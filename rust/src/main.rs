@@ -6,13 +6,17 @@
 //!   sweep                        Fig 12/13 full-suite sweep
 //!   kernel                       Fig 14 kernel-level comparison
 //!   variation [--samples N]      Figs 17/18 Monte-Carlo study
-//!   serve [--requests N]         serve the e2e model via PJRT (needs
-//!                                `make artifacts`)
+//!   serve [--models a,b,c] [--backend functional|pjrt|sim]
+//!                                multi-model serving through the Engine
+//!                                (functional/sim need no artifacts)
 //!   info                         architecture summary
 
 use timdnn::arch::ArchConfig;
-use timdnn::coordinator::{BatchPolicy, PjrtExecutor, Server};
+use timdnn::coordinator::{
+    BatchPolicy, Engine, FunctionalBackend, ModelSpec, PjrtBackend, SimOnlyBackend,
+};
 use timdnn::energy::{self, constants::*};
+use timdnn::error::TimError;
 use timdnn::model;
 use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
 use timdnn::sim;
@@ -21,11 +25,11 @@ use timdnn::util::prng::Rng;
 use timdnn::util::table::{sig, Table};
 use timdnn::variation::VariationStudy;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> timdnn::Result<()> {
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("tables") => tables(),
-        Some("sim") => sim_cmd(&args),
+        Some("sim") => sim_cmd(&args)?,
         Some("sweep") => sweep(),
         Some("kernel") => kernel(),
         Some("variation") => variation(&args),
@@ -92,12 +96,16 @@ fn tables() {
     t4.print();
 }
 
-fn sim_cmd(args: &Args) {
+fn unknown_benchmark(which: &str) -> TimError {
+    TimError::ModelNotFound {
+        name: which.to_string(),
+        available: model::zoo().into_iter().map(|b| b.net.name).collect(),
+    }
+}
+
+fn sim_cmd(args: &Args) -> timdnn::Result<()> {
     let which = args.str_or("benchmark", "alexnet");
-    let bench = model::zoo()
-        .into_iter()
-        .find(|b| b.net.name.to_lowercase().contains(&which.to_lowercase()))
-        .unwrap_or_else(|| panic!("unknown benchmark '{which}'"));
+    let bench = model::find_benchmark(&which).ok_or_else(|| unknown_benchmark(&which))?;
     let mut t = Table::new(
         &format!("{} on three architectures", bench.net.name),
         &["Architecture", "inf/s", "MAC ms", "non-MAC ms", "Energy/inf (uJ)"],
@@ -118,6 +126,7 @@ fn sim_cmd(args: &Args) {
     }
     t.footnote(&format!("paper: {} inf/s on TiM-DNN", bench.paper_inf_per_s));
     t.print();
+    Ok(())
 }
 
 fn sweep() {
@@ -172,13 +181,10 @@ fn variation(args: &Args) {
 }
 
 /// Export a chrome://tracing JSON of one simulated inference.
-fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+fn trace_cmd(args: &Args) -> timdnn::Result<()> {
     let which = args.str_or("benchmark", "alexnet");
     let out = args.str_or("out", "/tmp/timdnn_trace.json");
-    let bench = model::zoo()
-        .into_iter()
-        .find(|b| b.net.name.to_lowercase().contains(&which.to_lowercase()))
-        .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{which}'"))?;
+    let bench = model::find_benchmark(&which).ok_or_else(|| unknown_benchmark(&which))?;
     let arch = ArchConfig::tim_dnn();
     let prog = timdnn::mapper::map_network(&bench.net, &arch);
     let events = sim::trace::trace(&prog, &arch);
@@ -188,35 +194,133 @@ fn trace_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args) -> anyhow::Result<()> {
-    let requests = args.usize_or("requests", 256);
-    let batch = args.usize_or("batch", 8);
-    let artifact = format!("tiny_cnn_b{batch}");
-    let hw = sim::run(&model::tiny_cnn(), &ArchConfig::tim_dnn());
-    let factory = move || -> anyhow::Result<PjrtExecutor> {
-        let mut rt = Runtime::cpu()?;
-        rt.load_dir(&artifacts_dir())?;
-        anyhow::ensure!(
-            rt.names().iter().any(|n| *n == artifact),
-            "artifact {artifact} missing (have {:?}) — run `make artifacts`",
-            rt.names()
-        );
-        Ok(PjrtExecutor::new(rt, &artifact, batch, vec![16, 16, 1]))
+/// Build one model's spec for the chosen backend.
+fn serve_spec(name: &str, backend: &str, batch: usize) -> timdnn::Result<ModelSpec> {
+    let arch = ArchConfig::tim_dnn();
+    let net = model::find_network(name).ok_or_else(|| TimError::ModelNotFound {
+        name: name.to_string(),
+        available: {
+            let mut v: Vec<String> = model::zoo().into_iter().map(|b| b.net.name).collect();
+            v.push("timnet".into());
+            v
+        },
+    })?;
+    let is_timnet = net.name == "TiMNet";
+    let policy = BatchPolicy { max_batch: batch, ..BatchPolicy::default() };
+    let spec = match backend {
+        "sim" => ModelSpec::for_network(name, &net, &arch, || Ok(Box::new(SimOnlyBackend::new()))),
+        "functional" => {
+            if !is_timnet {
+                return Err(TimError::BackendUnavailable {
+                    backend: "functional".into(),
+                    reason: format!(
+                        "only the in-repo TiMNet model has a functional implementation \
+                         (requested '{}'); use --backend sim for the Table III benchmarks",
+                        net.name
+                    ),
+                });
+            }
+            ModelSpec::for_network(name, &net, &arch, || {
+                Ok(Box::new(FunctionalBackend::from_artifacts_or_synthetic(7)?))
+            })
+        }
+        "pjrt" => {
+            if !is_timnet {
+                return Err(TimError::BackendUnavailable {
+                    backend: "pjrt".into(),
+                    reason: format!("no AOT artifact for '{}'", net.name),
+                });
+            }
+            let artifact = format!("tiny_cnn_b{batch}");
+            ModelSpec::for_network(name, &net, &arch, move || {
+                let mut rt = Runtime::cpu()?;
+                rt.load_dir(&artifacts_dir())?;
+                if !rt.names().iter().any(|n| *n == artifact) {
+                    return Err(TimError::Artifact {
+                        path: artifacts_dir().join(format!("{artifact}.hlo.txt")),
+                        reason: format!("not found (have {:?})", rt.names()),
+                    });
+                }
+                Ok(Box::new(PjrtBackend::batched(rt, &artifact, batch, vec![16, 16, 1])))
+            })
+        }
+        other => {
+            return Err(TimError::InvalidConfig(format!(
+                "unknown backend '{other}' (expected functional | pjrt | sim)"
+            )))
+        }
     };
-    let server = Server::spawn(factory, BatchPolicy::default(), hw);
-    let client = server.client();
-    let mut rng = Rng::seeded(7);
-    let rxs: Vec<_> = (0..requests)
-        .map(|_| {
-            let img: Vec<f32> = (0..256).map(|_| rng.next_f32()).collect();
-            client.submit(TensorF32::new(vec![16, 16, 1], img))
-        })
-        .collect();
-    for rx in rxs {
-        rx.recv()?;
+    Ok(spec.with_policy(policy))
+}
+
+/// A plausible random input for one request against `net_name`.
+fn serve_input(net_name: &str, rng: &mut Rng) -> TensorF32 {
+    if net_name == "TiMNet" {
+        let img: Vec<f32> = (0..256).map(|_| rng.next_f32()).collect();
+        TensorF32::new(vec![16, 16, 1], img)
+    } else if net_name == "LSTM" || net_name == "GRU" {
+        let x: Vec<f32> = (0..300).map(|_| rng.trit_sparse(0.4) as f32).collect();
+        TensorF32::new(vec![300], x)
+    } else {
+        // ImageNet-class CNNs are only served by the echo backend; a small
+        // stand-in activation keeps the load study cheap.
+        let x: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+        TensorF32::new(vec![64], x)
     }
-    drop(client);
-    let snap = server.shutdown();
-    snap.report("tiny_cnn via PJRT on simulated TiM-DNN");
+}
+
+/// Multi-model serving through the Engine.
+fn serve(args: &Args) -> timdnn::Result<()> {
+    let requests = args.usize_or("requests", 64);
+    let batch = args.usize_or("batch", 8);
+    let backend = args.str_or("backend", "functional");
+    let models: Vec<String> = args
+        .str_or("models", "timnet")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if models.is_empty() {
+        return Err(TimError::InvalidConfig("--models must name at least one model".into()));
+    }
+
+    let mut builder = Engine::builder();
+    for name in &models {
+        let spec = serve_spec(name, &backend, batch)?;
+        println!(
+            "registered '{}' ({}): {:.0} inf/s simulated, {} tiles",
+            name, backend, spec.hardware.inf_per_s, spec.tiles_required
+        );
+        builder = builder.register(spec)?;
+    }
+    let engine = builder.build()?;
+
+    // Drive every model concurrently from its own client thread.
+    let mut handles = Vec::new();
+    for name in &models {
+        let session = engine.session(name)?;
+        let net_name = model::find_network(name).map(|n| n.name).unwrap_or_default();
+        let n = requests;
+        handles.push(std::thread::spawn(move || -> timdnn::Result<()> {
+            let mut rng = Rng::seeded(7);
+            let rxs: Vec<_> = (0..n)
+                .map(|_| session.submit(serve_input(&net_name, &mut rng)))
+                .collect::<timdnn::Result<_>>()?;
+            for rx in rxs {
+                rx.recv().map_err(|_| TimError::EngineStopped {
+                    model: session.model().to_string(),
+                })??;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+
+    for (name, snap) in engine.shutdown() {
+        println!();
+        snap.report(&format!("{name} via {backend} backend on simulated TiM-DNN"));
+    }
     Ok(())
 }

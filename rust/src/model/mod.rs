@@ -9,7 +9,10 @@
 
 mod zoo;
 
-pub use zoo::{alexnet, gru_ptb, inception_v1, lstm_ptb, resnet34, tiny_cnn, zoo, Benchmark};
+pub use zoo::{
+    alexnet, find_benchmark, find_network, gru_ptb, inception_v1, lstm_ptb, resnet34, tiny_cnn,
+    zoo, Benchmark,
+};
 
 /// Activation precision of a layer's inputs (Table III "[A,W]" column).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -73,6 +73,24 @@ pub fn zoo() -> Vec<Benchmark> {
     ]
 }
 
+/// Look up a Table III benchmark by case-insensitive substring.
+pub fn find_benchmark(name: &str) -> Option<Benchmark> {
+    let q = name.to_lowercase();
+    zoo().into_iter().find(|b| b.net.name.to_lowercase().contains(&q))
+}
+
+/// Look up a *servable* network: the five Table III benchmarks (by
+/// case-insensitive substring, like [`find_benchmark`]) plus the in-repo
+/// end-to-end model under the exact aliases "timnet" / "tiny_cnn" /
+/// "tiny" (exact, so a typo like "net" cannot silently resolve here).
+pub fn find_network(name: &str) -> Option<Network> {
+    let q = name.to_lowercase();
+    if matches!(q.as_str(), "timnet" | "tiny_cnn" | "tinycnn" | "tiny") {
+        return Some(tiny_cnn());
+    }
+    find_benchmark(name).map(|b| b.net)
+}
+
 fn conv(name: &str, c_in: usize, c_out: usize, k: usize, h_out: usize, w_out: usize) -> Layer {
     Layer::Conv2d { name: name.into(), c_in, c_out, kh: k, kw: k, h_out, w_out }
 }
@@ -276,5 +294,18 @@ mod tests {
     #[test]
     fn tiny_cnn_is_small() {
         assert!(tiny_cnn().total_weight_words() < 50_000);
+    }
+
+    #[test]
+    fn lookup_finds_benchmarks_and_timnet() {
+        assert_eq!(find_benchmark("alex").unwrap().net.name, "AlexNet");
+        assert_eq!(find_benchmark("LSTM").unwrap().net.name, "LSTM");
+        assert!(find_benchmark("timnet").is_none()); // not a Table III row
+        assert_eq!(find_network("timnet").unwrap().name, "TiMNet");
+        assert_eq!(find_network("tiny").unwrap().name, "TiMNet");
+        assert_eq!(find_network("resnet").unwrap().name, "ResNet-34");
+        // Substrings of the aliases must NOT resolve to TiMNet.
+        assert_eq!(find_network("net").unwrap().name, "AlexNet");
+        assert!(find_network("nope").is_none());
     }
 }

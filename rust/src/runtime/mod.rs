@@ -9,11 +9,17 @@
 //! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
 //! emits protos with 64-bit instruction ids which xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real implementation needs the `xla` bindings and is gated behind
+//! the `pjrt` cargo feature (see `Cargo.toml`); the default build ships a
+//! stub [`Runtime`] with the same API that returns
+//! [`TimError::BackendUnavailable`], so the serving stack compiles and
+//! runs (through the functional/sim backends) in the offline environment.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+use crate::error::TimError;
 
 /// A dense f32 tensor crossing the runtime boundary.
 #[derive(Clone, Debug, PartialEq)]
@@ -33,120 +39,6 @@ impl TensorF32 {
     }
 }
 
-/// One compiled executable.
-struct Loaded {
-    exe: xla::PjRtLoadedExecutable,
-    path: PathBuf,
-}
-
-/// The PJRT runtime: one CPU client, one compiled executable per artifact.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, Loaded>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, exes: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile one HLO-text artifact under `name`.
-    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        self.exes.insert(name.to_string(), Loaded { exe, path: path.to_path_buf() });
-        Ok(())
-    }
-
-    /// Load every `*.hlo.txt` in a directory; artifact name = file stem
-    /// without the `.hlo` suffix. Returns the loaded names (sorted).
-    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
-        if !dir.is_dir() {
-            bail!(
-                "artifact directory {} not found — run `make artifacts` first",
-                dir.display()
-            );
-        }
-        let mut names = Vec::new();
-        for entry in std::fs::read_dir(dir)? {
-            let path = entry?.path();
-            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
-            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
-                self.load(stem, &path)?;
-                names.push(stem.to_string());
-            }
-        }
-        names.sort();
-        if names.is_empty() {
-            bail!("no *.hlo.txt artifacts in {} — run `make artifacts`", dir.display());
-        }
-        Ok(names)
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
-    }
-
-    pub fn artifact_path(&self, name: &str) -> Option<&Path> {
-        self.exes.get(name).map(|l| l.path.as_path())
-    }
-
-    /// Execute `name` with f32 inputs; returns the tuple of f32 outputs.
-    /// (All our AOT entry points are lowered with `return_tuple=True`.)
-    pub fn execute(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let loaded = self
-            .exes
-            .get(name)
-            .with_context(|| format!("artifact '{name}' not loaded (have: {:?})", self.names()))?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape input for '{name}': {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let refs: Vec<&xla::Literal> = literals.iter().collect();
-        let bufs = loaded
-            .exe
-            .execute::<&xla::Literal>(&refs)
-            .map_err(|e| anyhow!("executing '{name}': {e:?}"))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of '{name}': {e:?}"))?;
-        let parts = result.to_tuple().map_err(|e| anyhow!("untupling '{name}': {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit
-                    .array_shape()
-                    .map_err(|e| anyhow!("output shape of '{name}': {e:?}"))?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("output data of '{name}': {e:?}"))?;
-                Ok(TensorF32::new(dims, data))
-            })
-            .collect()
-    }
-}
-
 /// Default artifacts directory (repo-root relative, overridable by env).
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("TIMDNN_ARTIFACTS")
@@ -154,9 +46,216 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
+/// The uniform "this build has no PJRT" error.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable() -> TimError {
+    TimError::BackendUnavailable {
+        backend: "pjrt".into(),
+        reason: "built without the `pjrt` cargo feature (xla bindings not vendored); \
+                 use the functional or sim backend"
+            .into(),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use crate::error::{Result, TimError};
+
+    use super::TensorF32;
+
+    /// One compiled executable.
+    struct Loaded {
+        exe: xla::PjRtLoadedExecutable,
+        path: PathBuf,
+    }
+
+    /// The PJRT runtime: one CPU client, one compiled executable per
+    /// artifact.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        exes: HashMap<String, Loaded>,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| TimError::Exec {
+                what: "PJRT cpu client".into(),
+                reason: format!("{e:?}"),
+            })?;
+            Ok(Self { client, exes: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile one HLO-text artifact under `name`.
+        pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+            let path_str = path.to_str().ok_or_else(|| TimError::Artifact {
+                path: path.to_path_buf(),
+                reason: "non-utf8 artifact path".into(),
+            })?;
+            let proto =
+                xla::HloModuleProto::from_text_file(path_str).map_err(|e| TimError::Artifact {
+                    path: path.to_path_buf(),
+                    reason: format!("parsing HLO text: {e:?}"),
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| TimError::Artifact {
+                path: path.to_path_buf(),
+                reason: format!("compiling: {e:?}"),
+            })?;
+            self.exes.insert(name.to_string(), Loaded { exe, path: path.to_path_buf() });
+            Ok(())
+        }
+
+        /// Load every `*.hlo.txt` in a directory; artifact name = file stem
+        /// without the `.hlo` suffix. Returns the loaded names (sorted).
+        pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+            if !dir.is_dir() {
+                return Err(TimError::Artifact {
+                    path: dir.to_path_buf(),
+                    reason: "artifact directory not found".into(),
+                });
+            }
+            let mut names = Vec::new();
+            for entry in std::fs::read_dir(dir)? {
+                let path = entry?.path();
+                let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    self.load(stem, &path)?;
+                    names.push(stem.to_string());
+                }
+            }
+            names.sort();
+            if names.is_empty() {
+                return Err(TimError::Artifact {
+                    path: dir.to_path_buf(),
+                    reason: "no *.hlo.txt artifacts found".into(),
+                });
+            }
+            Ok(names)
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+            v.sort();
+            v
+        }
+
+        pub fn artifact_path(&self, name: &str) -> Option<&Path> {
+            self.exes.get(name).map(|l| l.path.as_path())
+        }
+
+        /// Execute `name` with f32 inputs; returns the tuple of f32
+        /// outputs. (All our AOT entry points are lowered with
+        /// `return_tuple=True`.)
+        pub fn execute(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            let exec_err = |reason: String| TimError::Exec {
+                what: format!("artifact '{name}'"),
+                reason,
+            };
+            let loaded = self.exes.get(name).ok_or_else(|| {
+                exec_err(format!("not loaded (have: {:?})", self.names()))
+            })?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| exec_err(format!("reshape input: {e:?}")))
+                })
+                .collect::<Result<_>>()?;
+            let refs: Vec<&xla::Literal> = literals.iter().collect();
+            let bufs = loaded
+                .exe
+                .execute::<&xla::Literal>(&refs)
+                .map_err(|e| exec_err(format!("executing: {e:?}")))?;
+            let result = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| exec_err(format!("fetching result: {e:?}")))?;
+            let parts =
+                result.to_tuple().map_err(|e| exec_err(format!("untupling: {e:?}")))?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit
+                        .array_shape()
+                        .map_err(|e| exec_err(format!("output shape: {e:?}")))?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit
+                        .to_vec::<f32>()
+                        .map_err(|e| exec_err(format!("output data: {e:?}")))?;
+                    Ok(TensorF32::new(dims, data))
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::Path;
+
+    use crate::error::Result;
+
+    use super::{pjrt_unavailable, TensorF32};
+
+    /// API-compatible stand-in for the PJRT runtime in builds without the
+    /// `pjrt` feature. [`Runtime::cpu`] fails with
+    /// [`crate::TimError::BackendUnavailable`], so callers that probe for
+    /// PJRT (examples, integration tests) skip gracefully.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Err(pjrt_unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".into()
+        }
+
+        pub fn load(&mut self, _name: &str, _path: &Path) -> Result<()> {
+            Err(pjrt_unavailable())
+        }
+
+        pub fn load_dir(&mut self, _dir: &Path) -> Result<Vec<String>> {
+            Err(pjrt_unavailable())
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn artifact_path(&self, _name: &str) -> Option<&Path> {
+            None
+        }
+
+        pub fn execute(&self, _name: &str, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            Err(pjrt_unavailable())
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn tensor_shape_checked() {
@@ -174,9 +273,21 @@ mod tests {
     fn missing_dir_is_actionable_error() {
         let mut rt = match Runtime::cpu() {
             Ok(rt) => rt,
-            Err(_) => return, // PJRT unavailable in this environment
+            Err(_) => return, // PJRT unavailable in this build
         };
         let err = rt.load_dir(Path::new("/definitely/not/here")).unwrap_err();
         assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::cpu().unwrap_err();
+        match err {
+            crate::TimError::BackendUnavailable { ref backend, .. } => {
+                assert_eq!(backend, "pjrt")
+            }
+            ref other => panic!("unexpected error {other}"),
+        }
     }
 }

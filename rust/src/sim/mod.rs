@@ -103,6 +103,12 @@ impl SimReport {
     pub fn energy_per_inference(&self) -> f64 {
         self.energy.total()
     }
+
+    /// Steady-state simulated latency for `n` back-to-back inferences —
+    /// what the serving engine charges a batch of `n` real requests.
+    pub fn batch_latency_s(&self, n: usize) -> f64 {
+        self.total_s * n as f64
+    }
 }
 
 /// On-chip buffer bandwidth (bytes/s): wide SRAM macros, several times the
@@ -329,6 +335,13 @@ mod tests {
         assert!(b32.total_s < b1.total_s);
         // MAC work per inference is batch-independent.
         assert!((b32.mac_s - b1.mac_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batch_latency_scales_linearly() {
+        let r = run(&model::tiny_cnn(), &ArchConfig::tim_dnn());
+        assert_eq!(r.batch_latency_s(0), 0.0);
+        assert!((r.batch_latency_s(8) - 8.0 * r.total_s).abs() < 1e-15);
     }
 
     #[test]

@@ -1,32 +1,41 @@
-//! Integration: the serving coordinator under concurrency, failure
-//! injection, and (when artifacts exist) over the real PJRT executor.
+//! Integration: the serving engine under concurrency, failure injection,
+//! and (when artifacts exist) over the real PJRT executor.
 
 use std::time::Duration;
 
-use anyhow::Result;
 use timdnn::arch::ArchConfig;
-use timdnn::coordinator::{BatchPolicy, ModelExecutor, PjrtExecutor, Server};
+use timdnn::coordinator::{
+    BatchPolicy, Engine, ExecutorBackend, ModelSpec, PjrtBackend,
+};
+use timdnn::error::{Result, TimError};
 use timdnn::model;
 use timdnn::runtime::{artifacts_dir, Runtime, TensorF32};
 use timdnn::sim;
 
-/// Executor that fails on a chosen batch index (failure injection).
+/// Backend that fails on a chosen batch index (failure injection).
 struct Flaky {
     calls: usize,
     fail_on: usize,
 }
 
-impl ModelExecutor for Flaky {
-    fn execute_batch(&mut self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+impl ExecutorBackend for Flaky {
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
         self.calls += 1;
         if self.calls == self.fail_on {
-            anyhow::bail!("injected failure on batch {}", self.calls);
+            return Err(TimError::Exec {
+                what: "flaky backend".into(),
+                reason: format!("injected failure on batch {}", self.calls),
+            });
         }
-        Ok(inputs.to_vec())
+        Ok(batch.to_vec())
     }
 
-    fn batch_size(&self) -> usize {
-        2
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(2)
+    }
+
+    fn name(&self) -> &str {
+        "flaky"
     }
 }
 
@@ -35,50 +44,66 @@ fn hw() -> sim::SimReport {
 }
 
 #[test]
-fn failed_batch_does_not_kill_the_server() {
-    let server = Server::spawn(
-        || Ok(Flaky { calls: 0, fail_on: 1 }),
-        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
-        hw(),
-    );
-    let client = server.client();
-    // First batch fails (its requests get no response); later ones succeed.
-    let dead = client.submit(TensorF32::new(vec![1], vec![1.0]));
+fn failed_batch_does_not_kill_the_engine() {
+    let engine = Engine::builder()
+        .register(
+            ModelSpec::new("flaky", hw(), || Ok(Box::new(Flaky { calls: 0, fail_on: 1 })))
+                .with_policy(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) }),
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+    let session = engine.session("flaky").unwrap();
+    // First batch fails (its requests get a typed error); later ones
+    // succeed.
+    let dead = session.submit(TensorF32::new(vec![1], vec![1.0])).unwrap();
     // Give the worker time to consume + fail the first batch.
     std::thread::sleep(Duration::from_millis(30));
-    let alive = client.submit(TensorF32::new(vec![1], vec![2.0]));
-    let resp = alive.recv_timeout(Duration::from_secs(5)).expect("server survived");
-    assert_eq!(resp.output.data, vec![2.0]);
-    // The failed batch's reply channel was dropped without a response.
-    assert!(dead.recv_timeout(Duration::from_millis(10)).is_err());
-    let snap = server.shutdown();
-    assert_eq!(snap.completed, 1);
+    let alive = session.submit(TensorF32::new(vec![1], vec![2.0])).unwrap();
+    let resp = alive
+        .recv_timeout(Duration::from_secs(5))
+        .expect("engine survived")
+        .expect("second batch succeeds");
+    assert_eq!(resp.output().data, vec![2.0]);
+    // The failed batch's requests received a typed error, not silence.
+    match dead.recv_timeout(Duration::from_secs(5)).expect("reply delivered") {
+        Err(TimError::Exec { reason, .. }) => assert!(reason.contains("injected"), "{reason}"),
+        other => panic!("expected typed Exec error, got {other:?}"),
+    }
+    let snaps = engine.shutdown();
+    assert_eq!(snaps["flaky"].completed, 1);
 }
 
 #[test]
 fn many_concurrent_clients() {
     struct Echo;
-    impl ModelExecutor for Echo {
-        fn execute_batch(&mut self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-            Ok(inputs.to_vec())
+    impl ExecutorBackend for Echo {
+        fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+            Ok(batch.to_vec())
         }
-        fn batch_size(&self) -> usize {
-            8
+        fn fixed_batch(&self) -> Option<usize> {
+            Some(8)
+        }
+        fn name(&self) -> &str {
+            "echo"
         }
     }
-    let server = Server::spawn(
-        || Ok(Echo),
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        hw(),
-    );
+    let engine = Engine::builder()
+        .register(
+            ModelSpec::new("echo", hw(), || Ok(Box::new(Echo)))
+                .with_policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) }),
+        )
+        .unwrap()
+        .build()
+        .unwrap();
     let handles: Vec<_> = (0..4)
         .map(|t| {
-            let client = server.client();
+            let session = engine.session("echo").unwrap();
             std::thread::spawn(move || {
                 for i in 0..50 {
                     let v = (t * 1000 + i) as f32;
-                    let resp = client.infer(TensorF32::new(vec![1], vec![v])).unwrap();
-                    assert_eq!(resp.output.data, vec![v], "response routed to wrong client");
+                    let resp = session.infer(TensorF32::new(vec![1], vec![v])).unwrap();
+                    assert_eq!(resp.output().data, vec![v], "response routed to wrong client");
                 }
             })
         })
@@ -86,41 +111,73 @@ fn many_concurrent_clients() {
     for h in handles {
         h.join().unwrap();
     }
-    let snap = server.shutdown();
-    assert_eq!(snap.completed, 200);
-    assert!(snap.throughput() > 0.0);
+    let snaps = engine.shutdown();
+    assert_eq!(snaps["echo"].completed, 200);
+    assert!(snaps["echo"].throughput() > 0.0);
+}
+
+#[test]
+fn submissions_after_shutdown_are_typed_errors() {
+    struct Echo;
+    impl ExecutorBackend for Echo {
+        fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+            Ok(batch.to_vec())
+        }
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+    let engine = Engine::builder()
+        .register(ModelSpec::new("echo", hw(), || Ok(Box::new(Echo))))
+        .unwrap()
+        .build()
+        .unwrap();
+    let session = engine.session("echo").unwrap();
+    engine.shutdown();
+    match session.submit(TensorF32::new(vec![1], vec![0.0])) {
+        Err(TimError::EngineStopped { model }) => assert_eq!(model, "echo"),
+        other => panic!("expected EngineStopped, got {other:?}"),
+    }
 }
 
 #[test]
 fn e2e_pjrt_serving_when_artifacts_present() {
     let dir = artifacts_dir();
-    if !dir.join("tiny_cnn_b8.hlo.txt").exists() {
-        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    if !cfg!(feature = "pjrt") || !dir.join("tiny_cnn_b8.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing or PJRT not compiled in");
         return;
     }
     let dir2 = dir.clone();
-    let factory = move || -> Result<PjrtExecutor> {
-        let mut rt = Runtime::cpu()?;
-        rt.load("tiny_cnn_b8", &dir2.join("tiny_cnn_b8.hlo.txt"))?;
-        Ok(PjrtExecutor::new(rt, "tiny_cnn_b8", 8, vec![16, 16, 1]))
-    };
-    let server = Server::spawn(
-        factory,
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
-        hw(),
-    );
-    let client = server.client();
+    let engine = Engine::builder()
+        .register(
+            ModelSpec::for_network(
+                "timnet",
+                &model::tiny_cnn(),
+                &ArchConfig::tim_dnn(),
+                move || {
+                    let mut rt = Runtime::cpu()?;
+                    rt.load("tiny_cnn_b8", &dir2.join("tiny_cnn_b8.hlo.txt"))?;
+                    Ok(Box::new(PjrtBackend::batched(rt, "tiny_cnn_b8", 8, vec![16, 16, 1])))
+                },
+            )
+            .with_policy(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }),
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+    let session = engine.session("timnet").unwrap();
     let rxs: Vec<_> = (0..16)
         .map(|i| {
             let img: Vec<f32> = (0..256).map(|p| ((i * 7 + p) % 97) as f32 / 97.0).collect();
-            client.submit(TensorF32::new(vec![16, 16, 1], img))
+            session.submit(TensorF32::new(vec![16, 16, 1], img)).unwrap()
         })
         .collect();
     for rx in rxs {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("inference");
-        assert_eq!(resp.output.shape, vec![10]);
+        let resp =
+            rx.recv_timeout(Duration::from_secs(120)).expect("reply").expect("inference");
+        assert_eq!(resp.output().shape, vec![10]);
         assert!(resp.sim_energy_j > 0.0);
     }
-    let snap = server.shutdown();
-    assert_eq!(snap.completed, 16);
+    let snaps = engine.shutdown();
+    assert_eq!(snaps["timnet"].completed, 16);
 }

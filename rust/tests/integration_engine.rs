@@ -1,0 +1,190 @@
+//! Integration: the multi-model Engine — two models served concurrently
+//! through the pure-rust FunctionalBackend (no PJRT artifacts required),
+//! per-model metrics isolation, registry/admission/queue rejection paths
+//! with typed errors, and FunctionalBackend parity against the underlying
+//! functional accelerator.
+
+use std::time::Duration;
+
+use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{
+    BatchPolicy, Engine, ExecutorBackend, FunctionalBackend, ModelRegistry, ModelSpec,
+};
+use timdnn::error::{Result, TimError};
+use timdnn::model;
+use timdnn::runtime::TensorF32;
+use timdnn::tile::{TileConfig, VmmMode};
+
+fn timnet_spec(name: &str, seed: u64) -> ModelSpec {
+    ModelSpec::for_network(name, &model::tiny_cnn(), &ArchConfig::tim_dnn(), move || {
+        Ok(Box::new(FunctionalBackend::synthetic(seed)))
+    })
+    .with_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) })
+}
+
+fn image(i: usize) -> TensorF32 {
+    let img: Vec<f32> = (0..256).map(|p| ((i * 31 + p * 7) % 101) as f32 / 101.0).collect();
+    TensorF32::new(vec![16, 16, 1], img)
+}
+
+/// Acceptance: two registered models served concurrently through the
+/// FunctionalBackend, with isolated per-model metrics.
+#[test]
+fn two_models_serve_concurrently_with_isolated_metrics() {
+    const N_A: usize = 12;
+    const N_B: usize = 7;
+    let engine = Engine::builder()
+        .tile_budget(64) // two TiMNet instances fit an explicit 2×32 budget
+        .register(timnet_spec("timnet-a", 1))
+        .unwrap()
+        .register(timnet_spec("timnet-b", 2))
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(engine.models(), vec!["timnet-a".to_string(), "timnet-b".to_string()]);
+
+    let sa = engine.session("timnet-a").unwrap();
+    let sb = engine.session("timnet-b").unwrap();
+    let ta = std::thread::spawn(move || -> Vec<Vec<f32>> {
+        (0..N_A).map(|i| sa.infer(image(i)).unwrap().output().data.clone()).collect()
+    });
+    let tb = std::thread::spawn(move || -> Vec<Vec<f32>> {
+        (0..N_B).map(|i| sb.infer(image(i)).unwrap().output().data.clone()).collect()
+    });
+    let out_a = ta.join().unwrap();
+    let out_b = tb.join().unwrap();
+    assert!(out_a.iter().all(|l| l.len() == 10));
+    assert!(out_b.iter().all(|l| l.len() == 10));
+    // Different weights (different seeds) ⇒ the two models disagree on at
+    // least one input — the registry really bound distinct backends.
+    assert!(
+        (0..N_B).any(|i| out_a[i] != out_b[i]),
+        "models with different weights produced identical logits"
+    );
+
+    // Per-model metrics isolation: each snapshot counts only its own
+    // model's traffic.
+    let snaps = engine.shutdown();
+    assert_eq!(snaps["timnet-a"].completed, N_A as u64);
+    assert_eq!(snaps["timnet-b"].completed, N_B as u64);
+    assert!(snaps["timnet-a"].sim_energy_total_j > 0.0);
+    assert!(snaps["timnet-b"].sim_energy_total_j > 0.0);
+}
+
+/// The engine serves the same logits the bare functional accelerator
+/// computes — the backend is a faithful adapter, batching included.
+#[test]
+fn functional_backend_parity_with_direct_accelerator() {
+    let engine = Engine::builder().register(timnet_spec("timnet", 42)).unwrap().build().unwrap();
+    let session = engine.session("timnet").unwrap();
+    let rxs: Vec<_> = (0..6).map(|i| session.submit(image(i)).unwrap()).collect();
+    let served: Vec<Vec<f32>> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().output().data.clone()).collect();
+    engine.shutdown();
+
+    let weights = TimNetWeights::synthetic(42);
+    let mut direct = TimNetAccelerator::new(&weights, TileConfig::paper());
+    for (i, served_logits) in served.iter().enumerate() {
+        let want = direct.forward(&image(i).data, &mut VmmMode::Ideal);
+        assert_eq!(served_logits, &want, "request {i}");
+    }
+}
+
+#[test]
+fn registry_double_registration_rejected_through_builder() {
+    let err = Engine::builder()
+        .register(timnet_spec("m", 1))
+        .unwrap()
+        .register(timnet_spec("m", 2))
+        .unwrap_err();
+    match err {
+        TimError::DuplicateModel { name } => assert_eq!(name, "m"),
+        other => panic!("expected DuplicateModel, got {other:?}"),
+    }
+
+    // Same through a standalone registry.
+    let mut reg = ModelRegistry::new();
+    reg.register(timnet_spec("m", 1)).unwrap();
+    assert!(matches!(
+        reg.register(timnet_spec("m", 2)),
+        Err(TimError::DuplicateModel { .. })
+    ));
+}
+
+/// Admission control: the second model does not fit the tile budget.
+#[test]
+fn tile_budget_admission_rejects_with_typed_error() {
+    let err = Engine::builder()
+        .tile_budget(32)
+        .register(timnet_spec("a", 1).with_tiles(20))
+        .unwrap()
+        .register(timnet_spec("b", 2).with_tiles(20))
+        .unwrap()
+        .build()
+        .unwrap_err();
+    match err {
+        TimError::AdmissionRejected { model, tiles_required, tiles_available } => {
+            assert_eq!(model, "b");
+            assert_eq!(tiles_required, 20);
+            assert_eq!(tiles_available, 12);
+        }
+        other => panic!("expected AdmissionRejected, got {other:?}"),
+    }
+
+    // The same pair fits a doubled budget.
+    let engine = Engine::builder()
+        .tile_budget(64)
+        .register(timnet_spec("a", 1).with_tiles(20))
+        .unwrap()
+        .register(timnet_spec("b", 2).with_tiles(20))
+        .unwrap()
+        .build()
+        .unwrap();
+    engine.shutdown();
+}
+
+/// Queue-depth admission: in-flight cap rejects the overflow request with
+/// a typed error while a slow batch holds the worker.
+#[test]
+fn queue_full_is_typed_rejection() {
+    struct Slow;
+    impl ExecutorBackend for Slow {
+        fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+            std::thread::sleep(Duration::from_millis(400));
+            Ok(batch.to_vec())
+        }
+        fn name(&self) -> &str {
+            "slow"
+        }
+    }
+    let hw = timdnn::sim::run(&model::tiny_cnn(), &ArchConfig::tim_dnn());
+    let engine = Engine::builder()
+        .register(
+            ModelSpec::new("slow", hw, || Ok(Box::new(Slow)))
+                .with_policy(BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) })
+                .with_max_queue(2),
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+    let session = engine.session("slow").unwrap();
+    let rx1 = session.submit(TensorF32::new(vec![1], vec![1.0])).unwrap();
+    let rx2 = session.submit(TensorF32::new(vec![1], vec![2.0])).unwrap();
+    // Two in flight (replies take ≥400 ms), cap is 2 ⇒ typed rejection.
+    match session.submit(TensorF32::new(vec![1], vec![3.0])) {
+        Err(TimError::QueueFull { model, depth, limit }) => {
+            assert_eq!(model, "slow");
+            assert_eq!(limit, 2);
+            assert!(depth >= 2);
+        }
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    // The admitted requests still complete, and capacity frees up.
+    assert!(rx1.recv_timeout(Duration::from_secs(5)).expect("reply").is_ok());
+    assert!(rx2.recv_timeout(Duration::from_secs(5)).expect("reply").is_ok());
+    let rx3 = session.submit(TensorF32::new(vec![1], vec![3.0])).unwrap();
+    assert!(rx3.recv_timeout(Duration::from_secs(5)).expect("reply").is_ok());
+    let snaps = engine.shutdown();
+    assert_eq!(snaps["slow"].completed, 3);
+}
