@@ -1,31 +1,54 @@
-//! Hot-path micro-benchmarks (criterion-style, in-repo harness — the
-//! offline environment has no criterion). These are the wall-clock
-//! numbers EXPERIMENTS.md §Perf tracks:
+//! Hot-path benchmarks (criterion-style, in-repo harness — the offline
+//! environment has no criterion). These are the wall-clock numbers
+//! EXPERIMENTS.md §Perf tracks, and the run emits a machine-readable
+//! `BENCH_hotpath.json` (results + derived speedups) in the cwd.
 //!
+//! Cases:
 //! * functional TiM-tile block VMM (the simulator's inner loop),
-//! * full-tile 256-row VMM,
-//! * mapper + simulator end-to-end for the largest benchmark,
-//! * Monte-Carlo variation sampling.
+//! * full-tile 256-row VMM — allocating, `_into`, and packed-plane paths,
+//! * 2-bit bit-serial VMM — scalar vs. pre-packed planes,
+//! * end-to-end functional TiMNet forward — scalar reference vs. the
+//!   packed batched pipeline (the PR's ≥4× headline case),
+//! * 8-wide batched serving through `FunctionalBackend` — pre-PR serial
+//!   scalar cost vs. the packed pool at widths 1 and 8 (the ≥8× case),
+//! * mapper + simulator end-to-end, Monte-Carlo variation sampling.
+//!
+//! `cargo bench --bench hotpath -- --smoke` runs a fast CI subset.
 
+use std::time::Duration;
+
+use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
 use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{ExecutorBackend, FunctionalBackend};
 use timdnn::model;
 use timdnn::quant::TernarySystem;
+use timdnn::runtime::TensorF32;
 use timdnn::sim;
-use timdnn::tile::{TileConfig, TimTile, VmmMode};
+use timdnn::tile::{PackedCodes, PackedTrits, TileConfig, TimTile, VmmMode};
 use timdnn::tpc::TritMatrix;
-use timdnn::util::bench::{black_box, quick};
+use timdnn::util::bench::{bench, black_box, write_json_report, BenchResult};
 use timdnn::util::prng::Rng;
 use timdnn::variation::VariationStudy;
 
+const SERVE_BATCH: usize = 8;
+const SERVE_WORKERS: usize = 8;
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, measure) = if smoke {
+        (Duration::from_millis(20), Duration::from_millis(40))
+    } else {
+        (Duration::from_millis(200), Duration::from_millis(600))
+    };
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::seeded(1);
 
-    // Tile block VMM.
+    // --- Tile-level VMMs -------------------------------------------------
     let w = TritMatrix::random(256, 256, 0.4, &mut rng);
     let x16 = rng.trit_vec(16, 0.4);
     let mut tile = TimTile::new(TileConfig::paper());
     tile.load_weights(&w);
-    let r = quick("tile/block_vmm_16x256", || {
+    let r = bench("tile/block_vmm_16x256", warmup, measure, || {
         black_box(tile.vmm_block(0, black_box(&x16), &mut VmmMode::Ideal));
     });
     println!(
@@ -33,10 +56,11 @@ fn main() {
         r.per_second(1.0) / 1e6,
         r.per_second((16 * 256) as f64) / 1e9
     );
+    results.push(r);
 
     // Allocation-free inner loop (what the simulator's hot path uses).
     let mut counts = Vec::with_capacity(256);
-    let r = quick("tile/block_vmm_16x256_into", || {
+    let r = bench("tile/block_vmm_16x256_into", warmup, measure, || {
         black_box(tile.vmm_block_into(0, black_box(&x16), &mut VmmMode::Ideal, &mut counts));
     });
     println!(
@@ -44,33 +68,154 @@ fn main() {
         r.per_second(1.0) / 1e6,
         r.per_second((16 * 256) as f64) / 1e9
     );
+    results.push(r);
 
-    // Full-tile VMM (16 blocks + PCU reduction).
+    // Full-tile VMM (16 blocks + PCU reduction): allocating / into / packed.
     let x256 = rng.trit_vec(256, 0.4);
-    let r = quick("tile/full_vmm_256x256", || {
+    let r = bench("tile/full_vmm_256x256", warmup, measure, || {
         black_box(tile.vmm(black_box(&x256), TernarySystem::Unweighted, &mut VmmMode::Ideal));
     });
     println!("  -> {:.2} G MAC/s", r.per_second((256 * 256) as f64) / 1e9);
+    results.push(r);
+
+    let mut vout = Vec::with_capacity(256);
+    let r = bench("tile/full_vmm_256x256_into", warmup, measure, || {
+        tile.vmm_into(black_box(&x256), TernarySystem::Unweighted, &mut VmmMode::Ideal, &mut vout);
+        black_box(&vout);
+    });
+    println!("  -> {:.2} G MAC/s (no alloc)", r.per_second((256 * 256) as f64) / 1e9);
+    results.push(r);
+
+    let packed256 = PackedTrits::pack(&x256, tile.config().l);
+    let r = bench("tile/full_vmm_256x256_packed_into", warmup, measure, || {
+        tile.vmm_packed_into(
+            black_box(&packed256),
+            TernarySystem::Unweighted,
+            &mut VmmMode::Ideal,
+            &mut vout,
+        );
+        black_box(&vout);
+    });
+    println!("  -> {:.2} G MAC/s (pre-packed planes)", r.per_second((256 * 256) as f64) / 1e9);
+    results.push(r);
+
+    // 2-bit bit-serial VMM: scalar reference vs packed planes.
+    let codes256: Vec<u8> = (0..256).map(|_| rng.below(4) as u8).collect();
+    let r = bench("tile/vmm_2bit_256", warmup, measure, || {
+        black_box(tile.vmm_2bit(black_box(&codes256), TernarySystem::Unweighted, &mut VmmMode::Ideal));
+    });
+    let scalar_2bit_mean = r.mean.as_secs_f64();
+    results.push(r);
+
+    let packed_codes = PackedCodes::pack(&codes256, tile.config().l);
+    let r = bench("tile/vmm_2bit_256_packed_into", warmup, measure, || {
+        tile.vmm_2bit_packed_into(
+            black_box(&packed_codes),
+            TernarySystem::Unweighted,
+            &mut VmmMode::Ideal,
+            &mut vout,
+        );
+        black_box(&vout);
+    });
+    let packed_2bit_mean = r.mean.as_secs_f64();
+    println!("  -> 2-bit packed speedup {:.2}x", scalar_2bit_mean / packed_2bit_mean);
+    results.push(r);
 
     // Analog-path VMM (bitline curve + ADC decode per column).
-    let r = quick("tile/block_vmm_analog", || {
+    let r = bench("tile/block_vmm_analog", warmup, measure, || {
         black_box(tile.vmm_block(0, black_box(&x16), &mut VmmMode::Analog));
     });
     println!("  -> {:.1} M block-VMMs/s (analog decode)", r.per_second(1.0) / 1e6);
+    results.push(r);
 
-    // Mapper + simulator end to end (largest CNN).
-    let resnet = model::resnet34();
-    let arch = ArchConfig::tim_dnn();
-    let r = quick("sim/resnet34_end_to_end", || {
-        black_box(sim::run(black_box(&resnet), &arch));
+    // --- Functional TiMNet forward: scalar reference vs packed pipeline --
+    let weights = TimNetWeights::synthetic(42);
+    let mut acc = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let img: Vec<f32> = (0..256).map(|i| ((i * 13) % 11) as f32 / 11.0).collect();
+    let r = bench("functional/forward_scalar", warmup, measure, || {
+        black_box(acc.forward_scalar(black_box(&img), &mut VmmMode::Ideal));
     });
-    println!("  -> {:.0} full-network simulations/s", r.per_second(1.0));
+    let fwd_scalar_mean = r.mean.as_secs_f64();
+    println!("  -> {:.0} scalar inf/s", r.per_second(1.0));
+    results.push(r);
 
-    // Monte-Carlo variation sampling.
-    let study = VariationStudy::paper();
-    let mut mc_rng = Rng::seeded(2);
-    let r = quick("variation/sensing_error_1k_samples", || {
-        black_box(study.sensing_error_prob(1_000, &mut mc_rng));
+    let mut logits = Vec::with_capacity(10);
+    let r = bench("functional/forward_packed", warmup, measure, || {
+        acc.forward_into(black_box(&img), &mut VmmMode::Ideal, &mut logits);
+        black_box(&logits);
     });
-    println!("  -> {:.2} M MC samples/s", r.per_second(9.0 * 1_000.0) / 1e6);
+    let fwd_packed_mean = r.mean.as_secs_f64();
+    let forward_speedup = fwd_scalar_mean / fwd_packed_mean;
+    println!(
+        "  -> {:.0} packed inf/s ({forward_speedup:.2}x over scalar)",
+        r.per_second(1.0)
+    );
+    results.push(r);
+
+    // --- Batched serving: pre-PR serial scalar vs packed worker pool -----
+    let images: Vec<Vec<f32>> = (0..SERVE_BATCH)
+        .map(|b| (0..256).map(|i| ((i * 7 + b * 31) % 13) as f32 / 13.0).collect())
+        .collect();
+    let r = bench("serving/batch8_scalar_serial", warmup, measure, || {
+        for img in &images {
+            black_box(acc.forward_scalar(black_box(img), &mut VmmMode::Ideal));
+        }
+    });
+    let serve_scalar_mean = r.mean.as_secs_f64();
+    println!("  -> {:.0} req/s (pre-PR serial scalar path)", r.per_second(SERVE_BATCH as f64));
+    results.push(r);
+
+    let batch: Vec<Vec<TensorF32>> = images
+        .iter()
+        .map(|img| vec![TensorF32::new(vec![16, 16, 1], img.clone())])
+        .collect();
+    let mut be1 = FunctionalBackend::from_weights(&weights, TileConfig::paper());
+    let r = bench("serving/batch8_workers1", warmup, measure, || {
+        black_box(be1.execute_batch(black_box(&batch)).unwrap());
+    });
+    println!("  -> {:.0} req/s (packed, 1 worker)", r.per_second(SERVE_BATCH as f64));
+    results.push(r);
+
+    let mut be8 =
+        FunctionalBackend::from_weights(&weights, TileConfig::paper()).with_workers(SERVE_WORKERS);
+    let r = bench("serving/batch8_workers8", warmup, measure, || {
+        black_box(be8.execute_batch(black_box(&batch)).unwrap());
+    });
+    let serve_pool_mean = r.mean.as_secs_f64();
+    let serving_speedup = serve_scalar_mean / serve_pool_mean;
+    println!(
+        "  -> {:.0} req/s (packed, {SERVE_WORKERS} workers; {serving_speedup:.2}x over pre-PR)",
+        r.per_second(SERVE_BATCH as f64)
+    );
+    results.push(r);
+
+    // --- Simulator + Monte-Carlo (skipped in smoke mode) -----------------
+    if !smoke {
+        let resnet = model::resnet34();
+        let arch = ArchConfig::tim_dnn();
+        let r = bench("sim/resnet34_end_to_end", warmup, measure, || {
+            black_box(sim::run(black_box(&resnet), &arch));
+        });
+        println!("  -> {:.0} full-network simulations/s", r.per_second(1.0));
+        results.push(r);
+
+        let study = VariationStudy::paper();
+        let mut mc_rng = Rng::seeded(2);
+        let r = bench("variation/sensing_error_1k_samples", warmup, measure, || {
+            black_box(study.sensing_error_prob(1_000, &mut mc_rng));
+        });
+        println!("  -> {:.2} M MC samples/s", r.per_second(9.0 * 1_000.0) / 1e6);
+        results.push(r);
+    }
+
+    let derived = [
+        ("forward_speedup_packed_vs_scalar", forward_speedup),
+        ("serving_speedup_pool8_vs_prepr", serving_speedup),
+        ("vmm_2bit_speedup_packed_vs_scalar", scalar_2bit_mean / packed_2bit_mean),
+    ];
+    let mode = if smoke { "smoke" } else { "full" };
+    match write_json_report("BENCH_hotpath.json", "hotpath", mode, &results, &derived) {
+        Ok(()) => println!("wrote BENCH_hotpath.json ({mode} mode, {} cases)", results.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -19,16 +19,18 @@ use std::path::Path;
 
 use crate::error::{Result, TimError};
 use crate::quant::TernarySystem;
-use crate::tile::{TileConfig, TimTile, VmmMode};
+use crate::tile::{PackedCodes, TileConfig, TimTile, VmmMode};
 use crate::tpc::{Trit, TritMatrix};
 
 /// One VMM layer: ternary weights + PCU scale register value.
+#[derive(Clone)]
 pub struct TernaryLayer {
     pub weights: TritMatrix,
     pub scale: f32,
 }
 
 /// The trained TiMNet parameters (mirrors `python/compile/train.py`).
+#[derive(Clone)]
 pub struct TimNetWeights {
     pub conv1: TernaryLayer,
     pub conv2: TernaryLayer,
@@ -53,6 +55,17 @@ impl TimNetWeights {
             let cols = u32::from_le_bytes(b4) as usize;
             let mut data = vec![0u8; rows * cols];
             f.read_exact(&mut data)?;
+            // Validate before constructing: `TritMatrix::from_vec` would
+            // panic on non-ternary values, and a corrupt artifact must
+            // surface as a typed error, not a crash.
+            if let Some(&bad) = data.iter().find(|&&b| !matches!(b, 0x00 | 0x01 | 0xFF)) {
+                return Err(TimError::Data {
+                    what: "timnet weights".into(),
+                    reason: format!(
+                        "non-ternary weight byte 0x{bad:02x} (expected 0x00, 0x01, or 0xff)"
+                    ),
+                });
+            }
             let trits: Vec<Trit> = data.iter().map(|&b| b as i8).collect();
             f.read_exact(&mut b4)?;
             let scale = f32::from_le_bytes(b4);
@@ -99,6 +112,15 @@ impl TimNetWeights {
     }
 }
 
+/// Reusable buffers for [`LayerEngine::forward_2bit_batch`]: per-patch
+/// packed bit planes and the per-access count buffer. One instance is
+/// shared by all layers of an accelerator (see [`ScratchArena`]).
+#[derive(Default)]
+struct LayerScratch {
+    packed: Vec<PackedCodes>,
+    counts: Vec<(u32, u32)>,
+}
+
 /// A tile group executing one layer's weight matrix, splitting rows
 /// across tiles when the matrix is taller than one tile and reducing the
 /// partial sums in the (digital) RU.
@@ -108,6 +130,10 @@ struct LayerEngine {
     cols: usize,
     scale: f32,
     rows_per_tile: usize,
+    /// Tile geometry, cached off [`TileConfig`]: rows per block (L) and
+    /// blocks per tile (K).
+    block_len: usize,
+    blocks_per_tile: usize,
 }
 
 impl LayerEngine {
@@ -131,11 +157,23 @@ impl LayerEngine {
             tile.load_weights(&slice);
             tiles.push(tile);
         }
-        Self { tiles, rows, cols, scale: layer.scale, rows_per_tile }
+        Self {
+            tiles,
+            rows,
+            cols,
+            scale: layer.scale,
+            rows_per_tile,
+            block_len: cfg.l,
+            blocks_per_tile: cfg.k,
+        }
     }
 
     /// 2-bit bit-serial VMM across the tile group + RU reduction; output
     /// is the dequantized pre-activation (PCU scale applied).
+    ///
+    /// Scalar reference path: allocates per call and re-extracts the bit
+    /// planes per tile. The serving hot path is
+    /// [`Self::forward_2bit_batch`]; tests assert the two agree.
     fn forward_2bit(&mut self, codes: &[u8], act_clip: f32, mode: &mut VmmMode) -> Vec<f32> {
         assert_eq!(codes.len(), self.rows);
         let mut acc = vec![0f32; self.cols];
@@ -153,6 +191,79 @@ impl LayerEngine {
         let k = self.scale * act_clip / 3.0;
         acc.iter().map(|&v| v * k).collect()
     }
+
+    /// Batched matrix–matrix pass: `codes` holds `n_patches` patches of
+    /// `self.rows` 2-bit codes each (row-major flat); `out` becomes the
+    /// `n_patches × cols` dequantized pre-activations.
+    ///
+    /// Every patch is packed into per-plane block masks **once**, then all
+    /// patches stream through each tile block in one pass (block masks
+    /// stay hot in cache) instead of re-dispatching the whole tile group
+    /// per patch. Accesses are column-limited to the layer's real `cols`
+    /// (the tail columns hold only padding zeros) and all-zero plane masks
+    /// are input-gated — both value-exact, see
+    /// [`TimTile::vmm_block_masks_into`]. Steady-state calls perform zero
+    /// heap allocations: all temporaries live in `scratch` / `out` at
+    /// their high-water marks.
+    ///
+    /// Values are bit-exact with looping [`Self::forward_2bit`] over the
+    /// patches under `Ideal` and `Analog` modes (unweighted block partial
+    /// sums are small integers, exactly representable in f32, so the
+    /// reordered accumulation is exact). Under `AnalogNoisy` the RNG
+    /// stream differs (fewer, reordered draws) — statistically equivalent.
+    fn forward_2bit_batch(
+        &mut self,
+        codes: &[u8],
+        n_patches: usize,
+        act_clip: f32,
+        mode: &mut VmmMode,
+        scratch: &mut LayerScratch,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(codes.len(), n_patches * self.rows, "patch matrix shape");
+        let LayerScratch { packed, counts } = scratch;
+        if packed.len() < n_patches {
+            packed.resize_with(n_patches, PackedCodes::default);
+        }
+        for (p, planes) in packed.iter_mut().take(n_patches).enumerate() {
+            planes.pack_into(&codes[p * self.rows..(p + 1) * self.rows], self.block_len);
+        }
+        out.clear();
+        out.resize(n_patches * self.cols, 0.0);
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let lo = t * self.rows_per_tile;
+            let hi = (lo + self.rows_per_tile).min(self.rows);
+            let n_blocks = (hi - lo).div_ceil(self.block_len);
+            // Patches were packed whole, block-aligned: tile t's block b
+            // is packed block `first_block + b`.
+            let first_block = t * self.blocks_per_tile;
+            for plane in 0..2usize {
+                let shift = (1u32 << plane) as f32;
+                for b in 0..n_blocks {
+                    for (p, planes) in packed.iter().take(n_patches).enumerate() {
+                        let mask = planes.planes()[first_block + b][plane];
+                        if mask == 0 {
+                            // Input gating: an all-zero plane discharges no
+                            // bitline and contributes nothing — skip the
+                            // access entirely.
+                            continue;
+                        }
+                        tile.vmm_block_masks_into(b, mask, 0, self.cols, mode, counts);
+                        let row = &mut out[p * self.cols..(p + 1) * self.cols];
+                        // RU + PCU shifter: unweighted combine is n − k,
+                        // weighted by the plane's 2^p.
+                        for (o, &(n, k)) in row.iter_mut().zip(counts.iter()) {
+                            *o += shift * (n as f32 - k as f32);
+                        }
+                    }
+                }
+            }
+        }
+        let k = self.scale * act_clip / 3.0;
+        for o in out.iter_mut() {
+            *o *= k;
+        }
+    }
 }
 
 /// SFU ops (functional).
@@ -166,19 +277,35 @@ pub mod sfu {
 
     /// 2-bit unsigned quantization (QU): f32 → codes {0..3} at `clip`.
     pub fn quantize_2bit(xs: &[f32], clip: f32) -> Vec<u8> {
-        xs.iter()
-            .map(|&x| {
-                let t = (x.clamp(0.0, clip) / clip * 3.0).round_ties_even();
-                t.clamp(0.0, 3.0) as u8
-            })
-            .collect()
+        let mut out = Vec::with_capacity(xs.len());
+        quantize_2bit_into(xs, clip, &mut out);
+        out
+    }
+
+    /// Allocation-free [`quantize_2bit`]: writes into `out` (cleared
+    /// first).
+    pub fn quantize_2bit_into(xs: &[f32], clip: f32, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| {
+            let t = (x.clamp(0.0, clip) / clip * 3.0).round_ties_even();
+            t.clamp(0.0, 3.0) as u8
+        }));
     }
 
     /// 2×2 max-pool over (h, w, c) feature maps of 2-bit codes.
     pub fn maxpool2_codes(x: &[u8], h: usize, w: usize, c: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        maxpool2_codes_into(x, h, w, c, &mut out);
+        out
+    }
+
+    /// Allocation-free [`maxpool2_codes`]: writes into `out` (cleared
+    /// first).
+    pub fn maxpool2_codes_into(x: &[u8], h: usize, w: usize, c: usize, out: &mut Vec<u8>) {
         assert_eq!(x.len(), h * w * c);
         let (ho, wo) = (h / 2, w / 2);
-        let mut out = vec![0u8; ho * wo * c];
+        out.clear();
+        out.resize(ho * wo * c, 0);
         for i in 0..ho {
             for j in 0..wo {
                 for ch in 0..c {
@@ -191,7 +318,32 @@ pub mod sfu {
                 }
             }
         }
-        out
+    }
+
+    /// Flat, allocation-free im2col over 2-bit code maps (SAME zero
+    /// padding, 3×3 kernels): appends all `h·w` patches of `9·c` codes
+    /// into `out` (cleared first), in the same (di, dj, c) channel order
+    /// as [`im2col3x3_codes`]. The batched layer pass consumes this as an
+    /// `h·w × 9·c` patch matrix.
+    pub fn im2col3x3_codes_into(x: &[u8], h: usize, w: usize, c: usize, out: &mut Vec<u8>) {
+        assert_eq!(x.len(), h * w * c);
+        out.clear();
+        out.reserve(h * w * 9 * c);
+        for i in 0..h {
+            for j in 0..w {
+                for di in 0..3usize {
+                    for dj in 0..3usize {
+                        let (ii, jj) = (i + di, j + dj);
+                        if (1..=h).contains(&ii) && (1..=w).contains(&jj) {
+                            let base = ((ii - 1) * w + (jj - 1)) * c;
+                            out.extend_from_slice(&x[base..base + c]);
+                        } else {
+                            out.resize(out.len() + c, 0);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// im2col over 2-bit code maps, SAME zero padding, 3×3 kernels; patch
@@ -221,6 +373,26 @@ pub mod sfu {
     }
 }
 
+/// Persistent scratch for the accelerator's batched forward pass. Every
+/// buffer grows to its high-water mark on the first inference and is
+/// reused thereafter, so a steady-state [`TimNetAccelerator::forward_into`]
+/// performs zero heap allocations (asserted by the `alloc_free`
+/// integration test).
+#[derive(Default)]
+struct ScratchArena {
+    layer: LayerScratch,
+    /// Quantized input codes / fc-layer codes.
+    codes: Vec<u8>,
+    /// Post-layer requantized codes (pre-pool).
+    codes2: Vec<u8>,
+    /// Flat im2col patch matrix of the current conv layer.
+    patches: Vec<u8>,
+    /// Dequantized pre-activations of the current layer.
+    fm: Vec<f32>,
+    /// Max-pooled code map.
+    pooled: Vec<u8>,
+}
+
 /// The functional accelerator running TiMNet.
 pub struct TimNetAccelerator {
     conv1: LayerEngine,
@@ -228,6 +400,7 @@ pub struct TimNetAccelerator {
     fc1: LayerEngine,
     fc2: LayerEngine,
     clips: [f32; 4],
+    scratch: ScratchArena,
 }
 
 impl TimNetAccelerator {
@@ -238,11 +411,55 @@ impl TimNetAccelerator {
             fc1: LayerEngine::new(&weights.fc1, cfg),
             fc2: LayerEngine::new(&weights.fc2, cfg),
             clips: weights.clips,
+            scratch: ScratchArena::default(),
         }
     }
 
     /// Forward one 16×16×1 image (f32 in [0,1]) → 10 logits.
     pub fn forward(&mut self, image: &[f32], mode: &mut VmmMode) -> Vec<f32> {
+        let mut logits = Vec::with_capacity(10);
+        self.forward_into(image, mode, &mut logits);
+        logits
+    }
+
+    /// Allocation-free forward: writes the 10 logits into `logits`
+    /// (cleared first). Each conv layer runs as one batched matrix–matrix
+    /// pass over its im2col patch matrix; all intermediates live in the
+    /// persistent [`ScratchArena`].
+    pub fn forward_into(&mut self, image: &[f32], mode: &mut VmmMode, logits: &mut Vec<f32>) {
+        assert_eq!(image.len(), 256);
+        let [a0, a1, a2, a3] = self.clips;
+        let sc = &mut self.scratch;
+
+        // conv1: 16×16×1 → 16×16×16, ReLU, quant, pool → 8×8×16.
+        sfu::quantize_2bit_into(image, a0, &mut sc.codes);
+        sfu::im2col3x3_codes_into(&sc.codes, 16, 16, 1, &mut sc.patches);
+        self.conv1.forward_2bit_batch(&sc.patches, 256, a0, mode, &mut sc.layer, &mut sc.fm);
+        sfu::relu(&mut sc.fm);
+        sfu::quantize_2bit_into(&sc.fm, a1, &mut sc.codes2);
+        sfu::maxpool2_codes_into(&sc.codes2, 16, 16, 16, &mut sc.pooled);
+
+        // conv2: 8×8×16 → 8×8×32, ReLU, quant, pool → 4×4×32.
+        sfu::im2col3x3_codes_into(&sc.pooled, 8, 8, 16, &mut sc.patches);
+        self.conv2.forward_2bit_batch(&sc.patches, 64, a1, mode, &mut sc.layer, &mut sc.fm);
+        sfu::relu(&mut sc.fm);
+        sfu::quantize_2bit_into(&sc.fm, a2, &mut sc.codes2);
+        sfu::maxpool2_codes_into(&sc.codes2, 8, 8, 32, &mut sc.pooled);
+
+        // fc1 → ReLU → quant → fc2 (single-"patch" matrix passes).
+        self.fc1.forward_2bit_batch(&sc.pooled, 1, a2, mode, &mut sc.layer, &mut sc.fm);
+        sfu::relu(&mut sc.fm);
+        sfu::quantize_2bit_into(&sc.fm, a3, &mut sc.codes2);
+        self.fc2.forward_2bit_batch(&sc.codes2, 1, a3, mode, &mut sc.layer, logits);
+    }
+
+    /// The pre-packed-planes-era forward pass, kept as the scalar
+    /// reference: per-patch tile-group dispatch through the allocating
+    /// sfu/[`TimTile::vmm_2bit`] path. Tests assert [`Self::forward`]
+    /// matches it bit-for-bit under `Ideal` and `Analog` modes, and
+    /// `benches/hotpath.rs` measures the packed path's speedup against it
+    /// (EXPERIMENTS.md §Perf).
+    pub fn forward_scalar(&mut self, image: &[f32], mode: &mut VmmMode) -> Vec<f32> {
         assert_eq!(image.len(), 256);
         let [a0, a1, a2, a3] = self.clips;
 
@@ -274,10 +491,11 @@ impl TimNetAccelerator {
 
     /// Classify a batch; returns predictions.
     pub fn classify(&mut self, images: &[Vec<f32>], mode: &mut VmmMode) -> Vec<usize> {
+        let mut logits = Vec::with_capacity(10);
         images
             .iter()
             .map(|img| {
-                let logits = self.forward(img, mode);
+                self.forward_into(img, mode, &mut logits);
                 logits
                     .iter()
                     .enumerate()
@@ -356,6 +574,59 @@ mod tests {
         let mut xs = vec![-1.0, 0.5];
         sfu::relu(&mut xs);
         assert_eq!(xs, vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_sfu() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 20.0) / 9.0).collect();
+        let mut q = Vec::new();
+        sfu::quantize_2bit_into(&xs, 3.0, &mut q);
+        assert_eq!(q, sfu::quantize_2bit(&xs, 3.0));
+
+        let codes: Vec<u8> = (0..64).map(|i| (i % 4) as u8).collect();
+        let mut pooled = Vec::new();
+        sfu::maxpool2_codes_into(&codes, 4, 4, 4, &mut pooled);
+        assert_eq!(pooled, sfu::maxpool2_codes(&codes, 4, 4, 4));
+
+        let mut flat = Vec::new();
+        sfu::im2col3x3_codes_into(&codes, 4, 4, 4, &mut flat);
+        let nested: Vec<u8> =
+            sfu::im2col3x3_codes(&codes, 4, 4, 4).into_iter().flatten().collect();
+        assert_eq!(flat, nested);
+    }
+
+    #[test]
+    fn packed_forward_matches_scalar_reference() {
+        let w = TimNetWeights::synthetic(9);
+        let mut acc = TimNetAccelerator::new(&w, TileConfig::paper());
+        let img: Vec<f32> = (0..256).map(|i| ((i * 13) % 11) as f32 / 11.0).collect();
+        let want_ideal = acc.forward_scalar(&img, &mut VmmMode::Ideal);
+        let got_ideal = acc.forward(&img, &mut VmmMode::Ideal);
+        assert_eq!(got_ideal, want_ideal, "Ideal mode");
+        let want_analog = acc.forward_scalar(&img, &mut VmmMode::Analog);
+        let got_analog = acc.forward(&img, &mut VmmMode::Analog);
+        assert_eq!(got_analog, want_analog, "Analog mode");
+        assert_eq!(got_ideal, got_analog, "analog must agree with ideal");
+    }
+
+    #[test]
+    fn load_rejects_non_ternary_weight_bytes() {
+        let path = std::env::temp_dir().join("timdnn_bad_weights_test.bin");
+        // One 1×2 layer carrying an out-of-alphabet byte 0x02.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&[0x01, 0x02]);
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        match TimNetWeights::load(&path) {
+            Err(TimError::Data { reason, .. }) => {
+                assert!(reason.contains("0x02"), "reason: {reason}");
+            }
+            Ok(_) => panic!("expected Data error, got Ok"),
+            Err(other) => panic!("expected Data error, got {other}"),
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::arch::functional::{TimNetAccelerator, TimNetWeights};
 use crate::error::{Result, TimError};
 use crate::runtime::{Runtime, TensorF32};
 use crate::tile::{TileConfig, VmmMode};
-use crate::util::prng::Rng;
+use crate::util::prng::{Rng, SplitMix64};
 
 /// Abstraction over batch execution so the engine can serve any model
 /// without knowing how it computes.
@@ -33,6 +33,13 @@ pub trait ExecutorBackend: 'static {
     fn fixed_batch(&self) -> Option<usize> {
         None
     }
+
+    /// Hint the data-parallel pool width for batch execution. Called by
+    /// the engine worker right after construction with the model's
+    /// configured width ([`crate::coordinator::ModelSpec::with_workers`] /
+    /// `EngineBuilder::workers`). Backends without intra-batch
+    /// parallelism ignore it (the default).
+    fn set_workers(&mut self, _workers: usize) {}
 
     /// Short backend name for logs/metrics.
     fn name(&self) -> &str;
@@ -174,18 +181,36 @@ impl ExecutorBackend for PjrtBackend {
 /// images → 10 logits) with trained weights when artifacts exist, or
 /// [`TimNetWeights::synthetic`] weights otherwise, so the full serving
 /// stack runs without `make artifacts` and without PJRT.
+///
+/// Batches execute data-parallel across a scoped-thread pool of
+/// per-worker accelerator instances (std only — `std::thread::scope`).
+/// Width 1 (the default) runs the batch serially on the calling thread;
+/// any width returns the same logits in the same request order under
+/// deterministic [`VmmMode`]s (asserted in `tests/packed_parity.rs`).
 pub struct FunctionalBackend {
-    acc: TimNetAccelerator,
-    /// `Some` injects V_T-variation sensing noise per VMM.
-    noise: Option<Rng>,
+    weights: TimNetWeights,
+    cfg: TileConfig,
+    /// One accelerator instance per worker (index 0 = serial path).
+    accs: Vec<TimNetAccelerator>,
+    /// `Some(seed)` injects V_T-variation sensing noise per VMM; worker
+    /// RNGs are re-derived from this base seed whenever the pool is
+    /// resized, so (seed, width) fully determines the noise streams no
+    /// matter how many times the pool was reconfigured on the way.
+    noise_seed: Option<u64>,
+    worker_rngs: Vec<Rng>,
 }
 
 /// TiMNet input: 16×16×1 image = 256 scalars.
 const TIMNET_PIXELS: usize = 256;
 
+/// TiMNet output: 10 logits.
+const TIMNET_LOGITS: usize = 10;
+
 impl FunctionalBackend {
     pub fn from_weights(weights: &TimNetWeights, cfg: TileConfig) -> Self {
-        Self { acc: TimNetAccelerator::new(weights, cfg), noise: None }
+        let weights = weights.clone();
+        let accs = vec![TimNetAccelerator::new(&weights, cfg)];
+        Self { weights, cfg, accs, noise_seed: None, worker_rngs: Vec::new() }
     }
 
     /// Deterministic untrained weights — structural serving without
@@ -215,16 +240,64 @@ impl FunctionalBackend {
         }
     }
 
-    /// Enable V_T-variation sensing noise on every VMM.
-    pub fn with_noise(mut self, rng: Rng) -> Self {
-        self.noise = Some(rng);
+    /// Enable V_T-variation sensing noise on every VMM. The provided RNG
+    /// contributes one draw as the base seed for all worker streams.
+    pub fn with_noise(mut self, mut rng: Rng) -> Self {
+        self.noise_seed = Some(rng.next_u64());
+        self.reseed_workers();
         self
+    }
+
+    /// Builder form of [`ExecutorBackend::set_workers`].
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.set_workers(workers);
+        self
+    }
+
+    /// Current pool width.
+    pub fn workers(&self) -> usize {
+        self.accs.len()
+    }
+
+    /// Derive one deterministic RNG per worker from the stored base seed.
+    /// Idempotent: any sequence of pool reconfigurations ending at the
+    /// same (seed, width) yields the same worker streams. The draws
+    /// differ from what a single serial stream would produce — noise is
+    /// statistical, not positional.
+    fn reseed_workers(&mut self) {
+        self.worker_rngs.clear();
+        if let Some(seed) = self.noise_seed {
+            let mut sm = SplitMix64::new(seed);
+            for _ in 0..self.accs.len() {
+                self.worker_rngs.push(Rng::seeded(sm.next_u64()));
+            }
+        }
+    }
+
+    /// Run `part` serially on one accelerator, appending one output list
+    /// per request. Inputs are pre-validated.
+    fn run_chunk(
+        acc: &mut TimNetAccelerator,
+        rng: Option<&mut Rng>,
+        part: &[Vec<TensorF32>],
+        out: &mut Vec<Vec<TensorF32>>,
+    ) {
+        let mut mode = match rng {
+            Some(r) => VmmMode::AnalogNoisy(r),
+            None => VmmMode::Ideal,
+        };
+        for inputs in part {
+            let mut logits = Vec::with_capacity(TIMNET_LOGITS);
+            acc.forward_into(&inputs[0].data, &mut mode, &mut logits);
+            out.push(vec![TensorF32::new(vec![TIMNET_LOGITS], logits)]);
+        }
     }
 }
 
 impl ExecutorBackend for FunctionalBackend {
     fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
-        let mut out = Vec::with_capacity(batch.len());
+        // Validate every request up front so worker threads only ever see
+        // well-formed inputs.
         for inputs in batch {
             if inputs.len() != 1 {
                 return Err(TimError::InputArity { expected: 1, got: inputs.len() });
@@ -237,13 +310,48 @@ impl ExecutorBackend for FunctionalBackend {
                     got: img.data.len(),
                 });
             }
-            let logits = match self.noise.as_mut() {
-                None => self.acc.forward(&img.data, &mut VmmMode::Ideal),
-                Some(rng) => self.acc.forward(&img.data, &mut VmmMode::AnalogNoisy(rng)),
-            };
-            out.push(vec![TensorF32::new(vec![10], logits)]);
+        }
+        let workers = self.accs.len().min(batch.len()).max(1);
+        let mut out = Vec::with_capacity(batch.len());
+        if workers <= 1 {
+            let acc = self.accs.first_mut().expect("pool holds at least one accelerator");
+            Self::run_chunk(acc, self.worker_rngs.first_mut(), batch, &mut out);
+            return Ok(out);
+        }
+        // Contiguous chunks keep request order: worker w computes requests
+        // [w·chunk, …); concatenating the per-worker outputs in worker
+        // order restores the batch order exactly.
+        let chunk = batch.len().div_ceil(workers);
+        let noisy = !self.worker_rngs.is_empty();
+        let chunk_outs: Vec<Vec<Vec<TensorF32>>> = std::thread::scope(|s| {
+            let mut rng_iter = self.worker_rngs.iter_mut();
+            let mut handles = Vec::with_capacity(workers);
+            for (acc, part) in self.accs.iter_mut().zip(batch.chunks(chunk)) {
+                let rng = if noisy { rng_iter.next() } else { None };
+                handles.push(s.spawn(move || {
+                    let mut outs = Vec::with_capacity(part.len());
+                    Self::run_chunk(acc, rng, part, &mut outs);
+                    outs
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("functional worker thread panicked"))
+                .collect()
+        });
+        for chunk_out in chunk_outs {
+            out.extend(chunk_out);
         }
         Ok(out)
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        let n = workers.max(1);
+        while self.accs.len() < n {
+            self.accs.push(TimNetAccelerator::new(&self.weights, self.cfg));
+        }
+        self.accs.truncate(n);
+        self.reseed_workers();
     }
 
     fn name(&self) -> &str {
@@ -306,6 +414,22 @@ mod tests {
             b.execute_batch(&arity),
             Err(TimError::InputArity { expected: 1, got: 0 })
         ));
+    }
+
+    #[test]
+    fn functional_pool_matches_serial_in_request_order() {
+        let img = |s: f32| vec![TensorF32::new(vec![16, 16, 1], vec![s; 256])];
+        let batch: Vec<_> = (0..7).map(|i| img(i as f32 / 7.0)).collect();
+        let mut serial = FunctionalBackend::synthetic(3);
+        let mut pooled = FunctionalBackend::synthetic(3).with_workers(4);
+        assert_eq!(pooled.workers(), 4);
+        let want = serial.execute_batch(&batch).unwrap();
+        let got = pooled.execute_batch(&batch).unwrap();
+        assert_eq!(got, want);
+        // Shrinking the pool back to serial keeps working.
+        pooled.set_workers(1);
+        assert_eq!(pooled.workers(), 1);
+        assert_eq!(pooled.execute_batch(&batch).unwrap(), want);
     }
 
     #[test]

@@ -27,16 +27,27 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelRegistry, ModelSpec};
 use super::{Msg, Request, Response};
 
-/// Builder: collect specs, set the tile budget, build the engine.
+/// Builder: collect specs, set the tile budget and default pool width,
+/// build the engine.
 #[derive(Debug)]
 pub struct EngineBuilder {
     registry: ModelRegistry,
     tile_budget: Option<usize>,
+    workers: usize,
 }
 
 impl EngineBuilder {
     pub fn new() -> Self {
-        Self { registry: ModelRegistry::new(), tile_budget: None }
+        Self { registry: ModelRegistry::new(), tile_budget: None, workers: 0 }
+    }
+
+    /// Default data-parallel pool width for every model that doesn't set
+    /// its own (`ModelSpec::with_workers`). Passed to each backend via
+    /// [`ExecutorBackend::set_workers`] after construction; 0 (the
+    /// default) means serial execution.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
     }
 
     /// Cap the summed tile footprint of all registered models (e.g.
@@ -75,9 +86,10 @@ impl EngineBuilder {
             }
         }
         let next_id = Arc::new(AtomicU64::new(1));
+        let default_workers = self.workers;
         let mut models = BTreeMap::new();
         for (name, spec) in self.registry.into_specs() {
-            models.insert(name, ModelWorker::spawn(spec));
+            models.insert(name, ModelWorker::spawn(spec, default_workers));
         }
         Ok(Engine { models, next_id })
     }
@@ -100,15 +112,21 @@ struct ModelWorker {
 }
 
 impl ModelWorker {
-    fn spawn(spec: ModelSpec) -> Self {
-        let ModelSpec { name, hardware, policy, factory, max_queue, .. } = spec;
+    fn spawn(spec: ModelSpec, default_workers: usize) -> Self {
+        let ModelSpec { name, hardware, policy, factory, max_queue, workers, .. } = spec;
+        // Per-model width wins; otherwise the engine default; 0 = nothing
+        // was configured, and the backend keeps whatever width its factory
+        // built it with (the worker skips the set_workers call).
+        let pool_width = if workers > 0 { workers } else { default_workers };
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let inflight = Arc::new(AtomicUsize::new(0));
         let metrics_w = Arc::clone(&metrics);
         let handle = std::thread::Builder::new()
             .name(format!("timdnn-engine-{name}"))
-            .spawn(move || worker_loop(&name, rx, factory, policy, hardware, metrics_w))
+            .spawn(move || {
+                worker_loop(&name, rx, factory, policy, hardware, metrics_w, pool_width)
+            })
             .expect("spawn engine worker thread");
         ModelWorker { tx, handle: Some(handle), metrics, inflight, max_queue }
     }
@@ -122,6 +140,7 @@ fn worker_loop(
     mut policy: super::BatchPolicy,
     hardware: SimReport,
     metrics: Arc<Mutex<Metrics>>,
+    pool_width: usize,
 ) {
     // Fail each batch's requests with a typed error (the engine stays up).
     let fail_batch = |batch: Vec<Request>, what: &str, reason: &str| {
@@ -149,6 +168,12 @@ fn worker_loop(
             return;
         }
     };
+    // Hand the backend its configured data-parallel pool width (no-op for
+    // backends without intra-batch parallelism). Width 0 means nothing was
+    // configured — don't override a pool the factory may have sized itself.
+    if pool_width > 0 {
+        backend.set_workers(pool_width);
+    }
     // A fixed-batch backend caps how much a batch can hold; clamping here
     // makes a policy/backend mismatch impossible by construction.
     if let Some(b) = backend.fixed_batch() {

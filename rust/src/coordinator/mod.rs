@@ -161,6 +161,59 @@ mod tests {
             .unwrap()
     }
 
+    /// Echo backend that records the pool width the engine hands it.
+    struct WorkerProbe(Arc<AtomicUsize>);
+
+    impl ExecutorBackend for WorkerProbe {
+        fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+            Ok(batch.to_vec())
+        }
+
+        fn set_workers(&mut self, workers: usize) {
+            self.0.store(workers, Ordering::SeqCst);
+        }
+
+        fn name(&self) -> &str {
+            "worker-probe"
+        }
+    }
+
+    #[test]
+    fn pool_width_reaches_backend() {
+        use std::sync::atomic::Ordering;
+
+        // Engine-wide default applies when the spec doesn't override.
+        let seen = Arc::new(AtomicUsize::new(0));
+        let probe = Arc::clone(&seen);
+        let engine = Engine::builder()
+            .workers(3)
+            .register(ModelSpec::new("m", hw(), move || Ok(Box::new(WorkerProbe(probe)))))
+            .unwrap()
+            .build()
+            .unwrap();
+        let s = engine.session("m").unwrap();
+        s.infer(TensorF32::new(vec![1], vec![0.0])).unwrap();
+        engine.shutdown();
+        assert_eq!(seen.load(Ordering::SeqCst), 3);
+
+        // Per-model width wins over the engine default.
+        let seen = Arc::new(AtomicUsize::new(0));
+        let probe = Arc::clone(&seen);
+        let engine = Engine::builder()
+            .workers(3)
+            .register(
+                ModelSpec::new("m", hw(), move || Ok(Box::new(WorkerProbe(probe))))
+                    .with_workers(5),
+            )
+            .unwrap()
+            .build()
+            .unwrap();
+        let s = engine.session("m").unwrap();
+        s.infer(TensorF32::new(vec![1], vec![0.0])).unwrap();
+        engine.shutdown();
+        assert_eq!(seen.load(Ordering::SeqCst), 5);
+    }
+
     #[test]
     fn serves_single_request() {
         let engine = doubler_engine(BatchPolicy {

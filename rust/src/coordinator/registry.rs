@@ -31,6 +31,11 @@ pub struct ModelSpec {
     /// Max requests in flight before submissions are rejected with
     /// [`TimError::QueueFull`]; 0 = unlimited.
     pub max_queue: usize,
+    /// Data-parallel pool width hint passed to the backend
+    /// ([`ExecutorBackend::set_workers`]) after construction; 0 = inherit
+    /// the engine-wide default (`EngineBuilder::workers`, itself
+    /// defaulting to 1 = serial).
+    pub workers: usize,
     pub(crate) factory: BackendFactory,
 }
 
@@ -48,6 +53,7 @@ impl ModelSpec {
             policy: BatchPolicy::default(),
             tiles_required: 0,
             max_queue: 0,
+            workers: 0,
             factory: Box::new(move || {
                 let backend: Box<dyn ExecutorBackend> = factory()?;
                 Ok(backend)
@@ -82,6 +88,13 @@ impl ModelSpec {
         self.max_queue = max_queue;
         self
     }
+
+    /// Set this model's data-parallel pool width (0 = inherit the
+    /// engine-wide default).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
 }
 
 impl std::fmt::Debug for ModelSpec {
@@ -91,6 +104,7 @@ impl std::fmt::Debug for ModelSpec {
             .field("network", &self.hardware.network)
             .field("tiles_required", &self.tiles_required)
             .field("max_queue", &self.max_queue)
+            .field("workers", &self.workers)
             .finish_non_exhaustive()
     }
 }

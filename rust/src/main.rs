@@ -6,9 +6,11 @@
 //!   sweep                        Fig 12/13 full-suite sweep
 //!   kernel                       Fig 14 kernel-level comparison
 //!   variation [--samples N]      Figs 17/18 Monte-Carlo study
-//!   serve [--models a,b,c] [--backend functional|pjrt|sim]
+//!   serve [--models a,b,c] [--backend functional|pjrt|sim] [--workers N]
 //!                                multi-model serving through the Engine
-//!                                (functional/sim need no artifacts)
+//!                                (functional/sim need no artifacts;
+//!                                --workers sets the per-model
+//!                                data-parallel batch pool width)
 //!   info                         architecture summary
 
 use timdnn::arch::ArchConfig;
@@ -273,6 +275,7 @@ fn serve_input(net_name: &str, rng: &mut Rng) -> TensorF32 {
 fn serve(args: &Args) -> timdnn::Result<()> {
     let requests = args.usize_or("requests", 64);
     let batch = args.usize_or("batch", 8);
+    let workers = args.usize_or("workers", 1);
     let backend = args.str_or("backend", "functional");
     let models: Vec<String> = args
         .str_or("models", "timnet")
@@ -283,13 +286,16 @@ fn serve(args: &Args) -> timdnn::Result<()> {
     if models.is_empty() {
         return Err(TimError::InvalidConfig("--models must name at least one model".into()));
     }
+    if workers == 0 {
+        return Err(TimError::InvalidConfig("--workers must be >= 1".into()));
+    }
 
-    let mut builder = Engine::builder();
+    let mut builder = Engine::builder().workers(workers);
     for name in &models {
         let spec = serve_spec(name, &backend, batch)?;
         println!(
-            "registered '{}' ({}): {:.0} inf/s simulated, {} tiles",
-            name, backend, spec.hardware.inf_per_s, spec.tiles_required
+            "registered '{}' ({}): {:.0} inf/s simulated, {} tiles, {} worker(s)",
+            name, backend, spec.hardware.inf_per_s, spec.tiles_required, workers
         );
         builder = builder.register(spec)?;
     }

@@ -17,7 +17,7 @@ mod meter;
 mod tim;
 
 pub use meter::{EnergyBreakdown, TileMeter};
-pub use tim::{TimTile, VmmMode, VmmResult};
+pub use tim::{PackedCodes, PackedTrits, TimTile, VmmMode, VmmResult};
 
 use crate::energy::constants::{N_MAX, TILE_K, TILE_L, TILE_M, TILE_N};
 

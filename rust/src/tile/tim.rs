@@ -14,6 +14,122 @@ use crate::quant::TernarySystem;
 use crate::tpc::{assert_ternary, Trit, TritMatrix};
 use crate::util::prng::Rng;
 
+/// A ternary input vector packed once into per-block RWD masks — the
+/// "pack once, stream everywhere" representation of the batched hot path
+/// (EXPERIMENTS.md §Perf). `blocks[b]` holds the `(plus, minus)` masks the
+/// Read Wordline Drivers would apply to block `b`; bit `i` of a mask is
+/// row `b·L + i`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PackedTrits {
+    len: usize,
+    l: usize,
+    blocks: Vec<(u32, u32)>,
+}
+
+impl PackedTrits {
+    /// Pack `input` for a tile with `l` rows per block.
+    pub fn pack(input: &[Trit], l: usize) -> Self {
+        let mut p = Self::default();
+        p.pack_into(input, l);
+        p
+    }
+
+    /// Re-pack in place, reusing the block buffer (allocation-free once
+    /// the buffer has reached its high-water mark).
+    pub fn pack_into(&mut self, input: &[Trit], l: usize) {
+        assert!((1..=32).contains(&l), "block masks are u32-packed (1 ≤ L ≤ 32)");
+        assert_ternary(input);
+        self.len = input.len();
+        self.l = l;
+        self.blocks.clear();
+        for chunk in input.chunks(l) {
+            let (mut xp, mut xm) = (0u32, 0u32);
+            for (i, &x) in chunk.iter().enumerate() {
+                match x {
+                    1 => xp |= 1 << i,
+                    -1 => xm |= 1 << i,
+                    _ => {}
+                }
+            }
+            self.blocks.push((xp, xm));
+        }
+    }
+
+    /// Packed input length in rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Rows per block this vector was packed for.
+    pub fn block_len(&self) -> usize {
+        self.l
+    }
+
+    /// Per-block `(plus, minus)` RWD masks.
+    pub fn blocks(&self) -> &[(u32, u32)] {
+        &self.blocks
+    }
+}
+
+/// 2-bit unsigned activation codes packed once into per-plane, per-block
+/// `u32` masks. `planes[b][p]` is the block-`b` mask of bit plane `p`
+/// (applied bit-serially as a `{0, 1}` input, PCU-shifted by `2^p`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PackedCodes {
+    len: usize,
+    l: usize,
+    planes: Vec<[u32; 2]>,
+}
+
+impl PackedCodes {
+    /// Pack 2-bit `codes` for a tile with `l` rows per block.
+    pub fn pack(codes: &[u8], l: usize) -> Self {
+        let mut p = Self::default();
+        p.pack_into(codes, l);
+        p
+    }
+
+    /// Re-pack in place, reusing the plane buffer.
+    pub fn pack_into(&mut self, codes: &[u8], l: usize) {
+        assert!((1..=32).contains(&l), "block masks are u32-packed (1 ≤ L ≤ 32)");
+        assert!(codes.iter().all(|&c| c < 4), "2-bit codes only");
+        self.len = codes.len();
+        self.l = l;
+        self.planes.clear();
+        for chunk in codes.chunks(l) {
+            let mut m = [0u32; 2];
+            for (i, &c) in chunk.iter().enumerate() {
+                m[0] |= u32::from(c & 1) << i;
+                m[1] |= u32::from((c >> 1) & 1) << i;
+            }
+            self.planes.push(m);
+        }
+    }
+
+    /// Packed input length in rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Rows per block these codes were packed for.
+    pub fn block_len(&self) -> usize {
+        self.l
+    }
+
+    /// Per-block `[plane 0, plane 1]` RWD masks.
+    pub fn planes(&self) -> &[[u32; 2]] {
+        &self.planes
+    }
+}
+
 /// How bitline counts are obtained.
 #[derive(Debug)]
 pub enum VmmMode<'a> {
@@ -42,6 +158,14 @@ struct Block {
     minus: Vec<u32>,
 }
 
+/// Reusable per-tile buffers for the allocation-free VMM entry points.
+#[derive(Clone, Debug, Default)]
+struct TileScratch {
+    counts: Vec<(u32, u32)>,
+    plane: Vec<Trit>,
+    plane_out: Vec<f32>,
+}
+
 /// A TiM tile with meters.
 pub struct TimTile {
     cfg: TileConfig,
@@ -50,6 +174,7 @@ pub struct TimTile {
     adc: Adc,
     /// Precomputed nominal V_BL per raw count 0..=L (analog fast path).
     volt_lut: Vec<f64>,
+    scratch: TileScratch,
     pub meter: TileMeter,
 }
 
@@ -62,7 +187,7 @@ impl TimTile {
         let blocks = (0..cfg.k)
             .map(|_| Block { plus: vec![0; cfg.n], minus: vec![0; cfg.n] })
             .collect();
-        Self { cfg, blocks, curve, adc, volt_lut, meter: TileMeter::new() }
+        Self { cfg, blocks, curve, adc, volt_lut, scratch: TileScratch::default(), meter: TileMeter::new() }
     }
 
     pub fn config(&self) -> &TileConfig {
@@ -156,16 +281,39 @@ impl TimTile {
         mode: &mut VmmMode,
         counts: &mut Vec<(u32, u32)>,
     ) -> u64 {
-        assert!(block < self.cfg.k, "block {block} out of range");
         let (xp, xm) = self.pack_input(input);
+        self.vmm_block_masks_into(block, xp, xm, self.cfg.n, mode, counts)
+    }
+
+    /// Mask-level block access — the shared core of every VMM entry point.
+    /// `(xp, xm)` are the pre-packed RWD masks (see [`PackedTrits`]), and
+    /// `ncols` limits how many columns are digitized: counts for the first
+    /// `ncols` columns are bit-identical to the full-width access, and
+    /// when the remaining columns hold only zero weights the meter is
+    /// identical too (zero weights never discharge a bitline). The
+    /// functional accelerator exploits this to skip the all-zero column
+    /// tail of narrow layers. Note that under [`VmmMode::AnalogNoisy`] a
+    /// column-limited access consumes fewer RNG draws than a full-width
+    /// one, so only equal-`ncols` accesses are comparable bit-for-bit.
+    pub fn vmm_block_masks_into(
+        &mut self,
+        block: usize,
+        xp: u32,
+        xm: u32,
+        ncols: usize,
+        mode: &mut VmmMode,
+        counts: &mut Vec<(u32, u32)>,
+    ) -> u64 {
+        assert!(block < self.cfg.k, "block {block} out of range");
+        assert!(ncols <= self.cfg.n, "ncols {ncols} wider than the tile");
         let blk = &self.blocks[block];
         let n_max = self.cfg.n_max;
         counts.clear();
-        counts.reserve(self.cfg.n);
+        counts.reserve(ncols);
         let mut discharges = 0u64;
         match mode {
             VmmMode::Ideal => {
-                for (&wp, &wm) in blk.plus.iter().zip(blk.minus.iter()) {
+                for (&wp, &wm) in blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter()) {
                     let n_raw = ((wp & xp) | (wm & xm)).count_ones();
                     let k_raw = ((wp & xm) | (wm & xp)).count_ones();
                     discharges += (n_raw + k_raw) as u64;
@@ -173,7 +321,7 @@ impl TimTile {
                 }
             }
             VmmMode::Analog => {
-                for (&wp, &wm) in blk.plus.iter().zip(blk.minus.iter()) {
+                for (&wp, &wm) in blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter()) {
                     let n_raw = ((wp & xp) | (wm & xm)).count_ones();
                     let k_raw = ((wp & xm) | (wm & xp)).count_ones();
                     discharges += (n_raw + k_raw) as u64;
@@ -183,7 +331,7 @@ impl TimTile {
                 }
             }
             VmmMode::AnalogNoisy(rng) => {
-                for (&wp, &wm) in blk.plus.iter().zip(blk.minus.iter()) {
+                for (&wp, &wm) in blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter()) {
                     let n_raw = ((wp & xp) | (wm & xm)).count_ones();
                     let k_raw = ((wp & xm) | (wm & xp)).count_ones();
                     discharges += (n_raw + k_raw) as u64;
@@ -200,11 +348,31 @@ impl TimTile {
     /// Full-matrix VMM: the input spans `rows ≤ L·K`; blocks are accessed
     /// sequentially and the PCUs reduce partial sums digitally (§III-C).
     /// Scale factors are applied per the tile's ternary system registers.
+    ///
+    /// Allocates the output; hot paths use [`Self::vmm_into`] (same
+    /// arithmetic, caller-owned buffer) or [`Self::vmm_packed_into`]
+    /// (additionally skips the per-call input packing).
     pub fn vmm(&mut self, input: &[Trit], system: TernarySystem, mode: &mut VmmMode) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cfg.n);
+        self.vmm_into(input, system, mode, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Self::vmm`]: writes the `N` outputs
+    /// into `out` (cleared first). Temporaries live in tile-owned scratch,
+    /// so steady-state calls perform zero heap allocations.
+    pub fn vmm_into(
+        &mut self,
+        input: &[Trit],
+        system: TernarySystem,
+        mode: &mut VmmMode,
+        out: &mut Vec<f32>,
+    ) {
         assert!(input.len() <= self.cfg.rows(), "input taller than tile");
-        let mut out = vec![0f32; self.cfg.n];
-        let mut counts: Vec<(u32, u32)> = Vec::with_capacity(self.cfg.n);
-        let mut plane: Vec<Trit> = Vec::with_capacity(self.cfg.l);
+        out.clear();
+        out.resize(self.cfg.n, 0.0);
+        let mut counts = std::mem::take(&mut self.scratch.counts);
+        let mut plane = std::mem::take(&mut self.scratch.plane);
         let steps = system.accesses_per_vmm();
         for (b, chunk) in input.chunks(self.cfg.l).enumerate() {
             for step in 0..steps {
@@ -228,18 +396,61 @@ impl TimTile {
                     }
                     _ => unreachable!(),
                 }
-                for (c, &(n, k)) in counts.iter().enumerate() {
-                    out[c] += system.combine_step(n, k, step);
+                for (o, &(n, k)) in out.iter_mut().zip(counts.iter()) {
+                    *o += system.combine_step(n, k, step);
                 }
             }
         }
-        out
+        self.scratch.counts = counts;
+        self.scratch.plane = plane;
+    }
+
+    /// Full-matrix VMM over a pre-packed ternary input: bit-exact with
+    /// [`Self::vmm`] in every [`VmmMode`] (identical access sequence, so
+    /// the AnalogNoisy RNG stream matches too), but the per-call trit →
+    /// mask packing and the per-step plane copies are gone — the packed
+    /// planes already *are* the per-step RWD masks.
+    pub fn vmm_packed_into(
+        &mut self,
+        packed: &PackedTrits,
+        system: TernarySystem,
+        mode: &mut VmmMode,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(packed.block_len(), self.cfg.l, "packed for a different block height");
+        assert!(packed.len() <= self.cfg.rows(), "input taller than tile");
+        out.clear();
+        out.resize(self.cfg.n, 0.0);
+        let mut counts = std::mem::take(&mut self.scratch.counts);
+        let steps = system.accesses_per_vmm();
+        for (b, &(xp, xm)) in packed.blocks().iter().enumerate() {
+            for step in 0..steps {
+                let (mp, mm) = match (steps, step) {
+                    (1, _) => (xp, xm),
+                    // The positive/negative planes of Fig 5(b), applied as
+                    // unsigned {0,1}: exactly the packed plus/minus masks.
+                    (2, 0) => (xp, 0),
+                    (2, 1) => (xm, 0),
+                    _ => unreachable!(),
+                };
+                self.vmm_block_masks_into(b, mp, mm, self.cfg.n, mode, &mut counts);
+                for (o, &(n, k)) in out.iter_mut().zip(counts.iter()) {
+                    *o += system.combine_step(n, k, step);
+                }
+            }
+        }
+        self.scratch.counts = counts;
     }
 
     /// Bit-serial VMM for 2-bit unsigned activations (WRPN [2,T] layers):
     /// each bit plane is applied as a {0,1} input and the PCU shifter
     /// weights plane p by 2^p (§III-C "The activations are evaluated
     /// bit-serially using multiple TiM accesses").
+    ///
+    /// This is the scalar reference: it materializes each bit plane as a
+    /// trit vector per call. The hot path packs the planes once with
+    /// [`PackedCodes`] and streams them through
+    /// [`Self::vmm_2bit_packed_into`] (bit-exact, asserted in tests).
     pub fn vmm_2bit(
         &mut self,
         codes: &[u8],
@@ -259,6 +470,53 @@ impl TimTile {
             }
         }
         out
+    }
+
+    /// Packed-plane variant of [`Self::vmm_2bit`]: consumes the two
+    /// pre-packed bit planes directly and writes into a caller-owned
+    /// buffer. The access sequence (plane-major, then block, then step)
+    /// and the f32 accumulation order mirror the scalar path exactly, so
+    /// the result is bit-identical in every [`VmmMode`] — including the
+    /// AnalogNoisy RNG stream — while eliminating the two plane-vector
+    /// and three output allocations per call.
+    pub fn vmm_2bit_packed_into(
+        &mut self,
+        packed: &PackedCodes,
+        system: TernarySystem,
+        mode: &mut VmmMode,
+        out: &mut Vec<f32>,
+    ) {
+        assert_eq!(packed.block_len(), self.cfg.l, "packed for a different block height");
+        assert!(packed.len() <= self.cfg.rows(), "input taller than tile");
+        out.clear();
+        out.resize(self.cfg.n, 0.0);
+        let mut counts = std::mem::take(&mut self.scratch.counts);
+        let mut plane_out = std::mem::take(&mut self.scratch.plane_out);
+        let steps = system.accesses_per_vmm();
+        for plane in 0..2usize {
+            plane_out.clear();
+            plane_out.resize(self.cfg.n, 0.0);
+            for (b, masks) in packed.planes().iter().enumerate() {
+                let mask = masks[plane];
+                for step in 0..steps {
+                    // A {0,1} plane has no negative part: step 0 applies
+                    // the plane mask, step 1 of asymmetric systems applies
+                    // the (empty) negative plane — the access still
+                    // happens, as in the scalar path.
+                    let mp = if step == 0 { mask } else { 0 };
+                    self.vmm_block_masks_into(b, mp, 0, self.cfg.n, mode, &mut counts);
+                    for (o, &(n, k)) in plane_out.iter_mut().zip(counts.iter()) {
+                        *o += system.combine_step(n, k, step);
+                    }
+                }
+            }
+            let shift = (1u32 << plane) as f32;
+            for (o, &p) in out.iter_mut().zip(plane_out.iter()) {
+                *o += shift * p;
+            }
+        }
+        self.scratch.counts = counts;
+        self.scratch.plane_out = plane_out;
     }
 }
 
@@ -400,6 +658,92 @@ mod tests {
                 (0..16).map(|r| w.get(r, c) as i32 * codes[r] as i32).sum();
             assert_eq!(got[c] as i32, want, "col {c}");
         }
+    }
+
+    #[test]
+    fn packed_trits_pack_matches_pack_input() {
+        let mut rng = Rng::seeded(21);
+        let x = rng.trit_vec(64, 0.4);
+        let packed = PackedTrits::pack(&x, 16);
+        assert_eq!(packed.len(), 64);
+        assert_eq!(packed.blocks().len(), 4);
+        let tile = TimTile::new(small_cfg());
+        for (b, chunk) in x.chunks(16).enumerate() {
+            assert_eq!(packed.blocks()[b], tile.pack_input(chunk), "block {b}");
+        }
+    }
+
+    #[test]
+    fn packed_codes_planes_match_bit_extraction() {
+        let mut rng = Rng::seeded(22);
+        let codes: Vec<u8> = (0..40).map(|_| rng.below(4) as u8).collect();
+        let packed = PackedCodes::pack(&codes, 16);
+        assert_eq!(packed.planes().len(), 3); // ceil(40/16)
+        for (i, &c) in codes.iter().enumerate() {
+            let (b, bit) = (i / 16, i % 16);
+            for plane in 0..2 {
+                let want = u32::from((c >> plane) & 1);
+                let got = (packed.planes()[b][plane] >> bit) & 1;
+                assert_eq!(got, want, "code {i} plane {plane}");
+            }
+        }
+    }
+
+    #[test]
+    fn vmm_into_matches_vmm() {
+        let mut rng = Rng::seeded(23);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        let x = rng.trit_vec(64, 0.4);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let want = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        let mut got = Vec::new();
+        tile.vmm_into(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn packed_vmm_matches_scalar_vmm() {
+        let mut rng = Rng::seeded(24);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        let x = rng.trit_vec(64, 0.4);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let packed = PackedTrits::pack(&x, 16);
+        let want = tile.vmm(&x, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        let mut got = Vec::new();
+        tile.vmm_packed_into(&packed, TernarySystem::Unweighted, &mut VmmMode::Ideal, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn packed_2bit_matches_scalar_2bit() {
+        let mut rng = Rng::seeded(25);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        let codes: Vec<u8> = (0..64).map(|_| rng.below(4) as u8).collect();
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let packed = PackedCodes::pack(&codes, 16);
+        let want = tile.vmm_2bit(&codes, TernarySystem::Unweighted, &mut VmmMode::Ideal);
+        let mut got = Vec::new();
+        tile.vmm_2bit_packed_into(&packed, TernarySystem::Unweighted, &mut VmmMode::Ideal, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn column_limited_masks_access_matches_prefix() {
+        let mut rng = Rng::seeded(26);
+        let w = TritMatrix::random(16, 32, 0.4, &mut rng);
+        let x = rng.trit_vec(16, 0.4);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let (xp, xm) = tile.pack_input(&x);
+        let mut full = Vec::new();
+        let mut limited = Vec::new();
+        tile.vmm_block_masks_into(0, xp, xm, 32, &mut VmmMode::Ideal, &mut full);
+        tile.vmm_block_masks_into(0, xp, xm, 10, &mut VmmMode::Ideal, &mut limited);
+        assert_eq!(limited.len(), 10);
+        assert_eq!(&full[..10], &limited[..]);
     }
 
     #[test]

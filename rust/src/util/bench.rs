@@ -34,6 +34,50 @@ impl BenchResult {
     pub fn per_second(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean.as_secs_f64()
     }
+
+    /// This result as a one-line JSON object (hand-rolled — the offline
+    /// environment has no serde).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"p95_ns\":{:.1},\"per_second\":{:.1}}}",
+            self.name,
+            self.iters,
+            self.mean.as_secs_f64() * 1e9,
+            self.median.as_secs_f64() * 1e9,
+            self.p95.as_secs_f64() * 1e9,
+            self.per_second(1.0)
+        )
+    }
+}
+
+/// Write a machine-readable bench report: all `results` plus named
+/// `derived` scalars (speedups, ratios). The format is stable JSON so CI
+/// and EXPERIMENTS.md tooling can diff runs.
+pub fn write_json_report(
+    path: &str,
+    bench: &str,
+    mode: &str,
+    results: &[BenchResult],
+    derived: &[(&str, f64)],
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"bench\": \"{bench}\",\n"));
+    s.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 < results.len() { "," } else { "" };
+        s.push_str(&format!("    {}{}\n", r.json(), sep));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"derived\": {\n");
+    for (i, (name, v)) in derived.iter().enumerate() {
+        let sep = if i + 1 < derived.len() { "," } else { "" };
+        s.push_str(&format!("    \"{name}\": {v:.3}{sep}\n"));
+    }
+    s.push_str("  }\n");
+    s.push_str("}\n");
+    std::fs::write(path, s)
 }
 
 /// Run `f` repeatedly: ~`warmup` of warmup then enough samples to cover
@@ -81,6 +125,27 @@ pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_nanos(100),
+            median: Duration::from_nanos(90),
+            p95: Duration::from_nanos(150),
+        };
+        let j = r.json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"name\":\"x\""), "{j}");
+        let path = std::env::temp_dir().join("timdnn_bench_json_test.json");
+        let path_str = path.to_str().unwrap();
+        write_json_report(path_str, "t", "smoke", &[r], &[("speedup", 2.0)]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"speedup\": 2.000"), "{body}");
+        assert!(body.contains("\"mode\": \"smoke\""), "{body}");
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn measures_something_positive() {

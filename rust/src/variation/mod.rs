@@ -100,13 +100,16 @@ impl VariationStudy {
         let cfg = TileConfig { l: TILE_L, k: 1, n: 64, m: 8, n_max: self.n_max };
         let mut counts = vec![0u64; (self.n_max + 1) as usize];
         let mut total = 0u64;
+        // Reused across accesses — the allocation-free `vmm_block_into`
+        // path (the allocating `vmm_block` is for one-shot callers only).
+        let mut col_counts: Vec<(u32, u32)> = Vec::with_capacity(cfg.n);
         for _ in 0..accesses {
             let w = TritMatrix::random(cfg.l, cfg.n, weight_sparsity, rng);
             let mut tile = TimTile::new(cfg);
             tile.load_weights(&w);
             let x = rng.trit_vec(cfg.l, input_sparsity);
-            let res = tile.vmm_block(0, &x, &mut VmmMode::Ideal);
-            for &(n, k) in &res.counts {
+            tile.vmm_block_into(0, &x, &mut VmmMode::Ideal, &mut col_counts);
+            for &(n, k) in &col_counts {
                 counts[n as usize] += 1;
                 counts[k as usize] += 1;
                 total += 2;

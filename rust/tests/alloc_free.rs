@@ -1,0 +1,85 @@
+//! Asserts the acceptance criterion that a steady-state functional
+//! `forward` performs **zero heap allocations**: after one warm-up
+//! inference has grown every scratch buffer to its high-water mark,
+//! further `forward_into` calls must not touch the allocator.
+//!
+//! A counting `#[global_allocator]` tallies allocations per thread (a
+//! `const`-initialized `thread_local` `Cell` — no `Drop`, so it is safe
+//! to touch from inside the allocator), which keeps the test immune to
+//! allocator traffic from the harness's other test threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
+use timdnn::tile::{TileConfig, VmmMode};
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAllocator;
+
+// SAFETY: delegates every operation to `System`; the counter is a plain
+// per-thread `Cell` bump with no allocation or locking.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+fn allocs_on_this_thread() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn steady_state_forward_performs_zero_heap_allocations() {
+    let weights = TimNetWeights::synthetic(42);
+    let mut acc = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let img: Vec<f32> = (0..256).map(|i| ((i * 13) % 11) as f32 / 11.0).collect();
+    let mut logits = Vec::with_capacity(10);
+
+    // Warm-up: grows every scratch buffer to its high-water mark.
+    acc.forward_into(&img, &mut VmmMode::Ideal, &mut logits);
+    let warm = logits.clone();
+
+    let before = allocs_on_this_thread();
+    for _ in 0..3 {
+        acc.forward_into(&img, &mut VmmMode::Ideal, &mut logits);
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state forward_into allocated {} times",
+        after - before
+    );
+    assert_eq!(logits, warm, "steady-state results must not drift");
+}
+
+#[test]
+fn steady_state_analog_forward_is_also_allocation_free() {
+    let weights = TimNetWeights::synthetic(7);
+    let mut acc = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let img: Vec<f32> = (0..256).map(|i| (i % 7) as f32 / 7.0).collect();
+    let mut logits = Vec::with_capacity(10);
+    acc.forward_into(&img, &mut VmmMode::Analog, &mut logits);
+
+    let before = allocs_on_this_thread();
+    acc.forward_into(&img, &mut VmmMode::Analog, &mut logits);
+    let after = allocs_on_this_thread();
+    assert_eq!(after - before, 0, "Analog-mode steady-state forward allocated");
+}

@@ -1,0 +1,177 @@
+//! Bit-exact parity of the packed-plane VMM pipeline against the scalar
+//! reference paths — the correctness contract of the PR that introduced
+//! `PackedTrits`/`PackedCodes` (see DESIGN.md "Packed-plane data flow"):
+//!
+//! * `TimTile::vmm_packed_into` / `vmm_2bit_packed_into` vs the scalar
+//!   `vmm` / `vmm_2bit`, across every `VmmMode` (Ideal, Analog, and
+//!   AnalogNoisy under a fixed seed — the packed paths replay the exact
+//!   access sequence, so the RNG streams match draw-for-draw) and every
+//!   `TernarySystem` (unweighted, symmetric, asymmetric);
+//! * `TimNetAccelerator::forward`/`forward_into` vs `forward_scalar`;
+//! * a parallel `FunctionalBackend` batch vs serial execution, same
+//!   request order.
+
+use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
+use timdnn::coordinator::{ExecutorBackend, FunctionalBackend};
+use timdnn::quant::TernarySystem;
+use timdnn::runtime::TensorF32;
+use timdnn::tile::{PackedCodes, PackedTrits, TileConfig, TimTile, VmmMode};
+use timdnn::tpc::TritMatrix;
+use timdnn::util::prng::Rng;
+
+fn systems() -> [TernarySystem; 3] {
+    [
+        TernarySystem::Unweighted,
+        TernarySystem::Symmetric { a: 0.5 },
+        TernarySystem::Asymmetric { w1: 0.5, w2: 0.25, i1: 0.75, i2: 1.5 },
+    ]
+}
+
+fn test_cfg() -> TileConfig {
+    TileConfig { l: 16, k: 4, n: 32, m: 8, n_max: 8 }
+}
+
+/// Two tiles loaded with the same weights (separate meters/scratch, so a
+/// scalar and a packed run cannot influence each other).
+fn twin_tiles(seed: u64) -> (TimTile, TimTile, TritMatrix) {
+    let mut rng = Rng::seeded(seed);
+    let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+    let mut a = TimTile::new(test_cfg());
+    let mut b = TimTile::new(test_cfg());
+    a.load_weights(&w);
+    b.load_weights(&w);
+    (a, b, w)
+}
+
+#[test]
+fn vmm_into_matches_vmm_for_all_systems() {
+    let (mut tile, _, _) = twin_tiles(100);
+    let mut rng = Rng::seeded(101);
+    for sys in systems() {
+        let x = rng.trit_vec(64, 0.4);
+        let want = tile.vmm(&x, sys, &mut VmmMode::Ideal);
+        let mut got = Vec::new();
+        tile.vmm_into(&x, sys, &mut VmmMode::Ideal, &mut got);
+        assert_eq!(got, want, "system {sys:?}");
+    }
+}
+
+#[test]
+fn packed_vmm_matches_scalar_all_systems_and_deterministic_modes() {
+    let (mut scalar, mut packed_tile, _) = twin_tiles(200);
+    let mut rng = Rng::seeded(201);
+    for sys in systems() {
+        let x = rng.trit_vec(64, 0.4);
+        let packed = PackedTrits::pack(&x, 16);
+        for mode_id in 0..2 {
+            let mut m1 = if mode_id == 0 { VmmMode::Ideal } else { VmmMode::Analog };
+            let mut m2 = if mode_id == 0 { VmmMode::Ideal } else { VmmMode::Analog };
+            let want = scalar.vmm(&x, sys, &mut m1);
+            let mut got = Vec::new();
+            packed_tile.vmm_packed_into(&packed, sys, &mut m2, &mut got);
+            assert_eq!(got, want, "system {sys:?} mode {mode_id}");
+        }
+    }
+}
+
+#[test]
+fn packed_vmm_matches_scalar_under_noise_with_fixed_seed() {
+    let (mut scalar, mut packed_tile, _) = twin_tiles(300);
+    let mut rng = Rng::seeded(301);
+    for (i, sys) in systems().into_iter().enumerate() {
+        let x = rng.trit_vec(64, 0.4);
+        let packed = PackedTrits::pack(&x, 16);
+        // Identical seeds: the packed path must consume the RNG in the
+        // exact same order as the scalar path.
+        let mut r1 = Rng::seeded(1000 + i as u64);
+        let mut r2 = Rng::seeded(1000 + i as u64);
+        let want = scalar.vmm(&x, sys, &mut VmmMode::AnalogNoisy(&mut r1));
+        let mut got = Vec::new();
+        packed_tile.vmm_packed_into(&packed, sys, &mut VmmMode::AnalogNoisy(&mut r2), &mut got);
+        assert_eq!(got, want, "system {sys:?}");
+        // Both streams must have advanced identically.
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams diverged for {sys:?}");
+    }
+}
+
+#[test]
+fn packed_2bit_matches_scalar_all_systems_all_modes() {
+    let (mut scalar, mut packed_tile, _) = twin_tiles(400);
+    let mut rng = Rng::seeded(401);
+    for (i, sys) in systems().into_iter().enumerate() {
+        let codes: Vec<u8> = (0..64).map(|_| rng.below(4) as u8).collect();
+        let packed = PackedCodes::pack(&codes, 16);
+        let mut got = Vec::new();
+
+        let want = scalar.vmm_2bit(&codes, sys, &mut VmmMode::Ideal);
+        packed_tile.vmm_2bit_packed_into(&packed, sys, &mut VmmMode::Ideal, &mut got);
+        assert_eq!(got, want, "Ideal, system {sys:?}");
+
+        let want = scalar.vmm_2bit(&codes, sys, &mut VmmMode::Analog);
+        packed_tile.vmm_2bit_packed_into(&packed, sys, &mut VmmMode::Analog, &mut got);
+        assert_eq!(got, want, "Analog, system {sys:?}");
+
+        let mut r1 = Rng::seeded(2000 + i as u64);
+        let mut r2 = Rng::seeded(2000 + i as u64);
+        let want = scalar.vmm_2bit(&codes, sys, &mut VmmMode::AnalogNoisy(&mut r1));
+        packed_tile.vmm_2bit_packed_into(
+            &packed,
+            sys,
+            &mut VmmMode::AnalogNoisy(&mut r2),
+            &mut got,
+        );
+        assert_eq!(got, want, "AnalogNoisy, system {sys:?}");
+        assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams diverged for {sys:?}");
+    }
+}
+
+#[test]
+fn packed_forward_matches_scalar_forward_on_paper_tile() {
+    let weights = TimNetWeights::synthetic(7);
+    let mut acc = TimNetAccelerator::new(&weights, TileConfig::paper());
+    for trial in 0..3u32 {
+        let img: Vec<f32> =
+            (0..256).map(|i| ((i as u32 * 17 + trial * 41) % 23) as f32 / 23.0).collect();
+        let want = acc.forward_scalar(&img, &mut VmmMode::Ideal);
+        let got = acc.forward(&img, &mut VmmMode::Ideal);
+        assert_eq!(got, want, "trial {trial} (Ideal)");
+        let mut buf = Vec::new();
+        acc.forward_into(&img, &mut VmmMode::Analog, &mut buf);
+        assert_eq!(buf, want, "trial {trial} (Analog must equal Ideal)");
+    }
+}
+
+#[test]
+fn parallel_backend_batch_matches_serial_same_order() {
+    let image = |i: usize| {
+        vec![TensorF32::new(
+            vec![16, 16, 1],
+            (0..256).map(|p| ((p * 3 + i * 29) % 19) as f32 / 19.0).collect(),
+        )]
+    };
+    let batch: Vec<_> = (0..8).map(image).collect();
+    let mut serial = FunctionalBackend::synthetic(11);
+    let mut pooled = FunctionalBackend::synthetic(11).with_workers(8);
+    let want = serial.execute_batch(&batch).unwrap();
+    let got = pooled.execute_batch(&batch).unwrap();
+    assert_eq!(got.len(), 8);
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g, w, "request {i}");
+    }
+    // Odd batch size exercises the uneven-chunk path.
+    let batch5: Vec<_> = (0..5).map(image).collect();
+    assert_eq!(
+        pooled.execute_batch(&batch5).unwrap(),
+        serial.execute_batch(&batch5).unwrap()
+    );
+}
+
+#[test]
+fn parallel_backend_still_validates_inputs() {
+    let mut pooled = FunctionalBackend::synthetic(13).with_workers(4);
+    let bad = vec![vec![TensorF32::new(vec![4], vec![0.0; 4])]];
+    assert!(matches!(
+        pooled.execute_batch(&bad),
+        Err(timdnn::TimError::ShapeMismatch { expected: 256, got: 4, .. })
+    ));
+}
