@@ -7,10 +7,14 @@
 //! * functional TiM-tile block VMM (the simulator's inner loop),
 //! * full-tile 256-row VMM — allocating, `_into`, and packed-plane paths,
 //! * 2-bit bit-serial VMM — scalar vs. pre-packed planes,
+//! * the kernel-level scalar → packed → weight-stationary trajectory: a
+//!   64-patch 2-bit batch dispatched per patch (`vmm_2bit`), per patch
+//!   over pre-packed planes (`vmm_2bit_packed_into`), and through the
+//!   weight-stationary batch kernel (`vmm_block_batch_into`),
 //! * end-to-end functional TiMNet forward — scalar reference vs. the
-//!   packed batched pipeline (the PR's ≥4× headline case),
+//!   weight-stationary batched pipeline,
 //! * 8-wide batched serving through `FunctionalBackend` — pre-PR serial
-//!   scalar cost vs. the packed pool at widths 1 and 8 (the ≥8× case),
+//!   scalar cost vs. the batched pool at widths 1 and 8,
 //! * mapper + simulator end-to-end, Monte-Carlo variation sampling.
 //!
 //! `cargo bench --bench hotpath -- --smoke` runs a fast CI subset.
@@ -121,6 +125,71 @@ fn main() {
     println!("  -> 2-bit packed speedup {:.2}x", scalar_2bit_mean / packed_2bit_mean);
     results.push(r);
 
+    // --- Kernel trajectory: scalar → packed → weight-stationary ----------
+    // One paper tile, a 64-patch batch of 256-row 2-bit activations: the
+    // same work expressed three ways (EXPERIMENTS.md §Perf).
+    const KERNEL_BATCH: usize = 64;
+    let kcodes: Vec<Vec<u8>> = (0..KERNEL_BATCH)
+        .map(|_| (0..256).map(|_| rng.below(4) as u8).collect())
+        .collect();
+    let r = bench("kernel/batch64_2bit_scalar", warmup, measure, || {
+        for c in &kcodes {
+            black_box(tile.vmm_2bit(black_box(c), TernarySystem::Unweighted, &mut VmmMode::Ideal));
+        }
+    });
+    let kernel_scalar_mean = r.mean.as_secs_f64();
+    results.push(r);
+
+    let kpacked: Vec<PackedCodes> =
+        kcodes.iter().map(|c| PackedCodes::pack(c, tile.config().l)).collect();
+    let r = bench("kernel/batch64_2bit_packed", warmup, measure, || {
+        for pc in &kpacked {
+            tile.vmm_2bit_packed_into(
+                black_box(pc),
+                TernarySystem::Unweighted,
+                &mut VmmMode::Ideal,
+                &mut vout,
+            );
+            black_box(&vout);
+        }
+    });
+    let kernel_packed_mean = r.mean.as_secs_f64();
+    results.push(r);
+
+    let (kblocks, kcols) = (tile.config().k, tile.config().n);
+    let mut kacc = vec![0i32; KERNEL_BATCH * kcols];
+    let mut kmasks: Vec<(u32, u32)> = Vec::with_capacity(KERNEL_BATCH);
+    let mut kout = vec![0f32; KERNEL_BATCH * kcols];
+    let r = bench("kernel/batch64_2bit_ws", warmup, measure, || {
+        kacc.fill(0);
+        for plane in 0..2usize {
+            for b in 0..kblocks {
+                kmasks.clear();
+                kmasks.extend(kpacked.iter().map(|pc| (pc.planes()[b][plane], 0u32)));
+                tile.vmm_block_batch_into(
+                    b,
+                    &kmasks,
+                    kcols,
+                    plane as u32,
+                    &mut VmmMode::Ideal,
+                    &mut kacc,
+                );
+            }
+        }
+        // The single f32 conversion per output the kernel design buys.
+        for (o, &v) in kout.iter_mut().zip(kacc.iter()) {
+            *o = v as f32;
+        }
+        black_box(&kout);
+    });
+    let kernel_ws_mean = r.mean.as_secs_f64();
+    println!(
+        "  -> weight-stationary kernel {:.2}x vs scalar, {:.2}x vs packed",
+        kernel_scalar_mean / kernel_ws_mean,
+        kernel_packed_mean / kernel_ws_mean
+    );
+    results.push(r);
+
     // Analog-path VMM (bitline curve + ADC decode per column).
     let r = bench("tile/block_vmm_analog", warmup, measure, || {
         black_box(tile.vmm_block(0, black_box(&x16), &mut VmmMode::Analog));
@@ -140,14 +209,14 @@ fn main() {
     results.push(r);
 
     let mut logits = Vec::with_capacity(10);
-    let r = bench("functional/forward_packed", warmup, measure, || {
+    let r = bench("functional/forward_ws", warmup, measure, || {
         acc.forward_into(black_box(&img), &mut VmmMode::Ideal, &mut logits);
         black_box(&logits);
     });
-    let fwd_packed_mean = r.mean.as_secs_f64();
-    let forward_speedup = fwd_scalar_mean / fwd_packed_mean;
+    let fwd_ws_mean = r.mean.as_secs_f64();
+    let forward_speedup = fwd_scalar_mean / fwd_ws_mean;
     println!(
-        "  -> {:.0} packed inf/s ({forward_speedup:.2}x over scalar)",
+        "  -> {:.0} weight-stationary inf/s ({forward_speedup:.2}x over scalar)",
         r.per_second(1.0)
     );
     results.push(r);
@@ -209,9 +278,11 @@ fn main() {
     }
 
     let derived = [
-        ("forward_speedup_packed_vs_scalar", forward_speedup),
+        ("forward_speedup_ws_vs_scalar", forward_speedup),
         ("serving_speedup_pool8_vs_prepr", serving_speedup),
         ("vmm_2bit_speedup_packed_vs_scalar", scalar_2bit_mean / packed_2bit_mean),
+        ("kernel_ws_speedup_vs_scalar", kernel_scalar_mean / kernel_ws_mean),
+        ("kernel_ws_speedup_vs_packed", kernel_packed_mean / kernel_ws_mean),
     ];
     let mode = if smoke { "smoke" } else { "full" };
     match write_json_report("BENCH_hotpath.json", "hotpath", mode, &results, &derived) {

@@ -19,7 +19,7 @@ use std::path::Path;
 
 use crate::error::{Result, TimError};
 use crate::quant::TernarySystem;
-use crate::tile::{PackedCodes, TileConfig, TimTile, VmmMode};
+use crate::tile::{PackedCodes, TileConfig, TileMeter, TimTile, VmmMode};
 use crate::tpc::{Trit, TritMatrix};
 
 /// One VMM layer: ternary weights + PCU scale register value.
@@ -112,13 +112,48 @@ impl TimNetWeights {
     }
 }
 
+/// Largest patch batch the layer scratch retains between calls: TiMNet's
+/// biggest layer pass is conv1's 256 im2col patches, so anything above
+/// this is a one-off oversized batch whose buffers must not stay pinned
+/// for the life of a serving worker (see [`LayerScratch::trim`]).
+const MAX_RETAINED_PATCHES: usize = 256;
+
+/// Accumulator-plane retention cap: 256 patches × a full 256-column tile
+/// (the widest plane any TiMNet pass needs, including the full-width
+/// noisy path).
+const MAX_RETAINED_ACC: usize = 256 * 256;
+
 /// Reusable buffers for [`LayerEngine::forward_2bit_batch`]: per-patch
-/// packed bit planes and the per-access count buffer. One instance is
+/// packed bit planes, the per-(plane, block) gathered mask batch, and the
+/// i32 accumulator plane of the weight-stationary kernel. One instance is
 /// shared by all layers of an accelerator (see [`ScratchArena`]).
 #[derive(Default)]
 struct LayerScratch {
     packed: Vec<PackedCodes>,
-    counts: Vec<(u32, u32)>,
+    masks: Vec<(u32, u32)>,
+    acc: Vec<i32>,
+}
+
+impl LayerScratch {
+    /// Release buffer space beyond the steady-state high-water marks. A
+    /// one-off large batch may grow `packed`/`acc` arbitrarily; without
+    /// this, that memory stays resident for the life of the worker. At or
+    /// under the caps this is a no-op (no allocator traffic — the
+    /// zero-allocation steady state is preserved).
+    fn trim(&mut self) {
+        if self.packed.len() > MAX_RETAINED_PATCHES {
+            self.packed.truncate(MAX_RETAINED_PATCHES);
+            self.packed.shrink_to_fit();
+        }
+        if self.masks.capacity() > MAX_RETAINED_PATCHES {
+            self.masks.truncate(MAX_RETAINED_PATCHES);
+            self.masks.shrink_to_fit();
+        }
+        if self.acc.capacity() > MAX_RETAINED_ACC {
+            self.acc.truncate(MAX_RETAINED_ACC);
+            self.acc.shrink_to_fit();
+        }
+    }
 }
 
 /// A tile group executing one layer's weight matrix, splitting rows
@@ -130,10 +165,12 @@ struct LayerEngine {
     cols: usize,
     scale: f32,
     rows_per_tile: usize,
-    /// Tile geometry, cached off [`TileConfig`]: rows per block (L) and
-    /// blocks per tile (K).
+    /// Tile geometry, cached off [`TileConfig`]: rows per block (L),
+    /// blocks per tile (K), and full column width (N — the noisy path
+    /// digitizes all of it to mirror the scalar access exactly).
     block_len: usize,
     blocks_per_tile: usize,
+    tile_cols: usize,
 }
 
 impl LayerEngine {
@@ -165,6 +202,20 @@ impl LayerEngine {
             rows_per_tile,
             block_len: cfg.l,
             blocks_per_tile: cfg.k,
+            tile_cols: cfg.n,
+        }
+    }
+
+    /// Merge every tile's meter into `m` (accelerator-level accounting).
+    fn merge_meters(&self, m: &mut TileMeter) {
+        for t in &self.tiles {
+            m.merge(&t.meter);
+        }
+    }
+
+    fn reset_meters(&mut self) {
+        for t in &mut self.tiles {
+            t.meter.reset();
         }
     }
 
@@ -196,21 +247,29 @@ impl LayerEngine {
     /// `self.rows` 2-bit codes each (row-major flat); `out` becomes the
     /// `n_patches × cols` dequantized pre-activations.
     ///
-    /// Every patch is packed into per-plane block masks **once**, then all
-    /// patches stream through each tile block in one pass (block masks
-    /// stay hot in cache) instead of re-dispatching the whole tile group
-    /// per patch. Accesses are column-limited to the layer's real `cols`
-    /// (the tail columns hold only padding zeros) and all-zero plane masks
-    /// are input-gated — both value-exact, see
-    /// [`TimTile::vmm_block_masks_into`]. Steady-state calls perform zero
-    /// heap allocations: all temporaries live in `scratch` / `out` at
-    /// their high-water marks.
+    /// Every patch is packed into per-plane block masks **once**, then the
+    /// whole batch runs **weight-stationary** through
+    /// [`TimTile::vmm_block_batch_into`]: per (plane, block) the gathered
+    /// patch masks stream against each weight pair — loaded once — and
+    /// the signed digitized partial sums accumulate in a per-patch **i32
+    /// plane** (bit plane `p` folds in as an integer shift by `p`), so the
+    /// f32 scale conversion happens exactly once per output instead of
+    /// once per block access. Accesses are column-limited to the layer's
+    /// real `cols` (the tail columns hold only padding zeros), all-zero
+    /// plane masks are input-gated, and all-zero weight blocks are
+    /// weight-gated ([`TimTile::block_weights_zero`]) — each value- and
+    /// discharge-exact. Steady-state calls perform zero heap allocations:
+    /// all temporaries live in `scratch` / `out` at their high-water
+    /// marks, and oversized one-off batches are trimmed back after use.
     ///
     /// Values are bit-exact with looping [`Self::forward_2bit`] over the
-    /// patches under `Ideal` and `Analog` modes (unweighted block partial
-    /// sums are small integers, exactly representable in f32, so the
-    /// reordered accumulation is exact). Under `AnalogNoisy` the RNG
-    /// stream differs (fewer, reordered draws) — statistically equivalent.
+    /// patches in **all three modes**. Under `Ideal`/`Analog` the
+    /// unweighted block partial sums are small integers, so the reordered
+    /// integer accumulation is exact. Under `AnalogNoisy` the pass
+    /// switches to the scalar access order — per patch, per plane, per
+    /// block, full tile width, no gating — so the RNG draw sequence
+    /// matches the per-patch reference draw-for-draw
+    /// (`tests/batch_kernel.rs`).
     fn forward_2bit_batch(
         &mut self,
         codes: &[u8],
@@ -221,48 +280,93 @@ impl LayerEngine {
         out: &mut Vec<f32>,
     ) {
         assert_eq!(codes.len(), n_patches * self.rows, "patch matrix shape");
-        let LayerScratch { packed, counts } = scratch;
+        let LayerScratch { packed, masks, acc } = scratch;
         if packed.len() < n_patches {
             packed.resize_with(n_patches, PackedCodes::default);
         }
         for (p, planes) in packed.iter_mut().take(n_patches).enumerate() {
             planes.pack_into(&codes[p * self.rows..(p + 1) * self.rows], self.block_len);
         }
-        out.clear();
-        out.resize(n_patches * self.cols, 0.0);
-        for (t, tile) in self.tiles.iter_mut().enumerate() {
-            let lo = t * self.rows_per_tile;
-            let hi = (lo + self.rows_per_tile).min(self.rows);
-            let n_blocks = (hi - lo).div_ceil(self.block_len);
-            // Patches were packed whole, block-aligned: tile t's block b
-            // is packed block `first_block + b`.
-            let first_block = t * self.blocks_per_tile;
-            for plane in 0..2usize {
-                let shift = (1u32 << plane) as f32;
-                for b in 0..n_blocks {
-                    for (p, planes) in packed.iter().take(n_patches).enumerate() {
-                        let mask = planes.planes()[first_block + b][plane];
-                        if mask == 0 {
-                            // Input gating: an all-zero plane discharges no
-                            // bitline and contributes nothing — skip the
-                            // access entirely.
-                            continue;
-                        }
-                        tile.vmm_block_masks_into(b, mask, 0, self.cols, mode, counts);
-                        let row = &mut out[p * self.cols..(p + 1) * self.cols];
-                        // RU + PCU shifter: unweighted combine is n − k,
-                        // weighted by the plane's 2^p.
-                        for (o, &(n, k)) in row.iter_mut().zip(counts.iter()) {
-                            *o += shift * (n as f32 - k as f32);
+        let noisy = matches!(mode, VmmMode::AnalogNoisy(_));
+        let acc_cols = if noisy { self.tile_cols } else { self.cols };
+        acc.clear();
+        acc.resize(n_patches * acc_cols, 0);
+        if noisy {
+            // Scalar-ordered noisy pass: patch → tile → plane → block at
+            // full tile width with no gating, replicating the per-patch
+            // reference's RNG consumption exactly (the extra columns'
+            // counts land beyond `cols` and are discarded at scale time,
+            // just as the scalar path computes-then-drops them).
+            for (planes, row) in
+                packed.iter().take(n_patches).zip(acc.chunks_exact_mut(acc_cols))
+            {
+                for (t, tile) in self.tiles.iter_mut().enumerate() {
+                    let lo = t * self.rows_per_tile;
+                    let hi = (lo + self.rows_per_tile).min(self.rows);
+                    let n_blocks = (hi - lo).div_ceil(self.block_len);
+                    let first_block = t * self.blocks_per_tile;
+                    for plane in 0..2usize {
+                        for b in 0..n_blocks {
+                            let mask = planes.planes()[first_block + b][plane];
+                            tile.vmm_block_batch_into(
+                                b,
+                                &[(mask, 0)],
+                                acc_cols,
+                                plane as u32,
+                                mode,
+                                row,
+                            );
                         }
                     }
                 }
             }
+        } else {
+            for (t, tile) in self.tiles.iter_mut().enumerate() {
+                let lo = t * self.rows_per_tile;
+                let hi = (lo + self.rows_per_tile).min(self.rows);
+                let n_blocks = (hi - lo).div_ceil(self.block_len);
+                // Patches were packed whole, block-aligned: tile t's block
+                // b is packed block `first_block + b`.
+                let first_block = t * self.blocks_per_tile;
+                for plane in 0..2usize {
+                    for b in 0..n_blocks {
+                        if tile.block_weights_zero(b) {
+                            continue;
+                        }
+                        masks.clear();
+                        let mut any = 0u32;
+                        masks.extend(packed.iter().take(n_patches).map(|pl| {
+                            let m = pl.planes()[first_block + b][plane];
+                            any |= m;
+                            (m, 0u32)
+                        }));
+                        if any == 0 {
+                            // Whole batch input-gated for this block.
+                            continue;
+                        }
+                        tile.vmm_block_batch_into(
+                            b,
+                            masks.as_slice(),
+                            self.cols,
+                            plane as u32,
+                            mode,
+                            acc.as_mut_slice(),
+                        );
+                    }
+                }
+            }
         }
+        // The single f32 conversion per output: PCU weight scale × the
+        // activation clip's per-unit value.
         let k = self.scale * act_clip / 3.0;
-        for o in out.iter_mut() {
-            *o *= k;
+        out.clear();
+        out.resize(n_patches * self.cols, 0.0);
+        for (orow, arow) in out.chunks_exact_mut(self.cols).zip(acc.chunks_exact(acc_cols)) {
+            for (o, &v) in orow.iter_mut().zip(&arow[..self.cols]) {
+                *o = v as f32 * k;
+            }
         }
+        scratch.trim();
     }
 }
 
@@ -377,7 +481,8 @@ pub mod sfu {
 /// buffer grows to its high-water mark on the first inference and is
 /// reused thereafter, so a steady-state [`TimNetAccelerator::forward_into`]
 /// performs zero heap allocations (asserted by the `alloc_free`
-/// integration test).
+/// integration test). Oversized one-off batches are trimmed back to the
+/// steady-state caps after use ([`LayerScratch::trim`]).
 #[derive(Default)]
 struct ScratchArena {
     layer: LayerScratch,
@@ -453,12 +558,34 @@ impl TimNetAccelerator {
         self.fc2.forward_2bit_batch(&sc.codes2, 1, a3, mode, &mut sc.layer, logits);
     }
 
+    /// Aggregate activity/energy meter across every tile of all four
+    /// layer engines. The batched pipeline's discharge count is exact —
+    /// identical to [`Self::forward_scalar`]'s (gated accesses discharge
+    /// nothing) — while its access count is ≤ the scalar path's thanks to
+    /// input/weight gating (`tests/batch_kernel.rs` asserts both).
+    pub fn total_meter(&self) -> TileMeter {
+        let mut m = TileMeter::new();
+        self.conv1.merge_meters(&mut m);
+        self.conv2.merge_meters(&mut m);
+        self.fc1.merge_meters(&mut m);
+        self.fc2.merge_meters(&mut m);
+        m
+    }
+
+    /// Reset every tile meter (e.g. between metered runs).
+    pub fn reset_meters(&mut self) {
+        self.conv1.reset_meters();
+        self.conv2.reset_meters();
+        self.fc1.reset_meters();
+        self.fc2.reset_meters();
+    }
+
     /// The pre-packed-planes-era forward pass, kept as the scalar
     /// reference: per-patch tile-group dispatch through the allocating
     /// sfu/[`TimTile::vmm_2bit`] path. Tests assert [`Self::forward`]
-    /// matches it bit-for-bit under `Ideal` and `Analog` modes, and
-    /// `benches/hotpath.rs` measures the packed path's speedup against it
-    /// (EXPERIMENTS.md §Perf).
+    /// matches it bit-for-bit in all three `VmmMode`s — including the
+    /// `AnalogNoisy` RNG stream — and `benches/hotpath.rs` measures the
+    /// batched path's speedup against it (EXPERIMENTS.md §Perf).
     pub fn forward_scalar(&mut self, image: &[f32], mode: &mut VmmMode) -> Vec<f32> {
         assert_eq!(image.len(), 256);
         let [a0, a1, a2, a3] = self.clips;
@@ -627,6 +754,42 @@ mod tests {
             Err(other) => panic!("expected Data error, got {other}"),
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn oversized_batch_trims_scratch_and_stays_exact() {
+        // 300 patches on a paper tile exceed every retention cap (packed
+        // len > 256, masks capacity > 256, acc plane 300×256 > 256·256):
+        // the post-pass trim must fire without changing values, and the
+        // scratch must come back capped instead of pinning the one-off
+        // high-water marks.
+        let mut rng = crate::util::prng::Rng::seeded(77);
+        let layer =
+            TernaryLayer { weights: TritMatrix::random(16, 256, 0.4, &mut rng), scale: 0.05 };
+        let mut engine = LayerEngine::new(&layer, TileConfig::paper());
+        let n_patches = MAX_RETAINED_PATCHES + 44;
+        let codes: Vec<u8> = (0..n_patches * 16).map(|i| ((i * 7) % 4) as u8).collect();
+        let mut scratch = LayerScratch::default();
+        let mut out = Vec::new();
+        engine.forward_2bit_batch(
+            &codes,
+            n_patches,
+            3.0,
+            &mut VmmMode::Ideal,
+            &mut scratch,
+            &mut out,
+        );
+        assert_eq!(out.len(), n_patches * 256);
+        // Bit-exact with the per-patch scalar reference, including the
+        // patches beyond the retention cap.
+        for p in [0usize, MAX_RETAINED_PATCHES, n_patches - 1] {
+            let want = engine.forward_2bit(&codes[p * 16..(p + 1) * 16], 3.0, &mut VmmMode::Ideal);
+            assert_eq!(&out[p * 256..(p + 1) * 256], &want[..], "patch {p}");
+        }
+        // The one-off oversized batch did not pin scratch memory.
+        assert_eq!(scratch.packed.len(), MAX_RETAINED_PATCHES);
+        assert!(scratch.masks.capacity() <= MAX_RETAINED_PATCHES);
+        assert!(scratch.acc.capacity() <= MAX_RETAINED_ACC);
     }
 
     #[test]

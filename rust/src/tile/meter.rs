@@ -49,13 +49,22 @@ impl TileMeter {
     /// Record one VMM access over `columns` columns with the given total
     /// discharge-event count.
     pub fn record_access(&mut self, discharges: u64) {
-        self.accesses += 1;
+        self.record_batch_access(1, discharges);
+    }
+
+    /// Record `accesses` VMM accesses totalling `discharges` discharge
+    /// events in one update — the batch kernel's accounting entry point.
+    /// Exactly equivalent to `accesses` individual [`Self::record_access`]
+    /// calls whose discharge counts sum to `discharges` (the per-access
+    /// energy terms are linear in the access count).
+    pub fn record_batch_access(&mut self, accesses: u64, discharges: u64) {
+        self.accesses += accesses;
         self.discharges += discharges;
-        self.busy_s += T_VMM_S;
+        self.busy_s += accesses as f64 * T_VMM_S;
         self.energy.bl += discharges as f64 * E_BL_PER_DISCHARGE;
-        self.energy.wl += E_WL_PER_ACCESS;
-        self.energy.pcu += E_PCU_PER_ACCESS;
-        self.energy.dec_mux += E_DEC_MUX_PER_ACCESS;
+        self.energy.wl += accesses as f64 * E_WL_PER_ACCESS;
+        self.energy.pcu += accesses as f64 * E_PCU_PER_ACCESS;
+        self.energy.dec_mux += accesses as f64 * E_DEC_MUX_PER_ACCESS;
     }
 
     /// Record one row write (N ternary words in parallel).
@@ -102,6 +111,20 @@ mod tests {
         assert_eq!(m.row_writes, 10);
         assert!((m.energy.write - 10.0 * E_WRITE_ROW).abs() < 1e-20);
         assert!((m.busy_s - 10.0 * T_WRITE_ROW_S).abs() < 1e-18);
+    }
+
+    #[test]
+    fn batch_access_equals_individual_accesses() {
+        let mut batched = TileMeter::new();
+        batched.record_batch_access(3, 120);
+        let mut serial = TileMeter::new();
+        serial.record_access(100);
+        serial.record_access(0);
+        serial.record_access(20);
+        assert_eq!(batched.accesses, serial.accesses);
+        assert_eq!(batched.discharges, serial.discharges);
+        assert!((batched.busy_s - serial.busy_s).abs() < 1e-18);
+        assert!((batched.energy.total() - serial.energy.total()).abs() < 1e-18);
     }
 
     #[test]

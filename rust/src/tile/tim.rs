@@ -156,6 +156,10 @@ pub struct VmmResult {
 struct Block {
     plus: Vec<u32>,
     minus: Vec<u32>,
+    /// Every column's weight planes are zero — precomputed at write time
+    /// so the batch paths can weight-gate whole blocks (an all-zero block
+    /// discharges nothing and contributes nothing to any column).
+    zero: bool,
 }
 
 /// Reusable per-tile buffers for the allocation-free VMM entry points.
@@ -166,6 +170,105 @@ struct TileScratch {
     plane_out: Vec<f32>,
 }
 
+/// Register-block width of the weight-stationary batch kernel: the inner
+/// loop streams this many patch masks against each weight pair, so one
+/// weight load is amortized over `PATCH_BLOCK` signed ternary multiplies
+/// (the software shadow of the TPC's weight-stationary parallelism) and
+/// the accumulator walk stays within `PATCH_BLOCK` interleaved streams.
+const PATCH_BLOCK: usize = 8;
+
+/// Digitization strategy of the deterministic batch-kernel arms. Sealed:
+/// the only implementors are the two private zero-sized strategies below,
+/// monomorphizing [`batch_core`] so `Ideal` keeps a branch-free clip and
+/// `Analog` a table lookup — no per-access mode dispatch, LUT build, or
+/// ADC walk survives into the inner loop.
+trait Digitize {
+    fn digitize(&self, raw: u32) -> u32;
+}
+
+/// `Ideal`: clip the raw count at the ADC full scale `n_max`.
+struct ClipDigitize {
+    n_max: u32,
+}
+
+impl Digitize for ClipDigitize {
+    #[inline(always)]
+    fn digitize(&self, raw: u32) -> u32 {
+        raw.min(self.n_max)
+    }
+}
+
+/// `Analog`: nominal bitline voltage → flash-ADC decode, precomputed per
+/// raw count at tile construction (`TimTile::digit_lut`; raw counts are
+/// bounded by L).
+struct LutDigitize<'a> {
+    lut: &'a [u32],
+}
+
+impl Digitize for LutDigitize<'_> {
+    #[inline(always)]
+    fn digitize(&self, raw: u32) -> u32 {
+        self.lut[raw as usize]
+    }
+}
+
+/// Weight-stationary core of [`TimTile::vmm_block_batch_into`] for the
+/// deterministic modes: split the patch stream into `PATCH_BLOCK`-wide
+/// register blocks so the hot chunk loop has a fixed trip count, with one
+/// remainder pass for the partial final block. Returns the raw discharge
+/// total (pre-clip, identical to sequential per-patch accesses).
+fn batch_core<D: Digitize>(
+    plus: &[u32],
+    minus: &[u32],
+    patch_masks: &[(u32, u32)],
+    ncols: usize,
+    shift: u32,
+    dig: &D,
+    acc: &mut [i32],
+) -> u64 {
+    let mut discharges = 0u64;
+    let mut chunks = patch_masks.chunks_exact(PATCH_BLOCK);
+    let mut acc_chunks = acc.chunks_exact_mut(PATCH_BLOCK * ncols);
+    for (masks, acc_blk) in (&mut chunks).zip(&mut acc_chunks) {
+        discharges += batch_chunk(plus, minus, masks, ncols, shift, dig, acc_blk);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        discharges += batch_chunk(plus, minus, rem, ncols, shift, dig, acc_chunks.into_remainder());
+    }
+    discharges
+}
+
+/// One register block: iterate columns outer, load each `(wp, wm)` weight
+/// pair **once**, and stream the register-resident patch masks against
+/// it, accumulating signed digitized `(n − k)` partial sums (PCU-shifted
+/// by `2^shift`) into the per-patch i32 accumulator rows. Columns whose
+/// weight planes are both zero are weight-gated: they cannot discharge a
+/// bitline or move any accumulator.
+fn batch_chunk<D: Digitize>(
+    plus: &[u32],
+    minus: &[u32],
+    masks: &[(u32, u32)],
+    ncols: usize,
+    shift: u32,
+    dig: &D,
+    acc: &mut [i32],
+) -> u64 {
+    let mut discharges = 0u64;
+    for (c, (&wp, &wm)) in plus[..ncols].iter().zip(minus[..ncols].iter()).enumerate() {
+        if (wp | wm) == 0 {
+            continue;
+        }
+        for (p, &(xp, xm)) in masks.iter().enumerate() {
+            let n_raw = ((wp & xp) | (wm & xm)).count_ones();
+            let k_raw = ((wp & xm) | (wm & xp)).count_ones();
+            discharges += (n_raw + k_raw) as u64;
+            acc[p * ncols + c] += (dig.digitize(n_raw) as i32 - dig.digitize(k_raw) as i32) << shift;
+        }
+    }
+    discharges
+}
+
 /// A TiM tile with meters.
 pub struct TimTile {
     cfg: TileConfig,
@@ -174,6 +277,10 @@ pub struct TimTile {
     adc: Adc,
     /// Precomputed nominal V_BL per raw count 0..=L (analog fast path).
     volt_lut: Vec<f64>,
+    /// Precomputed `Analog`-mode digitization per raw count 0..=L: the
+    /// nominal-voltage → flash-ADC decode collapses to one table lookup,
+    /// hoisting all LUT/ADC work out of the batch kernel's inner loop.
+    digit_lut: Vec<u32>,
     scratch: TileScratch,
     pub meter: TileMeter,
 }
@@ -183,11 +290,21 @@ impl TimTile {
         assert!(cfg.l <= 32, "block masks are u32-packed (L ≤ 32)");
         let curve = BitlineCurve::calibrated();
         let adc = Adc::for_curve(&curve, cfg.n_max);
-        let volt_lut = (0..=cfg.l as u32).map(|c| curve.voltage(c)).collect();
+        let volt_lut: Vec<f64> = (0..=cfg.l as u32).map(|c| curve.voltage(c)).collect();
+        let digit_lut = volt_lut.iter().map(|&v| adc.decode(v)).collect();
         let blocks = (0..cfg.k)
-            .map(|_| Block { plus: vec![0; cfg.n], minus: vec![0; cfg.n] })
+            .map(|_| Block { plus: vec![0; cfg.n], minus: vec![0; cfg.n], zero: true })
             .collect();
-        Self { cfg, blocks, curve, adc, volt_lut, scratch: TileScratch::default(), meter: TileMeter::new() }
+        Self {
+            cfg,
+            blocks,
+            curve,
+            adc,
+            volt_lut,
+            digit_lut,
+            scratch: TileScratch::default(),
+            meter: TileMeter::new(),
+        }
     }
 
     pub fn config(&self) -> &TileConfig {
@@ -211,7 +328,18 @@ impl TimTile {
                 _ => {}
             }
         }
+        // Refresh the weight-gating flag (write is the cold path; a row
+        // write already walks all N columns, so the rescan is same-order).
+        block.zero = block.plus.iter().all(|&m| m == 0) && block.minus.iter().all(|&m| m == 0);
         self.meter.record_row_write();
+    }
+
+    /// True when every weight plane of `block` is zero — the per-block
+    /// weight gate the batch paths use to skip accesses that cannot
+    /// discharge any bitline or contribute to any column (precomputed at
+    /// write time).
+    pub fn block_weights_zero(&self, block: usize) -> bool {
+        self.blocks[block].zero
     }
 
     /// Load a full weight matrix (rows ≤ L·K, cols ≤ N) starting at row 0,
@@ -271,9 +399,10 @@ impl TimTile {
         VmmResult { counts, discharges }
     }
 
-    /// Allocation-free variant of [`Self::vmm_block`]: appends per-column
-    /// (n, k) into `counts` (cleared first) and returns the discharge
-    /// count. The full-tile VMM reuses one buffer across all K blocks.
+    /// Allocation-free variant of [`Self::vmm_block`]: leaves `counts`
+    /// holding exactly the `N` per-column (n, k) pairs (sized once,
+    /// slot-written) and returns the discharge count. The full-tile VMM
+    /// reuses one buffer across all K blocks.
     pub fn vmm_block_into(
         &mut self,
         block: usize,
@@ -306,42 +435,166 @@ impl TimTile {
     ) -> u64 {
         assert!(block < self.cfg.k, "block {block} out of range");
         assert!(ncols <= self.cfg.n, "ncols {ncols} wider than the tile");
+        // Size once, slot-write after: at steady state (same ncols every
+        // call — the packed paths' access pattern) this never touches Vec
+        // capacity logic, unlike the old clear()/reserve()/push per call.
+        if counts.len() != ncols {
+            counts.resize(ncols, (0, 0));
+        }
         let blk = &self.blocks[block];
         let n_max = self.cfg.n_max;
-        counts.clear();
-        counts.reserve(ncols);
         let mut discharges = 0u64;
+        let weights = blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter());
         match mode {
             VmmMode::Ideal => {
-                for (&wp, &wm) in blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter()) {
+                for ((&wp, &wm), slot) in weights.zip(counts.iter_mut()) {
                     let n_raw = ((wp & xp) | (wm & xm)).count_ones();
                     let k_raw = ((wp & xm) | (wm & xp)).count_ones();
                     discharges += (n_raw + k_raw) as u64;
-                    counts.push((n_raw.min(n_max), k_raw.min(n_max)));
+                    *slot = (n_raw.min(n_max), k_raw.min(n_max));
                 }
             }
             VmmMode::Analog => {
-                for (&wp, &wm) in blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter()) {
+                for ((&wp, &wm), slot) in weights.zip(counts.iter_mut()) {
                     let n_raw = ((wp & xp) | (wm & xm)).count_ones();
                     let k_raw = ((wp & xm) | (wm & xp)).count_ones();
                     discharges += (n_raw + k_raw) as u64;
                     let vn = self.volt_lut[n_raw as usize];
                     let vk = self.volt_lut[k_raw as usize];
-                    counts.push((self.adc.decode(vn), self.adc.decode(vk)));
+                    *slot = (self.adc.decode(vn), self.adc.decode(vk));
                 }
             }
             VmmMode::AnalogNoisy(rng) => {
-                for (&wp, &wm) in blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter()) {
+                for ((&wp, &wm), slot) in weights.zip(counts.iter_mut()) {
                     let n_raw = ((wp & xp) | (wm & xm)).count_ones();
                     let k_raw = ((wp & xm) | (wm & xp)).count_ones();
                     discharges += (n_raw + k_raw) as u64;
                     let vn = sample_bl_voltage(&self.curve, n_raw, rng);
                     let vk = sample_bl_voltage(&self.curve, k_raw, rng);
-                    counts.push((self.adc.decode_noisy(vn, rng), self.adc.decode_noisy(vk, rng)));
+                    *slot = (self.adc.decode_noisy(vn, rng), self.adc.decode_noisy(vk, rng));
                 }
             }
         }
         self.meter.record_access(discharges);
+        discharges
+    }
+
+    /// Weight-stationary batched block access — the batch hot path's
+    /// kernel. One call is value-equivalent to looping
+    /// [`Self::vmm_block_masks_into`] over `patch_masks` in order and
+    /// accumulating each patch's digitized unweighted combine into its
+    /// accumulator row:
+    ///
+    /// ```text
+    /// acc[p·ncols + c] += (digitize(n) − digitize(k)) << shift
+    /// ```
+    ///
+    /// but the loop nest is inverted: columns iterate outer, each
+    /// `(wp, wm)` weight pair is loaded **once** and a register block of
+    /// [`PATCH_BLOCK`] patch masks streams against it, partial sums stay
+    /// in i32 (no per-access f32 conversion — callers scale once per
+    /// output), and the mode is monomorphized via a sealed [`Digitize`]
+    /// strategy so `Ideal` keeps only a clip and `Analog` only a table
+    /// lookup in the inner loop. `shift` is the PCU shifter weight
+    /// (`2^shift`) — bit plane `p` of 2-bit activations passes `shift = p`;
+    /// plain ternary batches pass 0. The combine is unweighted (`n − k`);
+    /// weighted systems go through [`Self::vmm_packed_into`].
+    ///
+    /// Gating, both value- and discharge-exact:
+    /// * columns whose weight planes are both zero are skipped
+    ///   (weight-stationary gating; see also [`Self::block_weights_zero`]
+    ///   for skipping whole blocks before the call);
+    /// * in the deterministic modes, patches whose masks are both zero
+    ///   are not counted as accesses (they discharge nothing), mirroring
+    ///   the input gating of the packed layer pass.
+    ///
+    /// Under [`VmmMode::AnalogNoisy`] the kernel instead replays the
+    /// exact sequential access order — per patch, columns `0..ncols` in
+    /// order, with no gating — so the RNG draw sequence is bit-identical
+    /// to looping the masks core over all patches (parity is asserted in
+    /// `tests/batch_kernel.rs`); per-access `n_max` clipping semantics are
+    /// those of the ADC decode, exactly as in the scalar paths.
+    ///
+    /// `acc.len()` must equal `patch_masks.len() * ncols` (patch-major
+    /// rows). Returns the raw discharge total over the whole batch.
+    pub fn vmm_block_batch_into(
+        &mut self,
+        block: usize,
+        patch_masks: &[(u32, u32)],
+        ncols: usize,
+        shift: u32,
+        mode: &mut VmmMode,
+        acc: &mut [i32],
+    ) -> u64 {
+        assert!(block < self.cfg.k, "block {block} out of range");
+        assert!(ncols <= self.cfg.n, "ncols {ncols} wider than the tile");
+        assert_eq!(
+            acc.len(),
+            patch_masks.len() * ncols,
+            "acc must be patch_masks.len() × ncols, patch-major"
+        );
+        let live = || patch_masks.iter().filter(|&&(xp, xm)| (xp | xm) != 0).count() as u64;
+        let (accesses, discharges) = match mode {
+            VmmMode::Ideal => {
+                let blk = &self.blocks[block];
+                let dig = ClipDigitize { n_max: self.cfg.n_max };
+                let d = if ncols == 0 {
+                    0
+                } else {
+                    batch_core(&blk.plus, &blk.minus, patch_masks, ncols, shift, &dig, acc)
+                };
+                (live(), d)
+            }
+            VmmMode::Analog => {
+                let blk = &self.blocks[block];
+                let dig = LutDigitize { lut: &self.digit_lut };
+                let d = if ncols == 0 {
+                    0
+                } else {
+                    batch_core(&blk.plus, &blk.minus, patch_masks, ncols, shift, &dig, acc)
+                };
+                (live(), d)
+            }
+            VmmMode::AnalogNoisy(rng) => {
+                let mut d = 0u64;
+                if ncols > 0 {
+                    for (&mask, row) in patch_masks.iter().zip(acc.chunks_exact_mut(ncols)) {
+                        d += self.noisy_batch_row(block, mask, ncols, shift, rng, row);
+                    }
+                }
+                (patch_masks.len() as u64, d)
+            }
+        };
+        self.meter.record_batch_access(accesses, discharges);
+        discharges
+    }
+
+    /// One `AnalogNoisy` patch of the batch kernel: the exact column loop
+    /// of the masks core (same voltage sampling and noisy-decode order,
+    /// so the RNG stream matches draw-for-draw), accumulating into the
+    /// patch's i32 row instead of a counts buffer.
+    fn noisy_batch_row(
+        &self,
+        block: usize,
+        (xp, xm): (u32, u32),
+        ncols: usize,
+        shift: u32,
+        rng: &mut Rng,
+        acc: &mut [i32],
+    ) -> u64 {
+        let blk = &self.blocks[block];
+        let mut discharges = 0u64;
+        let weights = blk.plus[..ncols].iter().zip(blk.minus[..ncols].iter());
+        for ((&wp, &wm), slot) in weights.zip(acc.iter_mut()) {
+            let n_raw = ((wp & xp) | (wm & xm)).count_ones();
+            let k_raw = ((wp & xm) | (wm & xp)).count_ones();
+            discharges += (n_raw + k_raw) as u64;
+            let vn = sample_bl_voltage(&self.curve, n_raw, rng);
+            let vk = sample_bl_voltage(&self.curve, k_raw, rng);
+            let dn = self.adc.decode_noisy(vn, rng) as i32;
+            let dk = self.adc.decode_noisy(vk, rng) as i32;
+            *slot += (dn - dk) << shift;
+        }
         discharges
     }
 
@@ -744,6 +997,74 @@ mod tests {
         tile.vmm_block_masks_into(0, xp, xm, 10, &mut VmmMode::Ideal, &mut limited);
         assert_eq!(limited.len(), 10);
         assert_eq!(&full[..10], &limited[..]);
+    }
+
+    #[test]
+    fn batch_kernel_matches_per_patch_masks_core() {
+        let mut rng = Rng::seeded(31);
+        let w = TritMatrix::random(16, 32, 0.4, &mut rng);
+        let mut kernel_tile = TimTile::new(small_cfg());
+        let mut ref_tile = TimTile::new(small_cfg());
+        kernel_tile.load_weights(&w);
+        ref_tile.load_weights(&w);
+        // 11 patches: one full register block + a partial one; patch 3 is
+        // input-gated (all-zero masks).
+        let mut patches: Vec<(u32, u32)> = (0..11)
+            .map(|_| {
+                let x = rng.trit_vec(16, 0.5);
+                *PackedTrits::pack(&x, 16).blocks().first().unwrap()
+            })
+            .collect();
+        patches[3] = (0, 0);
+        for shift in [0u32, 1] {
+            let mut acc = vec![0i32; 11 * 32];
+            kernel_tile.vmm_block_batch_into(0, &patches, 32, shift, &mut VmmMode::Ideal, &mut acc);
+            let mut counts = Vec::new();
+            for (p, &(xp, xm)) in patches.iter().enumerate() {
+                ref_tile.vmm_block_masks_into(0, xp, xm, 32, &mut VmmMode::Ideal, &mut counts);
+                for (c, &(n, k)) in counts.iter().enumerate() {
+                    let want = (n as i32 - k as i32) << shift;
+                    assert_eq!(acc[p * 32 + c], want, "patch {p} col {c} shift {shift}");
+                }
+            }
+        }
+        // Input gating: gated (all-zero-mask) patches are not metered as
+        // accesses; discharges match the ungated reference exactly.
+        let live = patches.iter().filter(|&&(xp, xm)| (xp | xm) != 0).count() as u64;
+        assert!(live <= 10, "patch 3 is explicitly gated");
+        assert_eq!(kernel_tile.meter.accesses, 2 * live);
+        assert_eq!(ref_tile.meter.accesses, 2 * 11);
+        assert_eq!(kernel_tile.meter.discharges, ref_tile.meter.discharges);
+    }
+
+    #[test]
+    fn batch_kernel_analog_equals_ideal() {
+        let mut rng = Rng::seeded(32);
+        let w = TritMatrix::random(16, 32, 0.4, &mut rng);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        let patches: Vec<(u32, u32)> = (0..5)
+            .map(|_| {
+                let x = rng.trit_vec(16, 0.4);
+                *PackedTrits::pack(&x, 16).blocks().first().unwrap()
+            })
+            .collect();
+        let mut ideal = vec![0i32; 5 * 32];
+        let mut analog = vec![0i32; 5 * 32];
+        tile.vmm_block_batch_into(0, &patches, 32, 0, &mut VmmMode::Ideal, &mut ideal);
+        tile.vmm_block_batch_into(0, &patches, 32, 0, &mut VmmMode::Analog, &mut analog);
+        assert_eq!(ideal, analog);
+    }
+
+    #[test]
+    fn block_weight_gate_tracks_writes() {
+        let mut tile = TimTile::new(small_cfg());
+        assert!(tile.block_weights_zero(0), "fresh tile is all-zero");
+        tile.write_row(0, &[1i8; 32]);
+        assert!(!tile.block_weights_zero(0));
+        assert!(tile.block_weights_zero(1), "other blocks unaffected");
+        tile.write_row(0, &[0i8; 32]);
+        assert!(tile.block_weights_zero(0), "clearing the row restores the gate");
     }
 
     #[test]

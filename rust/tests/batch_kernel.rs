@@ -1,0 +1,235 @@
+//! Contract of the weight-stationary batch kernel
+//! (`TimTile::vmm_block_batch_into`) and the reworked batched layer pass
+//! built on it:
+//!
+//! * the kernel is bit-exact with looping the mask-level core
+//!   (`vmm_block_masks_into`) over the patch batch in order, in every
+//!   `VmmMode` — including the `AnalogNoisy` RNG stream draw-for-draw;
+//! * the end-to-end `TimNetAccelerator::forward` equals `forward_scalar`
+//!   bit-for-bit in Ideal, Analog, **and** AnalogNoisy (fixed seed,
+//!   identical RNG draw order), with identical per-tile discharge
+//!   metering (gated accesses discharge nothing);
+//! * edge cases hold: `ncols = 0`, an empty patch batch, `rows` not a
+//!   multiple of the block length, and a partial final register block
+//!   (the patch count not dividing by the kernel's register-block width).
+
+use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
+use timdnn::tile::{PackedTrits, TileConfig, TimTile, VmmMode};
+use timdnn::tpc::TritMatrix;
+use timdnn::util::prng::Rng;
+
+fn test_cfg() -> TileConfig {
+    TileConfig { l: 16, k: 4, n: 32, m: 8, n_max: 8 }
+}
+
+/// Two tiles loaded with the same weights (separate meters, so the kernel
+/// run and the reference run cannot influence each other).
+fn twin_tiles(rows: usize, seed: u64) -> (TimTile, TimTile) {
+    let mut rng = Rng::seeded(seed);
+    let w = TritMatrix::random(rows, 32, 0.4, &mut rng);
+    let mut a = TimTile::new(test_cfg());
+    let mut b = TimTile::new(test_cfg());
+    a.load_weights(&w);
+    b.load_weights(&w);
+    (a, b)
+}
+
+/// Random block-level `(plus, minus)` RWD mask pairs for one 16-row block.
+fn random_masks(n: usize, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let x = rng.trit_vec(16, 0.5);
+            *PackedTrits::pack(&x, 16).blocks().first().unwrap()
+        })
+        .collect()
+}
+
+/// Reference: sequential per-patch mask-core accesses accumulated the way
+/// the kernel specifies (`(n − k) << shift`, patch-major rows).
+fn reference_batch(
+    tile: &mut TimTile,
+    block: usize,
+    patch_masks: &[(u32, u32)],
+    ncols: usize,
+    shift: u32,
+    mode: &mut VmmMode,
+) -> (Vec<i32>, u64) {
+    let mut acc = vec![0i32; patch_masks.len() * ncols];
+    let mut counts = Vec::new();
+    let mut discharges = 0u64;
+    for (p, &(xp, xm)) in patch_masks.iter().enumerate() {
+        discharges += tile.vmm_block_masks_into(block, xp, xm, ncols, mode, &mut counts);
+        for (a, &(n, k)) in acc[p * ncols..(p + 1) * ncols].iter_mut().zip(counts.iter()) {
+            *a += (n as i32 - k as i32) << shift;
+        }
+    }
+    (acc, discharges)
+}
+
+#[test]
+fn kernel_matches_reference_in_deterministic_modes() {
+    // 11 patches: one full register block (width 8) plus a partial final
+    // block of 3; patches 0 and 7 are input-gated (all-zero masks).
+    let mut patches = random_masks(11, 50);
+    patches[0] = (0, 0);
+    patches[7] = (0, 0);
+    for mode_id in 0..2 {
+        for &(ncols, shift) in &[(32usize, 0u32), (10, 1)] {
+            let (mut kt, mut rt) = twin_tiles(64, 51);
+            let mut m1 = if mode_id == 0 { VmmMode::Ideal } else { VmmMode::Analog };
+            let mut m2 = if mode_id == 0 { VmmMode::Ideal } else { VmmMode::Analog };
+            for block in 0..4 {
+                let mut acc = vec![0i32; patches.len() * ncols];
+                let got_d =
+                    kt.vmm_block_batch_into(block, &patches, ncols, shift, &mut m1, &mut acc);
+                let (want, want_d) =
+                    reference_batch(&mut rt, block, &patches, ncols, shift, &mut m2);
+                assert_eq!(acc, want, "block {block} ncols {ncols} mode {mode_id}");
+                assert_eq!(got_d, want_d, "discharges, block {block}");
+            }
+            // Discharge metering matches the ungated reference exactly;
+            // accesses exclude the input-gated (all-zero-mask) patches.
+            let live = patches.iter().filter(|&&(xp, xm)| (xp | xm) != 0).count() as u64;
+            assert!(live <= 9, "two patches are explicitly gated");
+            assert_eq!(kt.meter.discharges, rt.meter.discharges);
+            assert_eq!(kt.meter.accesses, 4 * live);
+            assert_eq!(rt.meter.accesses, 4 * 11);
+        }
+    }
+}
+
+#[test]
+fn kernel_noisy_matches_reference_stream_exactly() {
+    let patches = random_masks(11, 60);
+    let (mut kt, mut rt) = twin_tiles(64, 61);
+    let mut r1 = Rng::seeded(600);
+    let mut r2 = Rng::seeded(600);
+    for block in 0..4 {
+        let mut acc = vec![0i32; patches.len() * 32];
+        kt.vmm_block_batch_into(
+            block,
+            &patches,
+            32,
+            1,
+            &mut VmmMode::AnalogNoisy(&mut r1),
+            &mut acc,
+        );
+        let (want, _) = reference_batch(
+            &mut rt,
+            block,
+            &patches,
+            32,
+            1,
+            &mut VmmMode::AnalogNoisy(&mut r2),
+        );
+        assert_eq!(acc, want, "block {block}");
+    }
+    // Both streams must have advanced identically, and (unlike the
+    // deterministic arms) the noisy kernel gates nothing: access counts
+    // match the sequential reference too.
+    assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams diverged");
+    assert_eq!(kt.meter.accesses, rt.meter.accesses);
+    assert_eq!(kt.meter.discharges, rt.meter.discharges);
+}
+
+#[test]
+fn kernel_handles_partial_trailing_block_of_a_short_matrix() {
+    // 40 weight rows in a 16-row-block tile: block 2 holds only 8 real
+    // rows (rows not a multiple of block_len).
+    let (mut kt, mut rt) = twin_tiles(40, 71);
+    let patches = random_masks(8, 72);
+    for block in [2usize, 3] {
+        let mut acc = vec![0i32; patches.len() * 32];
+        kt.vmm_block_batch_into(block, &patches, 32, 0, &mut VmmMode::Ideal, &mut acc);
+        let (want, _) = reference_batch(&mut rt, block, &patches, 32, 0, &mut VmmMode::Ideal);
+        assert_eq!(acc, want, "block {block}");
+    }
+    // Block 3 is beyond the loaded rows: all-zero weights, flagged for
+    // weight gating, and its accesses moved no accumulator.
+    assert!(kt.block_weights_zero(3));
+    assert!(!kt.block_weights_zero(2));
+}
+
+#[test]
+fn kernel_edge_cases_zero_cols_and_empty_batch() {
+    let (mut tile, _) = twin_tiles(64, 81);
+    let patches = random_masks(3, 82);
+
+    // ncols = 0: no columns to digitize — no discharges, no acc to touch,
+    // but live patches still issue (empty) accesses.
+    let live = patches.iter().filter(|&&(xp, xm)| (xp | xm) != 0).count() as u64;
+    let mut acc: Vec<i32> = Vec::new();
+    let d = tile.vmm_block_batch_into(0, &patches, 0, 0, &mut VmmMode::Ideal, &mut acc);
+    assert_eq!(d, 0);
+    assert_eq!(tile.meter.accesses, live);
+    assert_eq!(tile.meter.discharges, 0);
+
+    // Empty patch batch: nothing happens at all.
+    let before = tile.meter.accesses;
+    let d = tile.vmm_block_batch_into(0, &[], 32, 0, &mut VmmMode::Ideal, &mut acc);
+    assert_eq!(d, 0);
+    assert_eq!(tile.meter.accesses, before);
+
+    // ncols = 0 under noise consumes no RNG draws (the scalar core draws
+    // per column) but still meters every patch as an access.
+    let mut r1 = Rng::seeded(83);
+    let mut r2 = Rng::seeded(83);
+    tile.vmm_block_batch_into(0, &patches, 0, 0, &mut VmmMode::AnalogNoisy(&mut r1), &mut acc);
+    assert_eq!(r1.next_u64(), r2.next_u64());
+    assert_eq!(tile.meter.accesses, before + patches.len() as u64);
+}
+
+#[test]
+fn register_block_boundary_widths_match_reference() {
+    // Batch widths around the register-block width 8: partial-only,
+    // exact, exact+1 — all must agree with the sequential reference.
+    for &n_patches in &[1usize, 3, 7, 8, 9, 16, 17] {
+        let (mut kt, mut rt) = twin_tiles(64, 91);
+        let patches = random_masks(n_patches, 92 + n_patches as u64);
+        let mut acc = vec![0i32; n_patches * 32];
+        kt.vmm_block_batch_into(1, &patches, 32, 0, &mut VmmMode::Ideal, &mut acc);
+        let (want, _) = reference_batch(&mut rt, 1, &patches, 32, 0, &mut VmmMode::Ideal);
+        assert_eq!(acc, want, "n_patches {n_patches}");
+    }
+}
+
+#[test]
+fn forward_matches_scalar_in_all_modes_with_exact_discharge_metering() {
+    let weights = TimNetWeights::synthetic(33);
+    let mut acc = TimNetAccelerator::new(&weights, TileConfig::paper());
+    let img: Vec<f32> = (0..256).map(|i| ((i * 13) % 11) as f32 / 11.0).collect();
+
+    // Ideal + Analog: bit-exact logits, identical discharge totals, and
+    // gating may only ever reduce the access count.
+    for mode_id in 0..2 {
+        let mut m1 = if mode_id == 0 { VmmMode::Ideal } else { VmmMode::Analog };
+        let mut m2 = if mode_id == 0 { VmmMode::Ideal } else { VmmMode::Analog };
+        acc.reset_meters();
+        let want = acc.forward_scalar(&img, &mut m1);
+        let scalar_meter = acc.total_meter();
+        acc.reset_meters();
+        let got = acc.forward(&img, &mut m2);
+        let batch_meter = acc.total_meter();
+        assert_eq!(got, want, "mode {mode_id}");
+        assert_eq!(batch_meter.discharges, scalar_meter.discharges, "mode {mode_id}");
+        assert!(batch_meter.accesses <= scalar_meter.accesses, "mode {mode_id}");
+    }
+
+    // AnalogNoisy: fixed seed, identical RNG draw order — the batched
+    // pass must reproduce the scalar logits bit-for-bit and leave both
+    // streams at the same position, with identical metering (the noisy
+    // path gates nothing).
+    let mut r1 = Rng::seeded(777);
+    let mut r2 = Rng::seeded(777);
+    acc.reset_meters();
+    let want = acc.forward_scalar(&img, &mut VmmMode::AnalogNoisy(&mut r1));
+    let scalar_meter = acc.total_meter();
+    acc.reset_meters();
+    let got = acc.forward(&img, &mut VmmMode::AnalogNoisy(&mut r2));
+    let batch_meter = acc.total_meter();
+    assert_eq!(got, want, "AnalogNoisy logits");
+    assert_eq!(r1.next_u64(), r2.next_u64(), "RNG streams diverged");
+    assert_eq!(batch_meter.discharges, scalar_meter.discharges);
+    assert_eq!(batch_meter.accesses, scalar_meter.accesses);
+}

@@ -10,6 +10,11 @@
 //! * `TimNetAccelerator::forward`/`forward_into` vs `forward_scalar`;
 //! * a parallel `FunctionalBackend` batch vs serial execution, same
 //!   request order.
+//!
+//! Since the weight-stationary kernel rework, the batched forward is
+//! bit-exact with `forward_scalar` under `AnalogNoisy` too — that
+//! stronger contract (plus discharge-metering equality and the kernel
+//! edge cases) lives in `tests/batch_kernel.rs`.
 
 use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
 use timdnn::coordinator::{ExecutorBackend, FunctionalBackend};
