@@ -57,15 +57,10 @@ impl TimNetWeights {
             f.read_exact(&mut data)?;
             // Validate before constructing: `TritMatrix::from_vec` would
             // panic on non-ternary values, and a corrupt artifact must
-            // surface as a typed error, not a crash.
-            if let Some(&bad) = data.iter().find(|&&b| !matches!(b, 0x00 | 0x01 | 0xFF)) {
-                return Err(TimError::Data {
-                    what: "timnet weights".into(),
-                    reason: format!(
-                        "non-ternary weight byte 0x{bad:02x} (expected 0x00, 0x01, or 0xff)"
-                    ),
-                });
-            }
+            // surface as a typed error, not a crash. The ternary-range
+            // check is the verifier's ([`crate::verify::ternary_bytes`]),
+            // so artifact loading and registration reject identically.
+            crate::verify::ternary_bytes("timnet", "weights", &data)?;
             let trits: Vec<Trit> = data.iter().map(|&b| b as i8).collect();
             f.read_exact(&mut b4)?;
             let scale = f32::from_le_bytes(b4);
@@ -531,6 +526,7 @@ impl TimNetAccelerator {
     /// (cleared first). Each conv layer runs as one batched matrix–matrix
     /// pass over its im2col patch matrix; all intermediates live in the
     /// persistent [`ScratchArena`].
+    #[timdnn::hot_path]
     pub fn forward_into(&mut self, image: &[f32], mode: &mut VmmMode, logits: &mut Vec<f32>) {
         assert_eq!(image.len(), 256);
         let [a0, a1, a2, a3] = self.clips;
@@ -747,11 +743,12 @@ mod tests {
         bytes.extend_from_slice(&1.0f32.to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();
         match TimNetWeights::load(&path) {
-            Err(TimError::Data { reason, .. }) => {
-                assert!(reason.contains("0x02"), "reason: {reason}");
+            Err(TimError::Verify { check, detail, .. }) => {
+                assert_eq!(check, "ternary-range");
+                assert!(detail.contains("0x02"), "detail: {detail}");
             }
-            Ok(_) => panic!("expected Data error, got Ok"),
-            Err(other) => panic!("expected Data error, got {other}"),
+            Ok(_) => panic!("expected Verify error, got Ok"),
+            Err(other) => panic!("expected Verify error, got {other}"),
         }
         let _ = std::fs::remove_file(&path);
     }

@@ -36,9 +36,27 @@ impl Batcher {
     /// Block for the next batch. Returns `None` when the channel is closed
     /// (or a `Shutdown` marker arrives) and everything queued before that
     /// point has been handed out.
+    ///
+    /// Allocating convenience wrapper over [`Batcher::next_batch_into`];
+    /// the worker loop uses the buffer-reusing form directly.
     pub(crate) fn next_batch(&mut self, rx: &Receiver<Msg>) -> Option<Vec<Request>> {
+        let mut batch = Vec::new();
+        if self.next_batch_into(rx, &mut batch) {
+            Some(batch)
+        } else {
+            None
+        }
+    }
+
+    /// Buffer-reusing drain loop: clear `batch`, block for the first
+    /// request, then fill up to the policy's size/deadline. Returns `false`
+    /// when the channel is closed (or a `Shutdown` marker arrives) and
+    /// everything queued before that point has been handed out.
+    #[timdnn::hot_path]
+    pub(crate) fn next_batch_into(&mut self, rx: &Receiver<Msg>, batch: &mut Vec<Request>) -> bool {
+        batch.clear();
         if self.closed {
-            return None;
+            return false;
         }
         // Block for the first request.
         let first = loop {
@@ -46,11 +64,14 @@ impl Batcher {
                 Ok(Msg::Req(r)) => break r,
                 Ok(Msg::Shutdown) | Err(_) => {
                     self.closed = true;
-                    return None;
+                    return false;
                 }
             }
         };
-        let mut batch = vec![first];
+        // The worker reuses one Vec, so steady-state appends land in the
+        // buffer's retained capacity.
+        // timlint::allow(hot-path-alloc): append into retained capacity
+        batch.push(first);
         let deadline = Instant::now() + self.policy.max_wait;
         while batch.len() < self.policy.max_batch {
             let now = Instant::now();
@@ -58,9 +79,10 @@ impl Batcher {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
+                // timlint::allow(hot-path-alloc): same retained-capacity append.
                 Ok(Msg::Req(r)) => batch.push(r),
                 Ok(Msg::Shutdown) => {
-                    // Hand out what we have; next call returns None.
+                    // Hand out what we have; next call returns false.
                     self.closed = true;
                     break;
                 }
@@ -68,7 +90,7 @@ impl Batcher {
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        Some(batch)
+        true
     }
 }
 

@@ -143,8 +143,9 @@ fn worker_loop(
     pool_width: usize,
 ) {
     // Fail each batch's requests with a typed error (the engine stays up).
-    let fail_batch = |batch: Vec<Request>, what: &str, reason: &str| {
-        for req in batch {
+    // Drains the shared batch buffer so its capacity is retained.
+    let fail_batch = |batch: &mut Vec<Request>, what: &str, reason: &str| {
+        for req in batch.drain(..) {
             let Request { reply, guard, .. } = req;
             drop(guard); // release the admission slot
             let _ = reply.send(Err(TimError::Exec {
@@ -162,8 +163,9 @@ fn worker_loop(
             eprintln!("engine[{name}]: backend construction failed: {e}");
             let reason = e.to_string();
             let mut batcher = Batcher::new(policy);
-            while let Some(batch) = batcher.next_batch(&rx) {
-                fail_batch(batch, &format!("model '{name}' backend"), &reason);
+            let mut batch = Vec::new();
+            while batcher.next_batch_into(&rx, &mut batch) {
+                fail_batch(&mut batch, &format!("model '{name}' backend"), &reason);
             }
             return;
         }
@@ -180,7 +182,11 @@ fn worker_loop(
         policy.max_batch = policy.max_batch.min(b.max(1));
     }
     let mut batcher = Batcher::new(policy);
-    while let Some(mut batch) = batcher.next_batch(&rx) {
+    // One batch buffer reused across iterations: after warm-up its
+    // capacity is retained, so the steady-state drain loop allocates
+    // nothing per batch (see `Batcher::next_batch_into`).
+    let mut batch: Vec<Request> = Vec::new();
+    while batcher.next_batch_into(&rx, &mut batch) {
         let real = batch.len();
         let t0 = Instant::now();
         // Move the tensors out instead of cloning — the reply loop below
@@ -199,7 +205,7 @@ fn worker_loop(
             Ok(o) => o,
             Err(e) => {
                 eprintln!("engine[{name}]: batch execution failed: {e}");
-                fail_batch(batch, &format!("model '{name}' batch"), &e.to_string());
+                fail_batch(&mut batch, &format!("model '{name}' batch"), &e.to_string());
                 continue;
             }
         };
@@ -207,7 +213,7 @@ fn worker_loop(
             let reason =
                 format!("backend returned {} outputs for {} requests", outputs.len(), real);
             eprintln!("engine[{name}]: {reason}");
-            fail_batch(batch, &format!("model '{name}' batch"), &reason);
+            fail_batch(&mut batch, &format!("model '{name}' batch"), &reason);
             continue;
         }
         // Hardware accounting: the simulated accelerator processes the
@@ -219,7 +225,7 @@ fn worker_loop(
         let host_exec = t0.elapsed();
         let mut m = metrics.lock().unwrap();
         m.record_padding(padded_lanes);
-        for (req, outs) in batch.into_iter().zip(outputs) {
+        for (req, outs) in batch.drain(..).zip(outputs) {
             // zip truncates at `real`: padded outputs are discarded here.
             let Request { id, submitted, reply, guard, .. } = req;
             let queued = t0.duration_since(submitted);

@@ -36,6 +36,8 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, EngineBuilder, Session};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{ModelRegistry, ModelSpec};
+// Verifier types most spec-building callers need (see `crate::verify`).
+pub use crate::verify::{NoisePolicy, ProgramAudit};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;

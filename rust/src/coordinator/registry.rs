@@ -14,6 +14,7 @@ use crate::arch::ArchConfig;
 use crate::error::{Result, TimError};
 use crate::model::Network;
 use crate::sim::SimReport;
+use crate::verify::{NoisePolicy, ProgramAudit};
 
 use super::backend::{BackendFactory, ExecutorBackend};
 use super::batcher::BatchPolicy;
@@ -36,6 +37,15 @@ pub struct ModelSpec {
     /// the engine-wide default (`EngineBuilder::workers`, itself
     /// defaulting to 1 = serial).
     pub workers: usize,
+    /// Declared noise/determinism policy; the verifier rejects
+    /// [`NoisePolicy::AnalogNoisy`] without a seed at registration.
+    pub noise: NoisePolicy,
+    /// Static audit of the mapped program, fed to
+    /// [`crate::verify::check_spec`] at registration.
+    /// [`ModelSpec::for_network`] fills it automatically; hand-built specs
+    /// may attach one with [`ModelSpec::with_audit`] (or leave `None` to
+    /// skip the program-shape checks).
+    pub audit: Option<ProgramAudit>,
     pub(crate) factory: BackendFactory,
 }
 
@@ -54,6 +64,8 @@ impl ModelSpec {
             tiles_required: 0,
             max_queue: 0,
             workers: 0,
+            noise: NoisePolicy::default(),
+            audit: None,
             factory: Box::new(move || {
                 let backend: Box<dyn ExecutorBackend> = factory()?;
                 Ok(backend)
@@ -71,7 +83,8 @@ impl ModelSpec {
         let prog = crate::mapper::map_network(net, arch);
         let tiles = prog.max_tiles_used();
         let hardware = crate::sim::simulate(&prog, arch);
-        Self::new(name, hardware, factory).with_tiles(tiles)
+        let audit = ProgramAudit::of(&prog, arch);
+        Self::new(name, hardware, factory).with_tiles(tiles).with_audit(audit)
     }
 
     pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
@@ -93,6 +106,24 @@ impl ModelSpec {
     /// engine-wide default).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    /// Declare the model's noise policy for the determinism audit.
+    pub fn with_noise_policy(mut self, noise: NoisePolicy) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    /// Shorthand for `with_noise_policy(AnalogNoisy { seed: Some(seed) })`.
+    pub fn with_noise_seed(mut self, seed: u64) -> Self {
+        self.noise = NoisePolicy::AnalogNoisy { seed: Some(seed) };
+        self
+    }
+
+    /// Attach a static program audit for registration-time verification.
+    pub fn with_audit(mut self, audit: ProgramAudit) -> Self {
+        self.audit = Some(audit);
         self
     }
 }
@@ -122,9 +153,12 @@ impl ModelRegistry {
     }
 
     /// Register a model; rejects duplicates with
-    /// [`TimError::DuplicateModel`] and invalid policies with
+    /// [`TimError::DuplicateModel`], invalid policies with
     /// [`TimError::InvalidConfig`] (a `max_batch` of 0 would otherwise
-    /// panic the worker thread, not the caller).
+    /// panic the worker thread, not the caller), and models the
+    /// pre-execution verifier proves unsafe with [`TimError::Verify`]
+    /// (see [`crate::verify::check_spec`]) — all before any worker
+    /// thread spawns.
     pub fn register(&mut self, spec: ModelSpec) -> Result<()> {
         if spec.policy.max_batch == 0 {
             return Err(TimError::InvalidConfig(format!(
@@ -135,6 +169,7 @@ impl ModelRegistry {
         if self.specs.contains_key(&spec.name) {
             return Err(TimError::DuplicateModel { name: spec.name.clone() });
         }
+        crate::verify::check_spec(&spec)?;
         self.specs.insert(spec.name.clone(), spec);
         Ok(())
     }

@@ -39,6 +39,12 @@ pub enum TimError {
     Artifact { path: PathBuf, reason: String },
     /// A data file parsed but held invalid contents.
     Data { what: String, reason: String },
+    /// The pre-execution verifier ([`crate::verify`]) proved a model could
+    /// overflow, over-subscribe the array, or lose determinism — rejected
+    /// at registration, before any worker thread spawns. `layer` names the
+    /// offending layer (`"-"` for model-wide checks) and `check` the
+    /// violated bound.
+    Verify { model: String, layer: String, check: &'static str, detail: String },
     /// A backend/runtime execution failure.
     Exec { what: String, reason: String },
     /// Invalid configuration or CLI usage.
@@ -85,6 +91,9 @@ impl fmt::Display for TimError {
                 write!(f, "artifact {}: {reason} — run `make artifacts`", path.display())
             }
             TimError::Data { what, reason } => write!(f, "malformed {what}: {reason}"),
+            TimError::Verify { model, layer, check, detail } => {
+                write!(f, "verification failed for '{model}' layer '{layer}' [{check}]: {detail}")
+            }
             TimError::Exec { what, reason } => write!(f, "{what}: {reason}"),
             TimError::InvalidConfig(msg) => write!(f, "{msg}"),
             TimError::Io(e) => write!(f, "io error: {e}"),
@@ -130,6 +139,20 @@ mod tests {
         let e: TimError = io.into();
         assert!(std::error::Error::source(&e).is_some());
         assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn verify_display_names_layer_and_bound() {
+        let e = TimError::Verify {
+            model: "m".into(),
+            layer: "fc1".into(),
+            check: "acc-overflow",
+            detail: "worst-case |acc| exceeds i32::MAX".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("fc1"), "{s}");
+        assert!(s.contains("acc-overflow"), "{s}");
+        assert!(s.contains('m'), "{s}");
     }
 
     #[test]

@@ -18,7 +18,17 @@
 //!   serving coordinator that batches requests over the simulated hardware.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index that
-//! maps every table/figure of the paper to a module and a bench target.
+//! maps every table/figure of the paper to a module and a bench target;
+//! the "Static verification layer" section documents the `timlint`
+//! source-level invariants (hot-path annotations, allow markers) and the
+//! [`verify`] pre-execution checks.
+
+#![forbid(unsafe_code)]
+
+// Let in-crate code name the crate by its public path, so hot paths are
+// annotated `#[timdnn::hot_path]` exactly as downstream code would write
+// them (and exactly as `tools/timlint` looks for them).
+extern crate self as timdnn;
 
 pub mod analog;
 pub mod arch;
@@ -36,8 +46,14 @@ pub mod tile;
 pub mod tpc;
 pub mod util;
 pub mod variation;
+pub mod verify;
 
 pub use error::TimError;
+// Inert marker attributes consumed by `tools/timlint`: `#[timdnn::hot_path]`
+// puts a function under the no-allocation / no-narrowing-cast rules;
+// `#[timdnn::timlint_allow(rule)]` waives one rule for one item with a
+// reviewable justification.
+pub use timdnn_macros::{hot_path, timlint_allow};
 
 /// Crate-wide result type (typed — see [`error::TimError`]).
 pub type Result<T> = error::Result<T>;

@@ -13,6 +13,8 @@
 //!                                data-parallel batch pool width)
 //!   info                         architecture summary
 
+#![forbid(unsafe_code)]
+
 use timdnn::arch::ArchConfig;
 use timdnn::coordinator::{
     BatchPolicy, Engine, FunctionalBackend, ModelSpec, PjrtBackend, SimOnlyBackend,

@@ -54,7 +54,7 @@ pub fn ternarize_asymmetric(xs: &[f32]) -> TernaryTensor {
 /// and the scale such that `code/3 * scale` reconstructs the activation.
 pub fn quantize_activations_2bit(xs: &[f32]) -> (Vec<u8>, f32) {
     assert!(!xs.is_empty());
-    let max = xs.iter().cloned().fold(0.0f32, |a, b| a.max(b.max(0.0)));
+    let max = xs.iter().copied().fold(0.0f32, |a, b| a.max(b.max(0.0)));
     let scale = if max > 0.0 { max } else { 1.0 };
     let codes = xs
         .iter()

@@ -10,6 +10,7 @@
 
 use super::{TileConfig, TileMeter};
 use crate::analog::{sample_bl_voltage, Adc, BitlineCurve};
+use crate::error::{Result, TimError};
 use crate::quant::TernarySystem;
 use crate::tpc::{assert_ternary, Trit, TritMatrix};
 use crate::util::prng::Rng;
@@ -193,6 +194,7 @@ struct ClipDigitize {
 
 impl Digitize for ClipDigitize {
     #[inline(always)]
+    #[timdnn::hot_path]
     fn digitize(&self, raw: u32) -> u32 {
         raw.min(self.n_max)
     }
@@ -207,6 +209,7 @@ struct LutDigitize<'a> {
 
 impl Digitize for LutDigitize<'_> {
     #[inline(always)]
+    #[timdnn::hot_path]
     fn digitize(&self, raw: u32) -> u32 {
         self.lut[raw as usize]
     }
@@ -217,6 +220,7 @@ impl Digitize for LutDigitize<'_> {
 /// register blocks so the hot chunk loop has a fixed trip count, with one
 /// remainder pass for the partial final block. Returns the raw discharge
 /// total (pre-clip, identical to sequential per-patch accesses).
+#[timdnn::hot_path]
 fn batch_core<D: Digitize>(
     plus: &[u32],
     minus: &[u32],
@@ -245,6 +249,7 @@ fn batch_core<D: Digitize>(
 /// by `2^shift`) into the per-patch i32 accumulator rows. Columns whose
 /// weight planes are both zero are weight-gated: they cannot discharge a
 /// bitline or move any accumulator.
+#[timdnn::hot_path]
 fn batch_chunk<D: Digitize>(
     plus: &[u32],
     minus: &[u32],
@@ -263,6 +268,7 @@ fn batch_chunk<D: Digitize>(
             let n_raw = ((wp & xp) | (wm & xm)).count_ones();
             let k_raw = ((wp & xm) | (wm & xp)).count_ones();
             discharges += (n_raw + k_raw) as u64;
+            // timlint::allow(narrowing-cast): digitized counts ≤ n_max ≤ L ≤ 32, far inside i32
             acc[p * ncols + c] += (dig.digitize(n_raw) as i32 - dig.digitize(k_raw) as i32) << shift;
         }
     }
@@ -424,6 +430,7 @@ impl TimTile {
     /// tail of narrow layers. Note that under [`VmmMode::AnalogNoisy`] a
     /// column-limited access consumes fewer RNG draws than a full-width
     /// one, so only equal-`ncols` accesses are comparable bit-for-bit.
+    #[timdnn::hot_path]
     pub fn vmm_block_masks_into(
         &mut self,
         block: usize,
@@ -517,6 +524,7 @@ impl TimTile {
     ///
     /// `acc.len()` must equal `patch_masks.len() * ncols` (patch-major
     /// rows). Returns the raw discharge total over the whole batch.
+    #[timdnn::hot_path]
     pub fn vmm_block_batch_into(
         &mut self,
         block: usize,
@@ -569,10 +577,79 @@ impl TimTile {
         discharges
     }
 
+    /// Caller-reachable precondition check of the batch kernel, returning
+    /// typed [`TimError::Verify`] instead of the panicking assertions of
+    /// [`Self::vmm_block_batch_into`] — for layers built from external
+    /// specs rather than in-crate invariants. `check` names the violated
+    /// bound: `block-range`, `column-limit`, or `acc-shape`.
+    pub fn check_batch_shape(
+        &self,
+        block: usize,
+        patches: usize,
+        ncols: usize,
+        acc_len: usize,
+    ) -> Result<()> {
+        let fail = |check: &'static str, detail: String| {
+            Err(TimError::Verify {
+                model: "-".to_string(),
+                layer: "tile".to_string(),
+                check,
+                detail,
+            })
+        };
+        if block >= self.cfg.k {
+            return fail(
+                "block-range",
+                format!("block {} out of range (tile has K = {})", block, self.cfg.k),
+            );
+        }
+        if ncols > self.cfg.n {
+            return fail(
+                "column-limit",
+                format!("ncols {} wider than the tile (N = {})", ncols, self.cfg.n),
+            );
+        }
+        match patches.checked_mul(ncols) {
+            Some(want) if want == acc_len => Ok(()),
+            want => fail(
+                "acc-shape",
+                format!(
+                    "acc holds {} slots but {} patch rows × {} cols need {}",
+                    acc_len,
+                    patches,
+                    ncols,
+                    want.map_or("overflow".to_string(), |w| w.to_string()),
+                ),
+            ),
+        }
+    }
+
+    /// Fallible facade over [`Self::vmm_block_batch_into`]: runs
+    /// [`Self::check_batch_shape`] first, so mismatched `patch_masks` /
+    /// `acc` lengths reach the caller as [`TimError::Verify`] instead of
+    /// a worker-thread panic.
+    pub fn try_vmm_block_batch_into(
+        &mut self,
+        block: usize,
+        patch_masks: &[(u32, u32)],
+        ncols: usize,
+        shift: u32,
+        mode: &mut VmmMode,
+        acc: &mut [i32],
+    ) -> Result<u64> {
+        self.check_batch_shape(block, patch_masks.len(), ncols, acc.len())?;
+        Ok(self.vmm_block_batch_into(block, patch_masks, ncols, shift, mode, acc))
+    }
+
     /// One `AnalogNoisy` patch of the batch kernel: the exact column loop
     /// of the masks core (same voltage sampling and noisy-decode order,
     /// so the RNG stream matches draw-for-draw), accumulating into the
     /// patch's i32 row instead of a counts buffer.
+    ///
+    /// The narrowing waiver covers the two `decode_noisy as i32` casts:
+    /// ADC decodes are bounded by `n_max ≤ L ≤ 32`, far inside i32.
+    #[timdnn::hot_path]
+    #[timdnn::timlint_allow(narrowing-cast)]
     fn noisy_batch_row(
         &self,
         block: usize,
@@ -781,6 +858,36 @@ mod tests {
 
     fn small_cfg() -> TileConfig {
         TileConfig { l: 16, k: 4, n: 32, m: 8, n_max: N_MAX }
+    }
+
+    #[test]
+    fn batch_shape_mismatch_is_typed_not_panic() {
+        let mut tile = TimTile::new(small_cfg());
+        let masks = [(0u32, 0u32); 3];
+        // acc sized for 2 patches instead of 3 → acc-shape.
+        let mut acc = vec![0i32; 2 * 32];
+        match tile.try_vmm_block_batch_into(0, &masks, 32, 0, &mut VmmMode::Ideal, &mut acc) {
+            Err(crate::error::TimError::Verify { check, detail, .. }) => {
+                assert_eq!(check, "acc-shape");
+                assert!(detail.contains("96"), "{detail}");
+            }
+            other => panic!("expected acc-shape Verify error, got {other:?}"),
+        }
+        // Out-of-range block and over-wide ncols are typed too.
+        assert!(matches!(
+            tile.check_batch_shape(4, 1, 32, 32),
+            Err(crate::error::TimError::Verify { check: "block-range", .. })
+        ));
+        assert!(matches!(
+            tile.check_batch_shape(0, 1, 33, 33),
+            Err(crate::error::TimError::Verify { check: "column-limit", .. })
+        ));
+        // A well-shaped call goes through and matches the panicking entry.
+        let mut acc = vec![0i32; 3 * 32];
+        let d = tile
+            .try_vmm_block_batch_into(0, &masks, 32, 0, &mut VmmMode::Ideal, &mut acc)
+            .unwrap();
+        assert_eq!(d, 0);
     }
 
     #[test]

@@ -1,0 +1,452 @@
+//! Pre-execution program verifier (the static half of the correctness
+//! story; `tools/timlint` is the source half).
+//!
+//! [`check_program`] analyzes a compiled [`Program`] against an
+//! [`ArchConfig`] *before* anything executes and rejects with typed
+//! [`TimError::Verify`] diagnostics instead of letting a bad model fail —
+//! or silently corrupt logits — at runtime:
+//!
+//! * **acc-overflow** — the batch kernel accumulates digitized
+//!   `(n − k) << shift` partial sums in `i32`. Per access `|n − k| ≤ L`
+//!   (counts are popcounts of L-bit masks, and every digitization clips
+//!   at or below L), one output slot takes `rows.div_ceil(L)` accesses
+//!   per bit plane, and plane `p` is PCU-shifted by `2^p`, so the
+//!   worst-case magnitude is `L × row_blocks × (2^passes − 1)`. Reject
+//!   when that exceeds `i32::MAX`. The bound is exact for the adversarial
+//!   workload (all-ones masks against all-`+1` weights, no ADC clip), so
+//!   the property-test oracle in `tests/verify_prop.rs` accepts iff this
+//!   check accepts — no false accepts, no false rejects.
+//! * **tile-budget** — no instruction may use more tiles in parallel than
+//!   the architecture has, and a [`crate::coordinator::ModelSpec`] may
+//!   not under-declare the mapped program's peak
+//!   ([`crate::mapper::tiles_required`]).
+//! * **column-limit** — a layer spanning `col_tiles` column strips of
+//!   `N` occupies `row_tiles × col_tiles` weight blocks; at `K` blocks
+//!   per tile it needs at least `min(ceil(blocks / K), tiles)` tiles
+//!   (temporal chunking uses all tiles), matching the mapper's placement
+//!   arithmetic.
+//! * **scratch** — the per-layer accumulator plane
+//!   (`positions × cols` i32 slots) must fit the serving scratch budget.
+//! * **ternary-range** — weight planes must stay in the ternary alphabet
+//!   ([`ternary_bytes`] / [`ternary_trits`]).
+//! * **determinism** — a model declaring
+//!   [`NoisePolicy::AnalogNoisy`] must carry a seed path, or its noisy
+//!   draws are irreproducible (`seed: None` is rejected).
+//!
+//! [`crate::coordinator::ModelRegistry::register`] runs [`check_spec`] on
+//! every spec, so `Engine::register` rejects bad models before any
+//! batcher worker spawns.
+
+use crate::arch::ArchConfig;
+use crate::error::{Result, TimError};
+use crate::isa::{Instr, Program};
+
+/// Per-layer accumulator-plane budget for the serving scratch buffers:
+/// 2^28 i32 slots (1 GiB). Real layers sit orders of magnitude below
+/// this; anything above it cannot be served without thrashing the host.
+pub const SCRATCH_ACC_SLOTS: u128 = 1 << 28;
+
+/// Declared noise/determinism policy of a served model — the input to the
+/// verifier's determinism audit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum NoisePolicy {
+    /// The backend runs a deterministic mode (`Ideal`/`Analog`).
+    #[default]
+    Deterministic,
+    /// The backend injects `AnalogNoisy` sensing noise. `seed` is the
+    /// declared seed path; `None` means the draws are irreproducible and
+    /// registration is rejected.
+    AnalogNoisy { seed: Option<u64> },
+}
+
+/// The verifier's view of one VMM layer (extracted from a mapped
+/// [`Instr::Vmm`]).
+#[derive(Clone, Debug)]
+pub struct LayerAudit {
+    pub name: String,
+    /// Reduction (row) dimension of the layer's weight matrix.
+    pub rows: usize,
+    /// Output (column) dimension.
+    pub cols: usize,
+    /// Output positions per inference (1 for FC, H×W for conv im2col).
+    pub positions: usize,
+    /// Bit-serial activation passes (bit plane `p` is shifted by `2^p`).
+    pub passes: u32,
+    /// Tiles this layer's accesses occupy in parallel.
+    pub tiles_used: usize,
+}
+
+/// Everything [`check_program`] needs, decoupled from the [`Program`] so
+/// a [`crate::coordinator::ModelSpec`] can carry it across registration.
+#[derive(Clone, Debug)]
+pub struct ProgramAudit {
+    pub network: String,
+    /// Rows per tile block (`L` — mask popcounts are bounded by this).
+    pub tile_l: usize,
+    /// Columns per tile (`N` — one column strip).
+    pub tile_n: usize,
+    /// Blocks per tile (`K`).
+    pub tile_k: usize,
+    /// Tiles in the target architecture.
+    pub arch_tiles: usize,
+    /// Peak tiles any instruction uses in parallel.
+    pub tiles_required: usize,
+    pub layers: Vec<LayerAudit>,
+}
+
+impl ProgramAudit {
+    /// Extract the audit from a mapped program.
+    pub fn of(prog: &Program, arch: &ArchConfig) -> Self {
+        let layers = prog
+            .instrs
+            .iter()
+            .filter_map(|i| match i {
+                Instr::Vmm { layer, tiles_used, act_passes, shape, .. } => Some(LayerAudit {
+                    name: layer.clone(),
+                    rows: shape.rows,
+                    cols: shape.cols,
+                    positions: shape.positions,
+                    passes: *act_passes,
+                    tiles_used: *tiles_used,
+                }),
+                _ => None,
+            })
+            .collect();
+        Self {
+            network: prog.network.clone(),
+            tile_l: arch.tile.l,
+            tile_n: arch.tile.n,
+            tile_k: arch.tile.k,
+            arch_tiles: arch.tiles,
+            tiles_required: prog.max_tiles_used(),
+            layers,
+        }
+    }
+
+    /// Run every static check; `model` names the registration for
+    /// diagnostics.
+    pub fn check(&self, model: &str) -> Result<()> {
+        if self.tiles_required > self.arch_tiles {
+            return verify_err(
+                model,
+                "-",
+                "tile-budget",
+                format!(
+                    "program peaks at {} tiles in parallel, architecture has {}",
+                    self.tiles_required, self.arch_tiles
+                ),
+            );
+        }
+        for la in &self.layers {
+            self.check_layer(model, la)?;
+        }
+        Ok(())
+    }
+
+    fn check_layer(&self, model: &str, la: &LayerAudit) -> Result<()> {
+        if la.rows == 0 || la.cols == 0 || la.positions == 0 || la.passes == 0 {
+            return verify_err(
+                model,
+                &la.name,
+                "shape",
+                format!(
+                    "degenerate VMM: rows={} cols={} positions={} passes={}",
+                    la.rows, la.cols, la.positions, la.passes
+                ),
+            );
+        }
+        if la.tiles_used > self.arch_tiles {
+            return verify_err(
+                model,
+                &la.name,
+                "tile-budget",
+                format!("layer uses {} tiles, architecture has {}", la.tiles_used, self.arch_tiles),
+            );
+        }
+        // Column-limit / capacity consistency: col_tiles column strips ×
+        // row_tiles row blocks must fit K blocks per tile across at least
+        // min(ceil(blocks/K), tiles) tiles (the mapper's own arithmetic —
+        // temporal chunking uses every tile).
+        let row_tiles = la.rows.div_ceil(self.tile_l);
+        let col_tiles = la.cols.div_ceil(self.tile_n);
+        let blocks = row_tiles.saturating_mul(col_tiles);
+        let min_tiles = blocks.div_ceil(self.tile_k.max(1)).min(self.arch_tiles);
+        if la.tiles_used < min_tiles {
+            return verify_err(
+                model,
+                &la.name,
+                "column-limit",
+                format!(
+                    "{} weight blocks ({} row-blocks × {} column strips of {}) exceed the \
+                     {}-block capacity of {} tile(s); needs at least {}",
+                    blocks, row_tiles, col_tiles, self.tile_n, self.tile_k, la.tiles_used, min_tiles
+                ),
+            );
+        }
+        // i32 accumulator overflow: worst-case magnitude of one output
+        // slot after all row blocks and bit planes.
+        let worst = acc_worst_case(self.tile_l as u64, row_tiles as u64, la.passes);
+        if worst > i128::from(i32::MAX) {
+            return verify_err(
+                model,
+                &la.name,
+                "acc-overflow",
+                format!(
+                    "worst-case |acc| = L({}) × row_blocks({}) × (2^{} − 1) = {} exceeds \
+                     i32::MAX ({})",
+                    self.tile_l,
+                    row_tiles,
+                    la.passes,
+                    worst,
+                    i32::MAX
+                ),
+            );
+        }
+        // Scratch feasibility: the layer's accumulator plane must fit the
+        // serving scratch budget.
+        let slots = (la.positions as u128).saturating_mul(la.cols as u128);
+        if slots > SCRATCH_ACC_SLOTS {
+            return verify_err(
+                model,
+                &la.name,
+                "scratch",
+                format!(
+                    "accumulator plane of {} positions × {} cols = {} i32 slots exceeds the \
+                     {}-slot scratch budget",
+                    la.positions, la.cols, slots, SCRATCH_ACC_SLOTS
+                ),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Worst-case accumulator magnitude of one output slot: `|n − k| ≤ l` per
+/// access, `row_blocks` accesses per bit plane, plane `p` shifted by
+/// `2^p`. Saturating i128 arithmetic — monotone and panic-free for any
+/// input.
+pub fn acc_worst_case(l: u64, row_blocks: u64, passes: u32) -> i128 {
+    let per_plane = i128::from(l).saturating_mul(i128::from(row_blocks));
+    let mut total: i128 = 0;
+    for p in 0..passes.min(100) {
+        total = total.saturating_add(per_plane.saturating_mul(1i128 << p));
+    }
+    if passes > 100 {
+        return i128::MAX;
+    }
+    total
+}
+
+/// Verify a compiled program against an architecture. This is the facade
+/// for callers holding a `Program`; registration goes through the
+/// [`ProgramAudit`] a [`crate::coordinator::ModelSpec`] carries.
+pub fn check_program(model: &str, prog: &Program, arch: &ArchConfig) -> Result<()> {
+    ProgramAudit::of(prog, arch).check(model)
+}
+
+/// Registration-time verification of a [`crate::coordinator::ModelSpec`]:
+/// the determinism audit, the mapped program's static checks, and
+/// footprint consistency between the declared `tiles_required` and the
+/// audit's peak.
+pub fn check_spec(spec: &crate::coordinator::ModelSpec) -> Result<()> {
+    if let NoisePolicy::AnalogNoisy { seed: None } = spec.noise {
+        return verify_err(
+            &spec.name,
+            "-",
+            "determinism",
+            "AnalogNoisy declared without a seed path; noisy draws would be \
+             irreproducible (declare with_noise_seed)"
+                .to_string(),
+        );
+    }
+    if let Some(audit) = &spec.audit {
+        audit.check(&spec.name)?;
+        if spec.tiles_required < audit.tiles_required {
+            return verify_err(
+                &spec.name,
+                "-",
+                "tile-budget",
+                format!(
+                    "spec declares {} tiles but the mapped program peaks at {}",
+                    spec.tiles_required, audit.tiles_required
+                ),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Ternary-range check of a raw weight plane as stored in weight
+/// artifacts: every byte must be `0x00`, `0x01`, or `0xFF` (two's
+/// complement −1).
+pub fn ternary_bytes(model: &str, layer: &str, bytes: &[u8]) -> Result<()> {
+    match bytes.iter().find(|&&b| !matches!(b, 0x00 | 0x01 | 0xFF)) {
+        Some(&bad) => verify_err(
+            model,
+            layer,
+            "ternary-range",
+            format!("weight byte 0x{bad:02x} outside {{0x00, 0x01, 0xff}}"),
+        ),
+        None => Ok(()),
+    }
+}
+
+/// Ternary-range check of an in-memory trit plane (`{-1, 0, 1}`).
+pub fn ternary_trits(model: &str, layer: &str, trits: &[i8]) -> Result<()> {
+    match trits.iter().find(|&&t| !matches!(t, -1 | 0 | 1)) {
+        Some(&bad) => verify_err(
+            model,
+            layer,
+            "ternary-range",
+            format!("weight value {bad} outside {{-1, 0, 1}}"),
+        ),
+        None => Ok(()),
+    }
+}
+
+fn verify_err<T>(model: &str, layer: &str, check: &'static str, detail: String) -> Result<T> {
+    Err(TimError::Verify { model: model.to_string(), layer: layer.to_string(), check, detail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::VmmShape;
+
+    fn audit_with(layer: LayerAudit) -> ProgramAudit {
+        ProgramAudit {
+            network: "t".into(),
+            tile_l: 16,
+            tile_n: 256,
+            tile_k: 16,
+            arch_tiles: 32,
+            tiles_required: 1,
+            layers: vec![layer],
+        }
+    }
+
+    fn layer() -> LayerAudit {
+        LayerAudit {
+            name: "fc".into(),
+            rows: 512,
+            cols: 64,
+            positions: 1,
+            passes: 2,
+            // 512 rows = 32 blocks → at least 2 tiles of K=16 blocks.
+            tiles_used: 2,
+        }
+    }
+
+    #[test]
+    fn paper_shaped_layer_passes() {
+        audit_with(layer()).check("m").unwrap();
+    }
+
+    #[test]
+    fn acc_overflow_detected_and_named() {
+        // row_blocks = 2^26, worst = 16 × 2^26 × 3 = 3.2e9 > i32::MAX.
+        let mut la = layer();
+        la.rows = 1 << 30;
+        la.tiles_used = 32; // enough capacity; only the bound trips
+        match audit_with(la).check("m") {
+            Err(TimError::Verify { layer, check, detail, .. }) => {
+                assert_eq!(layer, "fc");
+                assert_eq!(check, "acc-overflow");
+                assert!(detail.contains("i32::MAX"), "{detail}");
+            }
+            other => panic!("expected acc-overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn column_limit_inconsistency_detected() {
+        // 64 column strips × 1 row block = 64 blocks on 1 tile of 16.
+        let mut la = layer();
+        la.rows = 16;
+        la.cols = 64 * 256;
+        match audit_with(la).check("m") {
+            Err(TimError::Verify { check, .. }) => assert_eq!(check, "column-limit"),
+            other => panic!("expected column-limit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn over_budget_program_rejected() {
+        let mut a = audit_with(layer());
+        a.tiles_required = 64;
+        match a.check("m") {
+            Err(TimError::Verify { check, layer, .. }) => {
+                assert_eq!(check, "tile-budget");
+                assert_eq!(layer, "-");
+            }
+            other => panic!("expected tile-budget, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scratch_budget_enforced() {
+        let mut la = layer();
+        la.positions = 1 << 26;
+        la.cols = 256; // 2^34 slots > 2^28
+        match audit_with(la).check("m") {
+            Err(TimError::Verify { check, .. }) => assert_eq!(check, "scratch"),
+            other => panic!("expected scratch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worst_case_bound_is_exact_for_small_shapes() {
+        // 3 row blocks, 2 passes: 16·3·(1 + 2) = 144.
+        assert_eq!(acc_worst_case(16, 3, 2), 144);
+        assert_eq!(acc_worst_case(16, 3, 1), 48);
+        assert_eq!(acc_worst_case(16, 3, 0), 0);
+    }
+
+    #[test]
+    fn mapped_tiny_cnn_verifies_clean() {
+        let arch = crate::arch::ArchConfig::tim_dnn();
+        let prog = crate::mapper::map_network(&crate::model::tiny_cnn(), &arch);
+        check_program("timnet", &prog, &arch).unwrap();
+    }
+
+    #[test]
+    fn crafted_program_with_overflow_bounds_rejected() {
+        let arch = crate::arch::ArchConfig::tim_dnn();
+        let mut prog = Program::new("huge", true);
+        prog.push(Instr::Vmm {
+            layer: "fc_huge".into(),
+            accesses: 1,
+            tiles_used: 32,
+            output_sparsity: 0.5,
+            act_passes: 8,
+            shape: VmmShape {
+                rows: 1 << 24,
+                cols: 256,
+                positions: 1,
+                unique_inputs: 1 << 24,
+            },
+        });
+        match check_program("huge", &prog, &arch) {
+            Err(TimError::Verify { layer, check, .. }) => {
+                assert_eq!(layer, "fc_huge");
+                assert_eq!(check, "acc-overflow");
+            }
+            other => panic!("expected acc-overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ternary_checks_accept_alphabet_and_name_offender() {
+        ternary_bytes("m", "l", &[0x00, 0x01, 0xFF]).unwrap();
+        ternary_trits("m", "l", &[-1, 0, 1]).unwrap();
+        match ternary_bytes("m", "conv1", &[0x00, 0x02]) {
+            Err(TimError::Verify { layer, check, detail, .. }) => {
+                assert_eq!(layer, "conv1");
+                assert_eq!(check, "ternary-range");
+                assert!(detail.contains("0x02"), "{detail}");
+            }
+            other => panic!("expected ternary-range, got {other:?}"),
+        }
+        assert!(ternary_trits("m", "l", &[2]).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Hand-rolled interleaving test (ISSUE: satellite 3): `Session::submit`
+//! racing `Engine::shutdown` from many threads must always resolve — every
+//! submission either completes, fails with a typed error, or observes
+//! `EngineStopped`; nothing may hang. Rounds jitter the shutdown timing to
+//! sweep the interleaving space (no loom offline, so we brute-force the
+//! schedule instead).
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{BatchPolicy, Engine, ModelSpec, Session, SimOnlyBackend};
+use timdnn::model;
+use timdnn::TimError;
+
+const ROUNDS: usize = 40;
+const SUBMITTERS: usize = 4;
+const SUBMITS_PER_THREAD: usize = 20;
+/// Generous bound: a hang is a test failure, not a wait.
+const RECV_BOUND: Duration = Duration::from_secs(20);
+
+fn engine() -> Engine {
+    let spec = ModelSpec::for_network("m", &model::tiny_cnn(), &ArchConfig::tim_dnn(), || {
+        Ok(Box::new(SimOnlyBackend::new()))
+    })
+    .with_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) });
+    Engine::builder().register(spec).unwrap().build().unwrap()
+}
+
+fn input() -> timdnn::runtime::TensorF32 {
+    timdnn::runtime::TensorF32::new(vec![2], vec![1.0, -1.0])
+}
+
+/// One submitter thread: fire-and-collect, asserting every receiver
+/// resolves within the bound. Returns how many submissions were accepted.
+fn submit_storm(session: &Session) -> usize {
+    let mut accepted = 0;
+    for _ in 0..SUBMITS_PER_THREAD {
+        match session.submit(input()) {
+            Ok(rx) => {
+                accepted += 1;
+                match rx.recv_timeout(RECV_BOUND) {
+                    // Completed, or failed with the batch's typed error.
+                    Ok(Ok(_)) | Ok(Err(_)) => {}
+                    // Worker dropped the channel during teardown: the
+                    // request was drained or dropped, never left pending.
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        panic!("receiver hung: submit raced shutdown into a deadlock")
+                    }
+                }
+            }
+            // Shutdown won the race (or the queue filled): typed, not hung.
+            Err(TimError::EngineStopped { model }) => assert_eq!(model, "m"),
+            Err(TimError::QueueFull { .. }) => {}
+            Err(other) => panic!("unexpected submit error: {other:?}"),
+        }
+    }
+    accepted
+}
+
+#[test]
+fn submit_racing_shutdown_never_hangs() {
+    for round in 0..ROUNDS {
+        let engine = engine();
+        let session = engine.session("m").unwrap();
+        // +1 for the shutdown thread: all participants release together.
+        let barrier = Arc::new(Barrier::new(SUBMITTERS + 1));
+
+        let submitters: Vec<_> = (0..SUBMITTERS)
+            .map(|_| {
+                let session = session.clone();
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    submit_storm(&session)
+                })
+            })
+            .collect();
+
+        barrier.wait();
+        // Jitter which interleaving the shutdown lands in: immediate in
+        // some rounds, mid-storm in others.
+        if round % 3 != 0 {
+            std::thread::sleep(Duration::from_micros((round as u64) * 37 % 500));
+        }
+        let snapshots = engine.shutdown();
+        assert!(snapshots.contains_key("m"));
+
+        for handle in submitters {
+            let accepted = handle.join().expect("submitter panicked");
+            assert!(accepted <= SUBMITS_PER_THREAD);
+        }
+    }
+}
+
+#[test]
+fn submit_after_shutdown_is_engine_stopped() {
+    let engine = engine();
+    let session = engine.session("m").unwrap();
+    // A pre-shutdown submission resolves normally.
+    let rx = session.submit(input()).unwrap();
+    engine.shutdown();
+    assert!(rx.recv_timeout(RECV_BOUND).is_ok(), "queued request was not drained");
+    // Every post-shutdown submission must be the typed EngineStopped —
+    // never a hang, never a panic.
+    for _ in 0..8 {
+        match session.submit(input()) {
+            Err(TimError::EngineStopped { model }) => assert_eq!(model, "m"),
+            Ok(_) => panic!("submit accepted after shutdown"),
+            Err(other) => panic!("expected EngineStopped, got {other:?}"),
+        }
+    }
+}

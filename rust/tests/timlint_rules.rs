@@ -1,0 +1,292 @@
+//! Tier-1 coverage of the `timlint` rule engine: the engine source is
+//! compiled straight into this test via `#[path]`, so `cargo test`
+//! exercises every rule on seeded-violation fixtures — plus a full walk
+//! over `rust/src/**` asserting the live tree is lint-clean (the same
+//! property `cargo run -p timlint` gates in CI).
+
+#[path = "../../tools/timlint/src/lint.rs"]
+mod lint;
+
+use lint::{
+    lint_source, Finding, RULE_DIGITIZE_F32, RULE_HOT_ALLOC, RULE_NARROWING, RULE_RNG,
+    RULE_VMM_MATCH,
+};
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ----------------------------------------------------------- hot-path-alloc
+
+#[test]
+fn alloc_in_hot_fn_is_flagged_with_line() {
+    let src = "\
+#[timdnn::hot_path]
+fn hot(xs: &[u32]) -> Vec<u32> {
+    let mut v = Vec::new();
+    v.push(1);
+    let s = format!(\"{}\", xs.len());
+    let _ = s;
+    xs.to_vec()
+}
+";
+    let f = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_HOT_ALLOC; 4], "{f:#?}");
+    // `Vec::new` on line 3, `.push(` on 4, `format!` on 5, `.to_vec(` on 7.
+    let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+    assert_eq!(lines, vec![3, 4, 5, 7]);
+}
+
+#[test]
+fn same_body_without_hot_path_attr_is_clean() {
+    let src = "\
+fn cold(xs: &[u32]) -> Vec<u32> {
+    let mut v = Vec::new();
+    v.push(1);
+    xs.to_vec()
+}
+";
+    assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+#[test]
+fn allow_comment_suppresses_one_line_only() {
+    let src = "\
+#[timdnn::hot_path]
+fn hot(buf: &mut Vec<u32>) {
+    // timlint::allow(hot-path-alloc): retained-capacity append
+    buf.push(1);
+    buf.push(2);
+}
+";
+    let f = lint_source("fixture.rs", src);
+    // Line 4 is waived (marker on line 3 covers 3 and 4); line 5 is not.
+    assert_eq!(rules_of(&f), vec![RULE_HOT_ALLOC]);
+    assert_eq!(f[0].line, 5);
+}
+
+#[test]
+fn size_once_resize_is_permitted_in_hot_paths() {
+    let src = "\
+#[timdnn::hot_path]
+fn hot(buf: &mut Vec<u32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0);
+}
+";
+    assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ narrowing-cast
+
+#[test]
+fn narrowing_cast_in_hot_fn_flagged_and_widening_ignored() {
+    let src = "\
+#[timdnn::hot_path]
+fn hot(x: u64) -> i32 {
+    let wide = x as u128;
+    let _ = wide;
+    x as i32
+}
+";
+    let f = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_NARROWING]);
+    assert_eq!(f[0].line, 5);
+}
+
+#[test]
+fn fn_level_timlint_allow_waives_every_occurrence() {
+    let src = "\
+#[timdnn::hot_path]
+#[timdnn::timlint_allow(narrowing-cast)]
+fn hot(a: u64, b: u64) -> i32 {
+    (a as i32) - (b as i32)
+}
+";
+    assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------- rng-construction
+
+#[test]
+fn rng_construction_flagged_everywhere_but_prng_module() {
+    let src = "\
+fn bad() -> u64 {
+    let mut r = rand::thread_rng();
+    r.gen()
+}
+fn also_bad() {
+    let _ = Rng { state: [0; 4] };
+}
+";
+    let f = lint_source("rust/src/sim/mod.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_RNG, RULE_RNG], "{f:#?}");
+    assert_eq!(f[0].line, 2);
+    assert_eq!(f[1].line, 6);
+    // The identical source inside util/prng.rs is sanctioned.
+    assert!(lint_source("rust/src/util/prng.rs", src).is_empty());
+}
+
+#[test]
+fn rng_type_positions_are_not_construction() {
+    let src = "\
+struct Rng { state: u64 }
+impl Rng {
+    fn reseed(&mut self) {}
+}
+fn takes(r: &mut Rng) -> u32 { r.state as u32 }
+";
+    assert!(lint_source("rust/src/variation/mod.rs", src).is_empty());
+}
+
+// -------------------------------------------------------------- digitize-f32
+
+#[test]
+fn float_arithmetic_inside_digitize_impl_flagged() {
+    let src = "\
+impl Digitize for Leaky {
+    fn digitize(&self, raw: u32) -> u32 {
+        let v = raw as f32 * 0.5;
+        v as u32
+    }
+}
+";
+    let f = lint_source("fixture.rs", src);
+    assert!(rules_of(&f).contains(&RULE_DIGITIZE_F32), "{f:#?}");
+    assert!(f.iter().any(|x| x.line == 3));
+}
+
+#[test]
+fn integer_digitize_impl_is_clean() {
+    let src = "\
+impl Digitize for Clip {
+    fn digitize(&self, raw: u32) -> u32 {
+        raw.min(self.n_max)
+    }
+}
+fn unrelated() -> f32 { 1.5 }
+";
+    assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ vmm-mode-match
+
+#[test]
+fn non_exhaustive_vmm_match_flagged() {
+    let src = "\
+fn dispatch(mode: &VmmMode) -> u32 {
+    match mode {
+        VmmMode::Ideal => 0,
+        VmmMode::Analog => 1,
+    }
+}
+";
+    let f = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_VMM_MATCH]);
+    assert!(f[0].message.contains("AnalogNoisy"), "{}", f[0].message);
+}
+
+#[test]
+fn wildcard_vmm_match_flagged_even_when_all_variants_named() {
+    let src = "\
+fn dispatch(mode: &VmmMode) -> u32 {
+    match mode {
+        VmmMode::Ideal => 0,
+        VmmMode::Analog => 1,
+        VmmMode::AnalogNoisy(_) => 2,
+        _ => 3,
+    }
+}
+";
+    let f = lint_source("fixture.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_VMM_MATCH]);
+}
+
+#[test]
+fn binding_catchall_vmm_match_flagged() {
+    let src = "\
+fn dispatch(mode: VmmMode) -> u32 {
+    match mode {
+        VmmMode::Ideal => 0,
+        other => 1,
+    }
+}
+";
+    assert_eq!(rules_of(&lint_source("fixture.rs", src)), vec![RULE_VMM_MATCH]);
+}
+
+#[test]
+fn exhaustive_vmm_match_and_arm_body_constructions_are_clean() {
+    let src = "\
+fn dispatch(mode: &mut VmmMode, noisy: bool) -> u32 {
+    match mode {
+        VmmMode::Ideal => 0,
+        VmmMode::Analog => 1,
+        VmmMode::AnalogNoisy(rng) => rng.next(),
+    }
+}
+fn build(rng: Option<&mut Rng>) -> VmmMode {
+    // VmmMode in arm *bodies* (construction) must not count as patterns.
+    match rng {
+        Some(r) => VmmMode::AnalogNoisy(r),
+        None => VmmMode::Ideal,
+    }
+}
+";
+    assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+// --------------------------------------------------------- lexer edge cases
+
+#[test]
+fn strings_comments_and_lifetimes_do_not_confuse_the_lexer() {
+    let src = "\
+#[timdnn::hot_path]
+fn hot<'a>(s: &'a str) -> &'a str {
+    /* Vec::new() in a block comment
+       spanning lines */
+    let banned_in_string = \"Vec::new() format! .push(\";
+    let raw = r#\"match mode { _ => 0 } .collect(\"#;
+    let ch = 'x';
+    let _ = (banned_in_string, raw, ch);
+    s
+}
+";
+    assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+// --------------------------------------------------------- full-repo sweep
+
+fn collect_rs(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read {}: {e}", dir.display()))
+        .map(Result::unwrap)
+        .collect();
+    entries.sort_by_key(std::fs::DirEntry::file_name);
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn live_tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    assert!(files.len() > 20, "walker found only {} files", files.len());
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path).unwrap();
+        findings.extend(lint_source(&path.display().to_string(), &src));
+    }
+    let report: Vec<String> = findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(findings.is_empty(), "live tree has findings:\n{}", report.join("\n"));
+}

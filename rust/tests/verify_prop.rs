@@ -1,0 +1,105 @@
+//! Property test of the verifier's i32-overflow bound (ISSUE: satellite 4):
+//! over random layer shapes, `check_program`-style verification accepts
+//! **iff** an independent i64 shadow-accumulation oracle keeps the
+//! worst-case accumulator within `i32`. The bound is exact for the
+//! adversarial workload, so there are no false accepts and no false
+//! rejects — asserted as a strict iff, not an inequality.
+
+use timdnn::util::prop;
+use timdnn::verify::{acc_worst_case, LayerAudit, ProgramAudit};
+use timdnn::TimError;
+
+/// Independent worst-case oracle: shadow-accumulate the adversarial
+/// workload (every access contributes the full `|n − k| = L`, every bit
+/// plane `p` weighted `2^p`) in saturating i64, plane-major — a different
+/// width and code path than the verifier's i128 bound.
+fn oracle_worst_i64(l: u64, row_blocks: u64, passes: u32) -> i64 {
+    let mut acc: i64 = 0;
+    for p in 0..passes {
+        let weight = 1i64 << p; // passes ≤ 20 in this test
+        let per_access = (l as i64).saturating_mul(weight);
+        acc = acc.saturating_add(per_access.saturating_mul(row_blocks as i64));
+    }
+    acc
+}
+
+/// An audit where only the overflow check can fire: one narrow layer
+/// (cols 16, positions 1 — scratch and column capacity trivially satisfied
+/// with every tile assigned), parameterized by the overflow inputs.
+fn overflow_only_audit(l: usize, rows: usize, passes: u32) -> ProgramAudit {
+    ProgramAudit {
+        network: "prop".to_string(),
+        tile_l: l,
+        tile_n: 256,
+        tile_k: 16,
+        arch_tiles: 32,
+        tiles_required: 32,
+        layers: vec![LayerAudit {
+            name: "layer0".to_string(),
+            rows,
+            cols: 16,
+            positions: 1,
+            passes,
+            tiles_used: 32,
+        }],
+    }
+}
+
+#[test]
+fn verifier_accepts_iff_i64_shadow_accumulation_fits_i32() {
+    prop::check("verify-acc-overflow-iff", 0x71D0, |rng, _case| {
+        // Log-uniform row blocks in [1, 2^40] straddle the i32 boundary
+        // for every (l, passes) combination.
+        let l = rng.range_usize(1, 32);
+        let exp = rng.range_usize(0, 40);
+        let row_blocks = 1usize << exp;
+        let passes = rng.range_usize(1, 20) as u32;
+        let rows = row_blocks * l; // row_tiles = rows.div_ceil(l) = row_blocks
+
+        let oracle = oracle_worst_i64(l as u64, row_blocks as u64, passes);
+        let oracle_fits = oracle <= i64::from(i32::MAX);
+
+        let audit = overflow_only_audit(l, rows, passes);
+        match audit.check("prop-model") {
+            Ok(()) => {
+                assert!(
+                    oracle_fits,
+                    "false accept: l={l} row_blocks={row_blocks} passes={passes} \
+                     oracle={oracle}"
+                );
+            }
+            Err(TimError::Verify { check, layer, .. }) => {
+                assert!(
+                    !oracle_fits,
+                    "false reject: l={l} row_blocks={row_blocks} passes={passes} \
+                     oracle={oracle}"
+                );
+                assert_eq!(check, "acc-overflow");
+                assert_eq!(layer, "layer0");
+            }
+            Err(other) => panic!("unexpected error kind: {other:?}"),
+        }
+
+        // When nothing saturates, the verifier's bound and the oracle are
+        // the same number — the bound is exact, not merely conservative.
+        if oracle < i64::MAX {
+            assert_eq!(
+                acc_worst_case(l as u64, row_blocks as u64, passes),
+                i128::from(oracle),
+                "bound drifted from the shadow accumulation"
+            );
+        }
+    });
+}
+
+#[test]
+fn every_mapped_zoo_network_verifies_clean() {
+    let arch = timdnn::arch::ArchConfig::tim_dnn();
+    for bench in timdnn::model::zoo() {
+        let prog = timdnn::mapper::map_network(&bench.net, &arch);
+        timdnn::verify::check_program(&bench.net.name, &prog, &arch)
+            .unwrap_or_else(|e| panic!("{} failed verification: {e}", bench.net.name));
+    }
+    let prog = timdnn::mapper::map_network(&timdnn::model::tiny_cnn(), &arch);
+    timdnn::verify::check_program("timnet", &prog, &arch).unwrap();
+}

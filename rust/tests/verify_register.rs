@@ -1,0 +1,134 @@
+//! `Engine::register` is the verifier's enforcement point: a model the
+//! pre-execution checks prove unsafe must be rejected with a typed
+//! [`TimError::Verify`] — naming the offending layer and the violated
+//! bound — *before* any backend is constructed or batcher worker spawns.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{Engine, ModelSpec, NoisePolicy, SimOnlyBackend};
+use timdnn::model;
+use timdnn::verify::{LayerAudit, ProgramAudit};
+use timdnn::TimError;
+
+fn spec(name: &str) -> ModelSpec {
+    ModelSpec::for_network(name, &model::tiny_cnn(), &ArchConfig::tim_dnn(), || {
+        Ok(Box::new(SimOnlyBackend::new()))
+    })
+}
+
+/// A crafted audit whose fc layer overflows the i32 accumulator bound:
+/// 2^24 rows at L=16 → 2^20 row blocks; 8 passes → ×255; 16·2^20·255 ≫ i32.
+fn overflow_audit() -> ProgramAudit {
+    ProgramAudit {
+        network: "huge".to_string(),
+        tile_l: 16,
+        tile_n: 256,
+        tile_k: 16,
+        arch_tiles: 32,
+        tiles_required: 32,
+        layers: vec![LayerAudit {
+            name: "fc_huge".to_string(),
+            rows: 1 << 24,
+            cols: 256,
+            positions: 1,
+            passes: 8,
+            tiles_used: 32,
+        }],
+    }
+}
+
+#[test]
+fn overflow_model_rejected_at_register_before_backend_spawn() {
+    let constructed = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&constructed);
+    let s = ModelSpec::for_network("huge", &model::tiny_cnn(), &ArchConfig::tim_dnn(), move || {
+        flag.store(true, Ordering::SeqCst);
+        Ok(Box::new(SimOnlyBackend::new()))
+    })
+    .with_tiles(32)
+    .with_audit(overflow_audit());
+    match Engine::builder().register(s) {
+        Err(TimError::Verify { model, layer, check, detail }) => {
+            assert_eq!(model, "huge");
+            assert_eq!(layer, "fc_huge");
+            assert_eq!(check, "acc-overflow");
+            assert!(detail.contains("i32::MAX"), "{detail}");
+        }
+        other => panic!("expected Verify rejection, got {other:?}"),
+    }
+    // Rejection happened at register: the backend factory never ran (it
+    // only runs on the worker thread an admitted model spawns at build).
+    assert!(!constructed.load(Ordering::SeqCst), "backend was constructed for a rejected model");
+}
+
+#[test]
+fn under_declared_tile_footprint_rejected() {
+    // for_network fills the audit; shrinking the declared footprint below
+    // the mapped program's peak is the lie the verifier catches.
+    let honest = spec("m").tiles_required;
+    assert!(honest > 1, "tiny_cnn should need more than one tile, got {honest}");
+    let s = spec("m").with_tiles(honest - 1);
+    match Engine::builder().register(s) {
+        Err(TimError::Verify { check, layer, .. }) => {
+            assert_eq!(check, "tile-budget");
+            assert_eq!(layer, "-");
+        }
+        other => panic!("expected tile-budget Verify rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn column_capacity_inconsistency_rejected() {
+    // 64 column strips × 1 row block = 64 blocks claim to fit 1 tile of
+    // K = 16 blocks.
+    let mut audit = overflow_audit();
+    audit.layers[0] = LayerAudit {
+        name: "wide".to_string(),
+        rows: 16,
+        cols: 64 * 256,
+        positions: 1,
+        passes: 1,
+        tiles_used: 1,
+    };
+    let s = spec("wide-model").with_audit(audit);
+    match Engine::builder().register(s) {
+        Err(TimError::Verify { layer, check, .. }) => {
+            assert_eq!(layer, "wide");
+            assert_eq!(check, "column-limit");
+        }
+        other => panic!("expected column-limit Verify rejection, got {other:?}"),
+    }
+}
+
+#[test]
+fn noisy_model_without_seed_rejected_with_seed_admitted() {
+    let s = spec("noisy").with_noise_policy(NoisePolicy::AnalogNoisy { seed: None });
+    match Engine::builder().register(s) {
+        Err(TimError::Verify { model, check, .. }) => {
+            assert_eq!(model, "noisy");
+            assert_eq!(check, "determinism");
+        }
+        other => panic!("expected determinism Verify rejection, got {other:?}"),
+    }
+
+    // The same model with a declared seed path registers, builds, serves.
+    let engine = Engine::builder()
+        .register(spec("noisy").with_noise_seed(42))
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(engine.models(), vec!["noisy".to_string()]);
+    engine.shutdown();
+}
+
+#[test]
+fn honest_for_network_spec_passes_verification_end_to_end() {
+    // for_network's own audit must always verify: register → build →
+    // session round-trip with the verifier in the loop.
+    let engine = Engine::builder().register(spec("timnet")).unwrap().build().unwrap();
+    let session = engine.session("timnet").unwrap();
+    assert_eq!(session.model(), "timnet");
+    engine.shutdown();
+}

@@ -1,0 +1,30 @@
+//! Inert marker attributes for the `timlint` static analyzer.
+//!
+//! Both attributes return their item unchanged — they carry no runtime
+//! semantics. Their value is entirely static: `tools/timlint` keys its
+//! source-level rules off them, and a reviewer can see at the definition
+//! site which contract a function is under.
+
+#![forbid(unsafe_code)]
+
+use proc_macro::TokenStream;
+
+/// Marks a function as a steady-state hot path. `timlint` then forbids
+/// heap-allocating calls (`Vec::new`, `push`, `collect`, `to_vec`,
+/// `clone`, `format!`, …) and `as` narrowing casts inside its body;
+/// deviations need a `// timlint::allow(rule): why` line marker or a
+/// [`macro@timlint_allow`] attribute.
+#[proc_macro_attribute]
+pub fn hot_path(_attr: TokenStream, item: TokenStream) -> TokenStream {
+    item
+}
+
+/// Item-level lint waiver: `#[timdnn::timlint_allow(narrowing-cast)]`
+/// suppresses the named `timlint` rule for the whole item. Prefer the
+/// line-granular `// timlint::allow(rule): why` comment marker; use the
+/// attribute when every occurrence in the item shares one justification
+/// (state it in a doc comment or regular comment at the site).
+#[proc_macro_attribute]
+pub fn timlint_allow(_attr: TokenStream, item: TokenStream) -> TokenStream {
+    item
+}

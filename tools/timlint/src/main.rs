@@ -1,0 +1,73 @@
+//! timlint — repo-invariant static analysis for TiM-DNN.
+//!
+//! Usage: `cargo run -p timlint [DIR…]`. With no arguments it lints the
+//! crate's own `rust/src` tree. Exit status is 1 when any finding is
+//! reported, so CI can gate on it directly.
+//!
+//! The rules live in [`lint`] (shared with the root crate's
+//! `timlint_rules` integration test via `#[path]`).
+
+#![forbid(unsafe_code)]
+
+mod lint;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Collect `*.rs` files under `dir`, sorted for stable output.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(std::fs::DirEntry::file_name);
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+
+    let mut files = Vec::new();
+    for root in &roots {
+        if root.is_file() {
+            files.push(root.clone());
+        } else if let Err(e) = collect_rs(root, &mut files) {
+            eprintln!("timlint: cannot read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("timlint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        findings.extend(lint::lint_source(&path.display().to_string(), &src));
+    }
+
+    for f in &findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    if findings.is_empty() {
+        println!("timlint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("timlint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
