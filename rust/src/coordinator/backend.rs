@@ -46,8 +46,10 @@ pub trait ExecutorBackend: 'static {
 }
 
 /// Constructor run inside the engine's worker thread (backends need not
-/// be `Send`; the factory must be).
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn ExecutorBackend>> + Send + 'static>;
+/// be `Send`; the factory must be). `Fn`, not `FnOnce`: the supervisor
+/// calls it again to rebuild a backend after a panic discards the old
+/// one, so each call must produce an independent instance.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn ExecutorBackend>> + Send + 'static>;
 
 // ---------------------------------------------------------------------------
 // PJRT

@@ -9,6 +9,18 @@ use std::time::{Duration, Instant};
 
 use super::{Msg, Request};
 
+/// How far before a member's deadline the forming batch closes: enough
+/// margin that dispatch starts while the request can still make it,
+/// without giving up meaningful batching time.
+pub(crate) const DEADLINE_SLACK: Duration = Duration::from_micros(200);
+
+/// The latest instant a batch containing a request with deadline `d` may
+/// keep forming. Saturates to `d` itself if the slack cannot be
+/// subtracted (deadline at/near the epoch of `Instant`).
+fn close_by(d: Instant) -> Instant {
+    d.checked_sub(DEADLINE_SLACK).unwrap_or(d)
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
@@ -68,19 +80,30 @@ impl Batcher {
                 }
             }
         };
+        // A member's request deadline can only shrink the batching window:
+        // the batch closes early rather than hold anyone past their
+        // deadline (minus slack for dispatch).
+        let mut close_at = Instant::now() + self.policy.max_wait;
+        if let Some(d) = first.deadline {
+            close_at = close_at.min(close_by(d));
+        }
         // The worker reuses one Vec, so steady-state appends land in the
         // buffer's retained capacity.
         // timlint::allow(hot-path-alloc): append into retained capacity
         batch.push(first);
-        let deadline = Instant::now() + self.policy.max_wait;
         while batch.len() < self.policy.max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= close_at {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                // timlint::allow(hot-path-alloc): same retained-capacity append.
-                Ok(Msg::Req(r)) => batch.push(r),
+            match rx.recv_timeout(close_at - now) {
+                Ok(Msg::Req(r)) => {
+                    if let Some(d) = r.deadline {
+                        close_at = close_at.min(close_by(d));
+                    }
+                    // timlint::allow(hot-path-alloc): same retained-capacity append.
+                    batch.push(r);
+                }
                 Ok(Msg::Shutdown) => {
                     // Hand out what we have; next call returns false.
                     self.closed = true;
@@ -108,9 +131,21 @@ mod tests {
             id,
             inputs: vec![TensorF32::new(vec![1], vec![0.0])],
             submitted: Instant::now(),
+            deadline: None,
+            retries_left: 0,
             reply,
             guard: InflightGuard::adopt(Arc::new(AtomicUsize::new(1))),
         })
+    }
+
+    fn req_with_deadline(
+        id: u64,
+        reply: mpsc::Sender<crate::error::Result<Response>>,
+        deadline: Instant,
+    ) -> Msg {
+        let Msg::Req(mut r) = req(id, reply) else { unreachable!() };
+        r.deadline = Some(deadline);
+        Msg::Req(r)
     }
 
     #[test]
@@ -138,6 +173,47 @@ mod tests {
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn member_deadline_closes_batch_early() {
+        let (tx, rx) = mpsc::channel();
+        let (reply, _keep) = mpsc::channel();
+        // A 5 ms member deadline under a 2 s policy window: the batch must
+        // close on the deadline, not the policy timer.
+        tx.send(req_with_deadline(1, reply, Instant::now() + Duration::from_millis(5)))
+            .unwrap();
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(2) });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "batch held past the member deadline: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn later_member_can_shrink_the_window() {
+        let (tx, rx) = mpsc::channel();
+        let (reply, _keep) = mpsc::channel();
+        tx.send(req(1, reply.clone())).unwrap();
+        // The second member's deadline is tighter than the policy window;
+        // it must pull the close time in for the whole batch.
+        tx.send(req_with_deadline(2, reply, Instant::now() + Duration::from_millis(5)))
+            .unwrap();
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(2) });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "batch held past a member deadline: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The `Engine` facade: admission-controlled multi-model serving.
+//! The `Engine` facade: admission-controlled, supervised multi-model
+//! serving.
 //!
 //! One worker thread per registered model. Each worker constructs its
 //! backend in-thread (PJRT handles are not `Send`), clamps its batch
@@ -7,15 +8,29 @@
 //! charging padded lanes to metrics. Request ids are engine-global
 //! (`AtomicU64`); queue-depth admission is per model (`AtomicUsize`
 //! in-flight counters, released by each request's `InflightGuard` on
-//! every exit path). Failed batches answer each request with a typed
-//! `TimError` instead of dropping the reply channel.
+//! every exit path).
+//!
+//! Fault domains (see DESIGN.md "Fault domains & supervision"): batch
+//! execution runs under `catch_unwind`, so a panicking backend fails its
+//! batch with a typed error and is rebuilt from the model's
+//! `BackendFactory` with capped exponential backoff — the worker thread
+//! itself never dies to a backend fault. A per-model [`HealthCell`]
+//! tracks `Healthy → Degraded → Down`: after
+//! [`SupervisorPolicy::breaker_threshold`] consecutive failures the
+//! circuit breaker opens and submissions fast-fail with
+//! [`TimError::Unavailable`] until a cooldown elapses and a half-open
+//! probe succeeds. Requests may carry deadlines and retry budgets
+//! ([`SubmitOptions`]); expired requests are shed before dispatch with
+//! [`TimError::DeadlineExceeded`] so no simulated tile accesses are
+//! wasted on answers nobody can use.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Result, TimError};
 use crate::runtime::TensorF32;
@@ -25,7 +40,7 @@ use super::backend::{BackendFactory, ExecutorBackend};
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelRegistry, ModelSpec};
-use super::{Msg, Request, Response};
+use super::{lock_unpoisoned, Msg, Request, Response};
 
 /// Builder: collect specs, set the tile budget and default pool width,
 /// build the engine.
@@ -34,11 +49,12 @@ pub struct EngineBuilder {
     registry: ModelRegistry,
     tile_budget: Option<usize>,
     workers: usize,
+    supervisor: Option<SupervisorPolicy>,
 }
 
 impl EngineBuilder {
     pub fn new() -> Self {
-        Self { registry: ModelRegistry::new(), tile_budget: None, workers: 0 }
+        Self { registry: ModelRegistry::new(), tile_budget: None, workers: 0, supervisor: None }
     }
 
     /// Default data-parallel pool width for every model that doesn't set
@@ -47,6 +63,13 @@ impl EngineBuilder {
     /// default) means serial execution.
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    /// Default supervision policy for every model that doesn't set its
+    /// own (`ModelSpec::with_supervisor`).
+    pub fn supervisor(mut self, supervisor: SupervisorPolicy) -> Self {
+        self.supervisor = Some(supervisor);
         self
     }
 
@@ -87,9 +110,10 @@ impl EngineBuilder {
         }
         let next_id = Arc::new(AtomicU64::new(1));
         let default_workers = self.workers;
+        let default_supervisor = self.supervisor;
         let mut models = BTreeMap::new();
         for (name, spec) in self.registry.into_specs() {
-            models.insert(name, ModelWorker::spawn(spec, default_workers));
+            models.insert(name, ModelWorker::spawn(spec, default_workers, default_supervisor));
         }
         Ok(Engine { models, next_id })
     }
@@ -101,148 +125,556 @@ impl Default for EngineBuilder {
     }
 }
 
+/// A model's serving health, as the circuit breaker sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Last batch succeeded (or nothing has failed yet).
+    Healthy,
+    /// At least one recent failure, but below the breaker threshold —
+    /// submissions are still admitted.
+    Degraded,
+    /// Breaker open: consecutive failures reached the threshold (or the
+    /// worker gave up rebuilding its backend). Submissions fast-fail with
+    /// [`TimError::Unavailable`] until the cooldown elapses; then the
+    /// model is half-open and admits probes until the next batch outcome
+    /// closes (success) or re-opens (failure) the breaker.
+    Down,
+}
+
+impl std::fmt::Display for HealthState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Down => "down",
+        })
+    }
+}
+
+/// Supervision knobs: circuit breaker and backend-rebuild backoff.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorPolicy {
+    /// Consecutive batch/construction failures that open the breaker.
+    pub breaker_threshold: u32,
+    /// Initial cooldown while the breaker is open; doubles on every
+    /// re-open (capped at `max_backoff`) and resets on success.
+    pub breaker_cooldown: Duration,
+    /// Initial sleep before a backend rebuild; doubles per consecutive
+    /// failed construction attempt, capped at `max_backoff`.
+    pub restart_backoff: Duration,
+    /// Cap for both the rebuild backoff and the breaker cooldown.
+    pub max_backoff: Duration,
+    /// Consecutive failed construction attempts before the worker stops
+    /// rebuilding and the model goes permanently [`HealthState::Down`]
+    /// (queued and later requests get typed errors; shutdown still joins).
+    pub max_restarts: u32,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        Self {
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(100),
+            restart_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+            max_restarts: 8,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct HealthInner {
+    state: HealthState,
+    consecutive_failures: u32,
+    /// Next breaker cooldown (doubles per re-open, reset on success).
+    cooldown: Duration,
+    /// When Down: the instant half-open probing begins.
+    retry_at: Option<Instant>,
+    /// The worker gave up rebuilding — no more half-open probes.
+    permanent: bool,
+}
+
+/// Shared per-model health cell: the worker records batch outcomes, the
+/// sessions consult it for admission, callers can observe it via
+/// [`Engine::health`]/[`Session::health`].
+#[derive(Debug)]
+pub(crate) struct HealthCell {
+    policy: SupervisorPolicy,
+    inner: Mutex<HealthInner>,
+}
+
+impl HealthCell {
+    fn new(policy: SupervisorPolicy) -> Self {
+        Self {
+            policy,
+            inner: Mutex::new(HealthInner {
+                state: HealthState::Healthy,
+                consecutive_failures: 0,
+                cooldown: policy.breaker_cooldown,
+                retry_at: None,
+                permanent: false,
+            }),
+        }
+    }
+
+    pub(crate) fn state(&self) -> HealthState {
+        lock_unpoisoned(&self.inner).state
+    }
+
+    /// Admission check for one submission. Healthy/Degraded admit; Down
+    /// fast-fails until the cooldown elapses, after which the model is
+    /// half-open: probes are admitted (still Down) until the next batch
+    /// outcome resolves the state. Deliberately no single-probe latch — a
+    /// shed or expired probe must not wedge the breaker open forever.
+    fn admit(&self, model: &str) -> Result<()> {
+        let h = lock_unpoisoned(&self.inner);
+        if h.state != HealthState::Down {
+            return Ok(());
+        }
+        if h.permanent {
+            return Err(TimError::Unavailable {
+                model: model.to_string(),
+                state: HealthState::Down,
+                retry_after: h.cooldown,
+            });
+        }
+        match h.retry_at {
+            Some(t) => {
+                let now = Instant::now();
+                if now < t {
+                    Err(TimError::Unavailable {
+                        model: model.to_string(),
+                        state: HealthState::Down,
+                        retry_after: t - now,
+                    })
+                } else {
+                    Ok(()) // half-open: admit the probe
+                }
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// A batch completed: close the breaker and reset failure state.
+    fn on_success(&self) {
+        let mut h = lock_unpoisoned(&self.inner);
+        h.state = HealthState::Healthy;
+        h.consecutive_failures = 0;
+        h.cooldown = self.policy.breaker_cooldown;
+        h.retry_at = None;
+    }
+
+    /// A batch (or construction attempt) failed. Returns the new state
+    /// and consecutive-failure count for metrics.
+    fn on_failure(&self) -> (HealthState, u32) {
+        let mut h = lock_unpoisoned(&self.inner);
+        h.consecutive_failures += 1;
+        if h.consecutive_failures >= self.policy.breaker_threshold {
+            h.state = HealthState::Down;
+            h.retry_at = Some(Instant::now() + h.cooldown);
+            h.cooldown = (h.cooldown * 2).min(self.policy.max_backoff);
+        } else {
+            h.state = HealthState::Degraded;
+        }
+        (h.state, h.consecutive_failures)
+    }
+
+    /// The worker gave up rebuilding: open the breaker for good.
+    fn mark_permanently_down(&self) {
+        let mut h = lock_unpoisoned(&self.inner);
+        h.state = HealthState::Down;
+        h.permanent = true;
+        h.retry_at = None;
+    }
+}
+
+/// Per-request serving options for [`Session::submit_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Absolute deadline. An already-expired request is rejected at
+    /// submission; one that expires while queued is shed before dispatch
+    /// — both with [`TimError::DeadlineExceeded`].
+    pub deadline: Option<Instant>,
+    /// Worker-side re-executions after a failed batch (the request goes
+    /// to the back of the queue each time). 0 = fail on the first error.
+    pub retries: u32,
+}
+
+impl SubmitOptions {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Deadline relative to now.
+    pub fn with_deadline_in(self, budget: Duration) -> Self {
+        self.with_deadline(Instant::now() + budget)
+    }
+
+    pub fn with_retries(mut self, retries: u32) -> Self {
+        self.retries = retries;
+        self
+    }
+}
+
 /// Per-model worker handle.
 #[derive(Debug)]
 struct ModelWorker {
     tx: Sender<Msg>,
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Mutex<Metrics>>,
+    health: Arc<HealthCell>,
     inflight: Arc<AtomicUsize>,
     max_queue: usize,
 }
 
 impl ModelWorker {
-    fn spawn(spec: ModelSpec, default_workers: usize) -> Self {
-        let ModelSpec { name, hardware, policy, factory, max_queue, workers, .. } = spec;
+    fn spawn(
+        spec: ModelSpec,
+        default_workers: usize,
+        default_supervisor: Option<SupervisorPolicy>,
+    ) -> Self {
+        let ModelSpec { name, hardware, policy, factory, max_queue, workers, supervisor, .. } =
+            spec;
         // Per-model width wins; otherwise the engine default; 0 = nothing
         // was configured, and the backend keeps whatever width its factory
         // built it with (the worker skips the set_workers call).
         let pool_width = if workers > 0 { workers } else { default_workers };
+        let sup = supervisor.or(default_supervisor).unwrap_or_default();
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let health = Arc::new(HealthCell::new(sup));
         let inflight = Arc::new(AtomicUsize::new(0));
         let metrics_w = Arc::clone(&metrics);
+        let health_w = Arc::clone(&health);
+        let requeue = tx.clone();
         let handle = std::thread::Builder::new()
             .name(format!("timdnn-engine-{name}"))
             .spawn(move || {
-                worker_loop(&name, rx, factory, policy, hardware, metrics_w, pool_width)
+                Supervisor {
+                    name,
+                    factory,
+                    hardware,
+                    metrics: metrics_w,
+                    health: health_w,
+                    policy: sup,
+                    pool_width,
+                    requeue,
+                    backoff: sup.restart_backoff,
+                    ever_built: false,
+                }
+                .run(rx, policy)
             })
             .expect("spawn engine worker thread");
-        ModelWorker { tx, handle: Some(handle), metrics, inflight, max_queue }
+        ModelWorker { tx, handle: Some(handle), metrics, health, inflight, max_queue }
     }
 }
 
-/// The per-model serve loop (runs on the worker thread).
-fn worker_loop(
-    name: &str,
-    rx: Receiver<Msg>,
+/// Render a `catch_unwind` payload for the typed error reply.
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The per-model worker: batch drain loop plus the supervision wrapped
+/// around it (runs on the worker thread).
+struct Supervisor {
+    name: String,
     factory: BackendFactory,
-    mut policy: super::BatchPolicy,
     hardware: SimReport,
     metrics: Arc<Mutex<Metrics>>,
+    health: Arc<HealthCell>,
+    policy: SupervisorPolicy,
     pool_width: usize,
-) {
-    // Fail each batch's requests with a typed error (the engine stays up).
-    // Drains the shared batch buffer so its capacity is retained.
-    let fail_batch = |batch: &mut Vec<Request>, what: &str, reason: &str| {
-        for req in batch.drain(..) {
-            let Request { reply, guard, .. } = req;
-            drop(guard); // release the admission slot
-            let _ = reply.send(Err(TimError::Exec {
-                what: what.to_string(),
-                reason: reason.to_string(),
-            }));
-        }
-    };
-    let mut backend: Box<dyn ExecutorBackend> = match factory() {
-        Ok(b) => b,
-        Err(e) => {
-            // Dropping `rx` fails later submissions with `EngineStopped`;
-            // anything already queued is failed here, and every pending
-            // `InflightGuard` releases its admission slot on drop.
-            eprintln!("engine[{name}]: backend construction failed: {e}");
-            let reason = e.to_string();
-            let mut batcher = Batcher::new(policy);
-            let mut batch = Vec::new();
-            while batcher.next_batch_into(&rx, &mut batch) {
-                fail_batch(&mut batch, &format!("model '{name}' backend"), &reason);
+    /// Clone of the worker's own queue sender, used to push retryable
+    /// requests of a failed batch to the back of the queue.
+    requeue: Sender<Msg>,
+    /// Current rebuild backoff (doubles per failed construction attempt,
+    /// capped at `policy.max_backoff`, reset on batch success).
+    backoff: Duration,
+    /// Whether any backend was ever successfully constructed (so rebuilds
+    /// can be counted as restarts).
+    ever_built: bool,
+}
+
+impl Supervisor {
+    fn run(mut self, rx: Receiver<Msg>, mut policy: super::BatchPolicy) {
+        let mut batch: Vec<Request> = Vec::new();
+        let constructed = self.construct_backend();
+        if let Some(b) = &constructed {
+            // A fixed-batch backend caps how much a batch can hold;
+            // clamping here makes a policy/backend mismatch impossible by
+            // construction.
+            if let Some(fixed) = b.fixed_batch() {
+                policy.max_batch = policy.max_batch.min(fixed.max(1));
             }
+        }
+        let mut batcher = Batcher::new(policy);
+        let Some(mut backend) = constructed else {
+            self.drain_unavailable(&mut batcher, &rx, &mut batch);
+            Self::drain_stopped(&self.name, &rx);
             return;
-        }
-    };
-    // Hand the backend its configured data-parallel pool width (no-op for
-    // backends without intra-batch parallelism). Width 0 means nothing was
-    // configured — don't override a pool the factory may have sized itself.
-    if pool_width > 0 {
-        backend.set_workers(pool_width);
-    }
-    // A fixed-batch backend caps how much a batch can hold; clamping here
-    // makes a policy/backend mismatch impossible by construction.
-    if let Some(b) = backend.fixed_batch() {
-        policy.max_batch = policy.max_batch.min(b.max(1));
-    }
-    let mut batcher = Batcher::new(policy);
-    // One batch buffer reused across iterations: after warm-up its
-    // capacity is retained, so the steady-state drain loop allocates
-    // nothing per batch (see `Batcher::next_batch_into`).
-    let mut batch: Vec<Request> = Vec::new();
-    while batcher.next_batch_into(&rx, &mut batch) {
-        let real = batch.len();
-        let t0 = Instant::now();
-        // Move the tensors out instead of cloning — the reply loop below
-        // only needs id/submitted/reply/guard.
-        let mut inputs: Vec<Vec<TensorF32>> =
-            batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)).collect();
-        // Pad with copies of the first request's inputs only when the
-        // backend was compiled for a fixed batch.
-        let target = backend.fixed_batch().map_or(real, |b| b.max(real));
-        while inputs.len() < target {
-            let pad = inputs[0].clone();
-            inputs.push(pad);
-        }
-        let padded_lanes = inputs.len() - real;
-        let outputs = match backend.execute_batch(&inputs) {
-            Ok(o) => o,
-            Err(e) => {
-                eprintln!("engine[{name}]: batch execution failed: {e}");
-                fail_batch(&mut batch, &format!("model '{name}' batch"), &e.to_string());
+        };
+        // One batch buffer reused across iterations: after warm-up its
+        // capacity is retained, so the steady-state drain loop allocates
+        // nothing per batch (see `Batcher::next_batch_into`).
+        while batcher.next_batch_into(&rx, &mut batch) {
+            self.shed_expired(&mut batch);
+            if batch.is_empty() {
                 continue;
             }
-        };
-        if outputs.len() < real {
-            let reason =
-                format!("backend returned {} outputs for {} requests", outputs.len(), real);
-            eprintln!("engine[{name}]: {reason}");
-            fail_batch(&mut batch, &format!("model '{name}' batch"), &reason);
-            continue;
-        }
-        // Hardware accounting: the simulated accelerator processes the
-        // *real* requests back-to-back; padded lanes are free in the sim
-        // (the real array computes them, but no one is charged) and are
-        // excluded from every per-request metric.
-        let sim_latency_s = hardware.batch_latency_s(real);
-        let sim_energy_j = hardware.energy.total();
-        let host_exec = t0.elapsed();
-        let mut m = metrics.lock().unwrap();
-        m.record_padding(padded_lanes);
-        for (req, outs) in batch.drain(..).zip(outputs) {
-            // zip truncates at `real`: padded outputs are discarded here.
-            let Request { id, submitted, reply, guard, .. } = req;
-            let queued = t0.duration_since(submitted);
-            let resp = Response {
-                id,
-                outputs: outs,
-                queued,
-                e2e: submitted.elapsed(),
-                sim_latency_s,
-                sim_energy_j,
+            let real = batch.len();
+            let t0 = Instant::now();
+            // Move the tensors out instead of cloning — the reply loop
+            // below only needs id/submitted/reply/guard, and on failure
+            // `batch_failed` moves them back for requeued retries.
+            let mut inputs: Vec<Vec<TensorF32>> =
+                batch.iter_mut().map(|r| std::mem::take(&mut r.inputs)).collect();
+            // Pad with copies of the first request's inputs only when the
+            // backend was compiled for a fixed batch.
+            let target = backend.fixed_batch().map_or(real, |b| b.max(real));
+            while inputs.len() < target {
+                let pad = inputs[0].clone();
+                inputs.push(pad);
+            }
+            let padded_lanes = inputs.len() - real;
+            // The unwind boundary: a panicking backend fails its batch,
+            // not the worker. AssertUnwindSafe is sound because the only
+            // state the closure can leave inconsistent is the backend
+            // itself — which is discarded and rebuilt below.
+            let outcome = catch_unwind(AssertUnwindSafe(|| backend.execute_batch(&inputs)));
+            let outputs = match outcome {
+                Ok(Ok(outputs)) => {
+                    if outputs.len() < real {
+                        let reason = format!(
+                            "backend returned {} outputs for {} requests",
+                            outputs.len(),
+                            real
+                        );
+                        eprintln!("engine[{}]: {reason}", self.name);
+                        self.batch_failed(&mut batch, &mut inputs, &reason);
+                        continue;
+                    }
+                    if outputs.iter().take(real).any(Vec::is_empty) {
+                        let reason =
+                            "backend returned an empty output list for a request".to_string();
+                        eprintln!("engine[{}]: {reason}", self.name);
+                        self.batch_failed(&mut batch, &mut inputs, &reason);
+                        continue;
+                    }
+                    outputs
+                }
+                Ok(Err(e)) => {
+                    eprintln!("engine[{}]: batch execution failed: {e}", self.name);
+                    self.batch_failed(&mut batch, &mut inputs, &e.to_string());
+                    continue;
+                }
+                Err(payload) => {
+                    let reason = format!("backend panicked: {}", panic_reason(payload.as_ref()));
+                    eprintln!("engine[{}]: {reason}", self.name);
+                    self.batch_failed(&mut batch, &mut inputs, &reason);
+                    // The panicked backend may hold broken invariants —
+                    // discard it and rebuild from the factory.
+                    drop(backend);
+                    match self.construct_backend() {
+                        Some(b) => {
+                            backend = b;
+                            continue;
+                        }
+                        None => {
+                            self.drain_unavailable(&mut batcher, &rx, &mut batch);
+                            break;
+                        }
+                    }
+                }
             };
-            m.record(&resp, real, host_exec);
-            // Release the admission slot before the reply lands so a
-            // client that just received its response can immediately
-            // submit again without racing the counter.
-            drop(guard);
-            let _ = reply.send(Ok(resp));
+            // Hardware accounting: the simulated accelerator processes the
+            // *real* requests back-to-back; padded lanes are free in the
+            // sim (the real array computes them, but no one is charged)
+            // and are excluded from every per-request metric.
+            let sim_latency_s = self.hardware.batch_latency_s(real);
+            let sim_energy_j = self.hardware.energy.total();
+            let host_exec = t0.elapsed();
+            self.health.on_success();
+            self.backoff = self.policy.restart_backoff;
+            let mut m = lock_unpoisoned(&self.metrics);
+            m.record_batch_ok();
+            m.record_padding(padded_lanes);
+            for (req, outs) in batch.drain(..).zip(outputs) {
+                // zip truncates at `real`: padded outputs are discarded.
+                let Request { id, submitted, reply, guard, .. } = req;
+                let queued = t0.duration_since(submitted);
+                let resp = Response {
+                    id,
+                    outputs: outs,
+                    queued,
+                    e2e: submitted.elapsed(),
+                    sim_latency_s,
+                    sim_energy_j,
+                };
+                m.record(&resp, real, host_exec);
+                // Release the admission slot before the reply lands so a
+                // client that just received its response can immediately
+                // submit again without racing the counter.
+                drop(guard);
+                let _ = reply.send(Ok(resp));
+            }
+        }
+        // The queue may still hold requests that raced the shutdown
+        // marker (e.g. requeued retries): answer them with the typed
+        // EngineStopped so a dropped reply channel genuinely means "the
+        // worker crashed", never "shutdown raced you".
+        Self::drain_stopped(&self.name, &rx);
+    }
+
+    /// Build (or rebuild) the backend, retrying factory failures with
+    /// capped exponential backoff. `None` after `max_restarts`
+    /// consecutive failed attempts — the model is marked permanently
+    /// Down and the caller switches to drain mode.
+    fn construct_backend(&mut self) -> Option<Box<dyn ExecutorBackend>> {
+        let mut attempts: u32 = 0;
+        loop {
+            match (self.factory)() {
+                Ok(mut backend) => {
+                    // Hand the backend its configured data-parallel pool
+                    // width (no-op for backends without intra-batch
+                    // parallelism). Width 0 means nothing was configured —
+                    // don't override a pool the factory sized itself.
+                    if self.pool_width > 0 {
+                        backend.set_workers(self.pool_width);
+                    }
+                    if self.ever_built || attempts > 0 {
+                        lock_unpoisoned(&self.metrics).record_restart();
+                    }
+                    self.ever_built = true;
+                    return Some(backend);
+                }
+                Err(e) => {
+                    attempts += 1;
+                    eprintln!(
+                        "engine[{}]: backend construction failed (attempt {attempts}): {e}",
+                        self.name
+                    );
+                    let (_, consecutive) = self.health.on_failure();
+                    lock_unpoisoned(&self.metrics).record_construct_failure(consecutive);
+                    if attempts >= self.policy.max_restarts {
+                        self.health.mark_permanently_down();
+                        return None;
+                    }
+                    std::thread::sleep(self.backoff);
+                    self.backoff = (self.backoff * 2).min(self.policy.max_backoff);
+                }
+            }
+        }
+    }
+
+    /// Drop already-expired requests before dispatch; each gets the typed
+    /// [`TimError::DeadlineExceeded`] reply and releases its slot.
+    fn shed_expired(&self, batch: &mut Vec<Request>) {
+        let now = Instant::now();
+        let before = batch.len();
+        batch.retain(|req| {
+            let Some(d) = req.deadline else { return true };
+            if now < d {
+                return true;
+            }
+            let _ = req.reply.send(Err(TimError::DeadlineExceeded {
+                model: self.name.clone(),
+                missed_by: now.duration_since(d),
+            }));
+            false // dropping the request releases its InflightGuard
+        });
+        let shed = before - batch.len();
+        if shed > 0 {
+            lock_unpoisoned(&self.metrics).record_deadline_expired(shed);
+        }
+    }
+
+    /// Resolve every request of a failed batch: requeue those with
+    /// retries left (and an unexpired deadline), fail the rest with the
+    /// typed error. `inputs[i]` holds request *i*'s tensors, moved out
+    /// before dispatch; they are moved back so retries re-execute the
+    /// original request (padding lanes beyond the batch are dropped).
+    fn batch_failed(
+        &mut self,
+        batch: &mut Vec<Request>,
+        inputs: &mut Vec<Vec<TensorF32>>,
+        reason: &str,
+    ) {
+        let (_, consecutive) = self.health.on_failure();
+        lock_unpoisoned(&self.metrics).record_batch_failed(consecutive);
+        let now = Instant::now();
+        inputs.truncate(batch.len());
+        for (mut req, inp) in batch.drain(..).zip(inputs.drain(..)) {
+            req.inputs = inp;
+            let expired = req.deadline.is_some_and(|d| now >= d);
+            if req.retries_left > 0 && !expired {
+                req.retries_left -= 1;
+                // Cannot fail while this worker holds `rx`; recover the
+                // request and fail it in place if it somehow does.
+                if let Err(send_err) = self.requeue.send(Msg::Req(req)) {
+                    if let Msg::Req(req) = send_err.0 {
+                        self.reject(req, reason);
+                    }
+                }
+            } else {
+                self.reject(req, reason);
+            }
+        }
+    }
+
+    /// Fail one request with the batch's typed error.
+    fn reject(&self, req: Request, reason: &str) {
+        let Request { reply, guard, .. } = req;
+        drop(guard); // release the admission slot
+        let _ = reply.send(Err(TimError::Exec {
+            what: format!("model '{}' batch", self.name),
+            reason: reason.to_string(),
+        }));
+    }
+
+    /// Drain mode after the worker gave up rebuilding: answer everything
+    /// queued (and still arriving) with [`TimError::Unavailable`] until
+    /// shutdown, so the engine stays joinable and no request hangs.
+    fn drain_unavailable(
+        &self,
+        batcher: &mut Batcher,
+        rx: &Receiver<Msg>,
+        batch: &mut Vec<Request>,
+    ) {
+        while batcher.next_batch_into(rx, batch) {
+            let n = batch.len();
+            for req in batch.drain(..) {
+                let Request { reply, guard, .. } = req;
+                drop(guard);
+                let _ = reply.send(Err(TimError::Unavailable {
+                    model: self.name.clone(),
+                    state: HealthState::Down,
+                    retry_after: self.policy.breaker_cooldown,
+                }));
+            }
+            lock_unpoisoned(&self.metrics).record_shed(n);
+        }
+    }
+
+    /// Final drain after the batcher closed: requests that raced the
+    /// shutdown marker get the typed EngineStopped reply.
+    fn drain_stopped(name: &str, rx: &Receiver<Msg>) {
+        while let Ok(msg) = rx.try_recv() {
+            if let Msg::Req(req) = msg {
+                let Request { reply, guard, .. } = req;
+                drop(guard);
+                let _ = reply.send(Err(TimError::EngineStopped { model: name.to_string() }));
+            }
         }
     }
 }
@@ -275,8 +707,19 @@ impl Engine {
             tx: w.tx.clone(),
             next_id: Arc::clone(&self.next_id),
             inflight: Arc::clone(&w.inflight),
+            metrics: Arc::clone(&w.metrics),
+            health: Arc::clone(&w.health),
             max_queue: w.max_queue,
         })
+    }
+
+    /// Current health of one model's worker.
+    pub fn health(&self, model: &str) -> Result<HealthState> {
+        let w = self.models.get(model).ok_or_else(|| TimError::ModelNotFound {
+            name: model.to_string(),
+            available: self.models(),
+        })?;
+        Ok(w.health.state())
     }
 
     /// Current metrics snapshot for one model.
@@ -285,14 +728,14 @@ impl Engine {
             name: model.to_string(),
             available: self.models(),
         })?;
-        Ok(w.metrics.lock().unwrap().snapshot())
+        Ok(lock_unpoisoned(&w.metrics).snapshot())
     }
 
     /// Snapshots for every model.
     pub fn metrics_all(&self) -> BTreeMap<String, MetricsSnapshot> {
         self.models
             .iter()
-            .map(|(name, w)| (name.clone(), w.metrics.lock().unwrap().snapshot()))
+            .map(|(name, w)| (name.clone(), lock_unpoisoned(&w.metrics).snapshot()))
             .collect()
     }
 
@@ -309,20 +752,35 @@ impl Engine {
             if let Some(h) = w.handle.take() {
                 let _ = h.join();
             }
-            out.insert(name.clone(), w.metrics.lock().unwrap().snapshot());
+            out.insert(name.clone(), lock_unpoisoned(&w.metrics).snapshot());
         }
         out
     }
 }
 
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Dropping without `shutdown` must not leak worker threads: each
+        // worker holds a clone of its own queue sender (for retry
+        // requeues), so channel disconnect alone can no longer wake it —
+        // send the in-band marker instead. No-op after an orderly
+        // shutdown (the workers are gone and the send just fails).
+        for w in self.models.values() {
+            let _ = w.tx.send(Msg::Shutdown);
+        }
+    }
+}
+
 /// Handle for submitting requests to one model. Cheap to clone; clones
-/// share the model's queue and in-flight accounting.
+/// share the model's queue, health cell, and in-flight accounting.
 #[derive(Clone, Debug)]
 pub struct Session {
     model: String,
     tx: Sender<Msg>,
     next_id: Arc<AtomicU64>,
     inflight: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    health: Arc<HealthCell>,
     max_queue: usize,
 }
 
@@ -331,18 +789,60 @@ impl Session {
         &self.model
     }
 
+    /// Current health of this model's worker.
+    pub fn health(&self) -> HealthState {
+        self.health.state()
+    }
+
     /// Submit a single-input request; returns a receiver for the typed
     /// per-request outcome (`Ok(Response)` or the batch's `TimError`).
     /// Typed submission errors: [`TimError::QueueFull`] when the model's
-    /// in-flight cap is hit, [`TimError::EngineStopped`] after shutdown.
+    /// in-flight cap is hit, [`TimError::Unavailable`] while the circuit
+    /// breaker is open, [`TimError::EngineStopped`] after shutdown.
     pub fn submit(&self, input: TensorF32) -> Result<Receiver<Result<Response>>> {
         self.submit_multi(vec![input])
     }
 
+    /// [`Session::submit`] with per-request options (deadline, retries).
+    pub fn submit_with(
+        &self,
+        input: TensorF32,
+        opts: SubmitOptions,
+    ) -> Result<Receiver<Result<Response>>> {
+        self.submit_multi_with(vec![input], opts)
+    }
+
     /// Submit a multi-input request (e.g. `[x, h, c]` for an RNN cell).
     pub fn submit_multi(&self, inputs: Vec<TensorF32>) -> Result<Receiver<Result<Response>>> {
+        self.submit_multi_with(inputs, SubmitOptions::default())
+    }
+
+    /// Submit a multi-input request with per-request options.
+    pub fn submit_multi_with(
+        &self,
+        inputs: Vec<TensorF32>,
+        opts: SubmitOptions,
+    ) -> Result<Receiver<Result<Response>>> {
         if inputs.is_empty() {
             return Err(TimError::InputArity { expected: 1, got: 0 });
+        }
+        // An already-expired deadline is shed here — no queue slot, no
+        // worker time.
+        if let Some(d) = opts.deadline {
+            let now = Instant::now();
+            if now >= d {
+                lock_unpoisoned(&self.metrics).record_deadline_expired(1);
+                return Err(TimError::DeadlineExceeded {
+                    model: self.model.clone(),
+                    missed_by: now.duration_since(d),
+                });
+            }
+        }
+        // Circuit breaker: fast-fail while the model is Down (half-open
+        // probes pass once the cooldown elapses).
+        if let Err(e) = self.health.admit(&self.model) {
+            lock_unpoisoned(&self.metrics).record_shed(1);
+            return Err(e);
         }
         // Optimistic reservation keeps the check race-free across clones;
         // the guard adopts the reservation and releases it on drop,
@@ -359,7 +859,15 @@ impl Session {
         let guard = super::InflightGuard::adopt(Arc::clone(&self.inflight));
         let (reply, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, inputs, submitted: Instant::now(), reply, guard };
+        let req = Request {
+            id,
+            inputs,
+            submitted: Instant::now(),
+            deadline: opts.deadline,
+            retries_left: opts.retries,
+            reply,
+            guard,
+        };
         if self.tx.send(Msg::Req(req)).is_err() {
             // The SendError drops the request — and with it the guard.
             return Err(TimError::EngineStopped { model: self.model.clone() });
@@ -372,10 +880,104 @@ impl Session {
         self.infer_multi(vec![input])
     }
 
+    /// [`Session::infer`] with per-request options (deadline, retries).
+    pub fn infer_with(&self, input: TensorF32, opts: SubmitOptions) -> Result<Response> {
+        self.submit_multi_with(vec![input], opts)?.recv().map_err(|_| self.worker_died())?
+    }
+
     /// Submit a multi-input request and wait.
     pub fn infer_multi(&self, inputs: Vec<TensorF32>) -> Result<Response> {
-        self.submit_multi(inputs)?
-            .recv()
-            .map_err(|_| TimError::EngineStopped { model: self.model.clone() })?
+        self.submit_multi(inputs)?.recv().map_err(|_| self.worker_died())?
+    }
+
+    /// A dropped reply channel after a successful submit means the worker
+    /// died without answering — orderly shutdown always replies with
+    /// EngineStopped first (see `Supervisor::drain_stopped`). Surface it
+    /// as the distinct crash error, not a misleading "engine stopped".
+    fn worker_died(&self) -> TimError {
+        TimError::Exec {
+            what: format!("model '{}' worker", self.model),
+            reason: "reply channel dropped before a response (worker crashed mid-request)"
+                .to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_cell_walks_the_state_machine() {
+        let cell = HealthCell::new(SupervisorPolicy {
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(10),
+            ..SupervisorPolicy::default()
+        });
+        assert_eq!(cell.state(), HealthState::Healthy);
+        assert!(cell.admit("m").is_ok());
+
+        // One failure: Degraded, still admitting.
+        assert_eq!(cell.on_failure(), (HealthState::Degraded, 1));
+        assert!(cell.admit("m").is_ok());
+
+        // Threshold reached: Down, fast-failing with the typed error.
+        assert_eq!(cell.on_failure(), (HealthState::Down, 2));
+        match cell.admit("m") {
+            Err(TimError::Unavailable { model, state, retry_after }) => {
+                assert_eq!(model, "m");
+                assert_eq!(state, HealthState::Down);
+                assert!(retry_after <= Duration::from_millis(10));
+            }
+            other => panic!("expected Unavailable, got {other:?}"),
+        }
+
+        // After the cooldown: half-open, probes admitted (still Down).
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(cell.admit("m").is_ok());
+        assert_eq!(cell.state(), HealthState::Down);
+
+        // A success closes the breaker and resets the cooldown.
+        cell.on_success();
+        assert_eq!(cell.state(), HealthState::Healthy);
+        assert!(cell.admit("m").is_ok());
+    }
+
+    #[test]
+    fn breaker_cooldown_doubles_and_caps() {
+        let cell = HealthCell::new(SupervisorPolicy {
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_millis(400),
+            max_backoff: Duration::from_millis(600),
+            ..SupervisorPolicy::default()
+        });
+        cell.on_failure(); // opens; next cooldown 800ms -> capped to 600ms
+        {
+            let h = lock_unpoisoned(&cell.inner);
+            assert_eq!(h.cooldown, Duration::from_millis(600));
+        }
+        cell.on_success();
+        let h = lock_unpoisoned(&cell.inner);
+        assert_eq!(h.cooldown, Duration::from_millis(400), "success resets the cooldown");
+    }
+
+    #[test]
+    fn permanently_down_never_admits() {
+        let cell = HealthCell::new(SupervisorPolicy::default());
+        cell.mark_permanently_down();
+        assert_eq!(cell.state(), HealthState::Down);
+        assert!(matches!(cell.admit("m"), Err(TimError::Unavailable { .. })));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(matches!(cell.admit("m"), Err(TimError::Unavailable { .. })));
+    }
+
+    #[test]
+    fn submit_options_compose() {
+        let opts = SubmitOptions::new()
+            .with_deadline_in(Duration::from_millis(50))
+            .with_retries(2);
+        assert!(opts.deadline.is_some());
+        assert_eq!(opts.retries, 2);
+        assert!(SubmitOptions::default().deadline.is_none());
     }
 }

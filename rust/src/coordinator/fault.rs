@@ -1,0 +1,463 @@
+//! Deterministic fault injection for chaos-testing the serving path.
+//!
+//! The paper's reliability story is that TiM tiles compute correctly
+//! *through* analog noise and process variation (§V); this module holds
+//! the serving layer above the simulated array to the same standard. A
+//! [`FaultPlan`] is a seeded, reproducible schedule of faults; a
+//! [`FaultBackend`] wraps any inner [`ExecutorBackend`] and injects them:
+//!
+//! | [`FaultKind`]  | effect on the wrapped backend                        |
+//! |----------------|------------------------------------------------------|
+//! | `Error`        | `execute_batch` returns [`TimError::Exec`]           |
+//! | `Panic`        | `execute_batch` panics (exercises `catch_unwind`)    |
+//! | `ShortOutput`  | delegates, then drops the last output lane           |
+//! | `WrongArity`   | delegates, then empties every per-request output list|
+//! | `Latency`      | sleeps [`FaultPlan::latency`], then delegates        |
+//!
+//! Construction failures are scheduled separately
+//! ([`FaultPlan::fail_constructions`]): [`FaultBackend::new`] returns an
+//! error for the first *n* attempts, exercising the supervisor's
+//! rebuild-with-backoff path.
+//!
+//! Determinism: the decision for batch call *n* is a **pure function** of
+//! `(seed, plan, n)` — explicit [`FaultRule`]s are checked first, then a
+//! single uniform draw from a [`SplitMix64`]/[`Rng`] stream derived from
+//! `seed` and `n` decides the probabilistic faults. No shared RNG stream
+//! means thread timing, retries, and backend rebuilds cannot perturb the
+//! schedule: two runs with the same seed produce identical fault traces
+//! (see [`FaultInjector::trace`]), which `tests/engine_chaos.rs` asserts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Result, TimError};
+use crate::runtime::TensorF32;
+use crate::util::prng::{Rng, SplitMix64};
+
+use super::backend::ExecutorBackend;
+use super::lock_unpoisoned;
+
+/// What a scheduled fault does to the wrapped backend (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Error,
+    Panic,
+    ShortOutput,
+    WrongArity,
+    Latency,
+}
+
+impl FaultKind {
+    /// Whether this fault fails the batch (latency only slows it down).
+    pub fn is_failure(self) -> bool {
+        !matches!(self, FaultKind::Latency)
+    }
+}
+
+/// When an explicit [`FaultRule`] fires, in 1-based batch-call numbers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTrigger {
+    /// Every call `n` with `n % k == 0` (so `Every(3)` fires on 3, 6, …).
+    Every(u64),
+    /// Calls `1..=n`.
+    First(u64),
+    /// Exactly call `n`.
+    At(u64),
+}
+
+impl FaultTrigger {
+    pub fn matches(self, call: u64) -> bool {
+        match self {
+            FaultTrigger::Every(k) => k > 0 && call % k == 0,
+            FaultTrigger::First(n) => call <= n,
+            FaultTrigger::At(n) => call == n,
+        }
+    }
+}
+
+/// One explicit entry in the schedule; rules are checked in insertion
+/// order before any probabilistic draw.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    pub trigger: FaultTrigger,
+}
+
+/// A seeded, deterministic fault schedule. Build one with the chainable
+/// constructors, then [`FaultPlan::injector`] yields the shared handle a
+/// [`FaultBackend`] factory closure clones into each construction.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    p_error: f64,
+    p_panic: f64,
+    p_short: f64,
+    p_arity: f64,
+    p_latency: f64,
+    latency: Duration,
+    construct_failures: u64,
+}
+
+impl FaultPlan {
+    /// An empty schedule: no rules, all probabilities zero.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            rules: Vec::new(),
+            p_error: 0.0,
+            p_panic: 0.0,
+            p_short: 0.0,
+            p_arity: 0.0,
+            p_latency: 0.0,
+            latency: Duration::from_millis(1),
+            construct_failures: 0,
+        }
+    }
+
+    /// Add an explicit rule (checked before probabilistic draws).
+    pub fn inject(mut self, kind: FaultKind, trigger: FaultTrigger) -> Self {
+        self.rules.push(FaultRule { kind, trigger });
+        self
+    }
+
+    /// Shorthand: panic on every k-th batch call.
+    pub fn panic_every(self, k: u64) -> Self {
+        self.inject(FaultKind::Panic, FaultTrigger::Every(k))
+    }
+
+    /// Shorthand: exec error on the first n batch calls.
+    pub fn error_first(self, n: u64) -> Self {
+        self.inject(FaultKind::Error, FaultTrigger::First(n))
+    }
+
+    /// Per-call probabilities for each kind when no rule matches. The sum
+    /// should stay ≤ 1; anything beyond saturates to "always some fault".
+    pub fn with_probabilities(
+        mut self,
+        error: f64,
+        panic: f64,
+        short: f64,
+        arity: f64,
+        latency: f64,
+    ) -> Self {
+        self.p_error = error;
+        self.p_panic = panic;
+        self.p_short = short;
+        self.p_arity = arity;
+        self.p_latency = latency;
+        self
+    }
+
+    /// Sleep injected by [`FaultKind::Latency`] before delegating.
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Fail the first `n` [`FaultBackend::new`] attempts.
+    pub fn fail_constructions(mut self, n: u64) -> Self {
+        self.construct_failures = n;
+        self
+    }
+
+    pub fn latency(&self) -> Duration {
+        self.latency
+    }
+
+    /// The fault decision for batch call `n` (1-based): a pure function
+    /// of the plan and `n`, so the schedule survives rebuilds and thread
+    /// timing unchanged. Explicit rules win in insertion order; otherwise
+    /// one uniform draw per call selects among the probability knobs.
+    pub fn fault_at(&self, n: u64) -> Option<FaultKind> {
+        for rule in &self.rules {
+            if rule.trigger.matches(n) {
+                return Some(rule.kind);
+            }
+        }
+        let total = self.p_error + self.p_panic + self.p_short + self.p_arity + self.p_latency;
+        if total <= 0.0 {
+            return None;
+        }
+        // Derive a fresh stream from (seed, n): stateless by design.
+        let mut mix = SplitMix64::new(self.seed.wrapping_add(n));
+        let mut rng = Rng::seeded(mix.next_u64());
+        let u = rng.next_f64();
+        let mut acc = self.p_error;
+        if u < acc {
+            return Some(FaultKind::Error);
+        }
+        acc += self.p_panic;
+        if u < acc {
+            return Some(FaultKind::Panic);
+        }
+        acc += self.p_short;
+        if u < acc {
+            return Some(FaultKind::ShortOutput);
+        }
+        acc += self.p_arity;
+        if u < acc {
+            return Some(FaultKind::WrongArity);
+        }
+        acc += self.p_latency;
+        if u < acc {
+            return Some(FaultKind::Latency);
+        }
+        None
+    }
+
+    /// Shared injector handle over this plan.
+    pub fn injector(self) -> FaultInjector {
+        FaultInjector {
+            shared: Arc::new(InjectorShared {
+                plan: self,
+                calls: AtomicU64::new(0),
+                constructions: AtomicU64::new(0),
+                trace: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+}
+
+/// One observed injection decision, in the order it was made. Two runs of
+/// the same seeded workload produce identical traces — the reproducibility
+/// contract chaos tests assert.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Batch call `call` (1-based) and the fault injected into it, if any.
+    Batch { call: u64, injected: Option<FaultKind> },
+    /// [`FaultBackend::new`] attempt `attempt` (1-based) and whether it
+    /// was failed by the schedule.
+    Construction { attempt: u64, failed: bool },
+}
+
+#[derive(Debug)]
+struct InjectorShared {
+    plan: FaultPlan,
+    calls: AtomicU64,
+    constructions: AtomicU64,
+    trace: Mutex<Vec<FaultEvent>>,
+}
+
+/// Clonable handle shared between the test (which reads the trace) and
+/// every [`FaultBackend`] the factory constructs (which consume call and
+/// construction numbers from it).
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    shared: Arc<InjectorShared>,
+}
+
+impl FaultInjector {
+    pub fn plan(&self) -> &FaultPlan {
+        &self.shared.plan
+    }
+
+    /// Claim the next batch-call number, decide its fault, record both.
+    fn next_batch_fault(&self) -> (u64, Option<FaultKind>) {
+        let call = self.shared.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        let injected = self.shared.plan.fault_at(call);
+        lock_unpoisoned(&self.shared.trace).push(FaultEvent::Batch { call, injected });
+        (call, injected)
+    }
+
+    /// Claim the next construction attempt and whether the schedule fails
+    /// it (attempts `1..=fail_constructions` fail).
+    fn next_construction(&self) -> (u64, bool) {
+        let attempt = self.shared.constructions.fetch_add(1, Ordering::SeqCst) + 1;
+        let failed = attempt <= self.shared.plan.construct_failures;
+        lock_unpoisoned(&self.shared.trace).push(FaultEvent::Construction { attempt, failed });
+        (attempt, failed)
+    }
+
+    /// The full decision trace so far, in decision order.
+    pub fn trace(&self) -> Vec<FaultEvent> {
+        lock_unpoisoned(&self.shared.trace).clone()
+    }
+
+    /// Batch calls decided so far.
+    pub fn batch_calls(&self) -> u64 {
+        self.shared.calls.load(Ordering::SeqCst)
+    }
+
+    /// How many batch calls had `kind` injected.
+    pub fn injected(&self, kind: FaultKind) -> u64 {
+        lock_unpoisoned(&self.shared.trace)
+            .iter()
+            .filter(|e| matches!(e, FaultEvent::Batch { injected: Some(k), .. } if *k == kind))
+            .count() as u64
+    }
+
+    /// How many batch calls had a *failing* fault injected (everything
+    /// except [`FaultKind::Latency`]) — must equal the engine's
+    /// `batches_failed` counter when the inner backend is healthy.
+    pub fn failures_injected(&self) -> u64 {
+        lock_unpoisoned(&self.shared.trace)
+            .iter()
+            .filter(
+                |e| matches!(e, FaultEvent::Batch { injected: Some(k), .. } if k.is_failure()),
+            )
+            .count() as u64
+    }
+}
+
+/// [`ExecutorBackend`] decorator injecting the plan's faults around any
+/// inner backend. Factories clone a [`FaultInjector`] into each
+/// construction: `move || FaultBackend::new(Box::new(inner()), inj.clone()).map(Box::new)`.
+pub struct FaultBackend {
+    inner: Box<dyn ExecutorBackend>,
+    injector: FaultInjector,
+}
+
+impl FaultBackend {
+    /// Wrap `inner`; consumes one construction attempt from the schedule,
+    /// surfacing a scheduled failure as the factory error the supervisor
+    /// must back off and retry through.
+    pub fn new(inner: Box<dyn ExecutorBackend>, injector: FaultInjector) -> Result<Self> {
+        let (attempt, failed) = injector.next_construction();
+        if failed {
+            return Err(TimError::Exec {
+                what: "fault backend construction".to_string(),
+                reason: format!("injected construction failure (attempt #{attempt})"),
+            });
+        }
+        Ok(Self { inner, injector })
+    }
+}
+
+impl ExecutorBackend for FaultBackend {
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+        let (call, injected) = self.injector.next_batch_fault();
+        match injected {
+            None => self.inner.execute_batch(batch),
+            Some(FaultKind::Latency) => {
+                std::thread::sleep(self.injector.plan().latency());
+                self.inner.execute_batch(batch)
+            }
+            Some(FaultKind::Error) => Err(TimError::Exec {
+                what: "fault backend".to_string(),
+                reason: format!("injected exec error (batch call #{call})"),
+            }),
+            Some(FaultKind::Panic) => panic!("injected panic (batch call #{call})"),
+            Some(FaultKind::ShortOutput) => {
+                let mut out = self.inner.execute_batch(batch)?;
+                out.pop();
+                Ok(out)
+            }
+            Some(FaultKind::WrongArity) => {
+                let out = self.inner.execute_batch(batch)?;
+                Ok(out.into_iter().map(|_| Vec::new()).collect())
+            }
+        }
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        self.inner.fixed_batch()
+    }
+
+    fn set_workers(&mut self, workers: usize) {
+        self.inner.set_workers(workers);
+    }
+
+    fn name(&self) -> &str {
+        "fault"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SimOnlyBackend;
+    use super::*;
+
+    #[test]
+    fn triggers_match_expected_calls() {
+        assert!(FaultTrigger::Every(3).matches(3));
+        assert!(FaultTrigger::Every(3).matches(6));
+        assert!(!FaultTrigger::Every(3).matches(4));
+        assert!(!FaultTrigger::Every(0).matches(5), "Every(0) must never fire");
+        assert!(FaultTrigger::First(2).matches(1));
+        assert!(FaultTrigger::First(2).matches(2));
+        assert!(!FaultTrigger::First(2).matches(3));
+        assert!(FaultTrigger::At(7).matches(7));
+        assert!(!FaultTrigger::At(7).matches(8));
+    }
+
+    #[test]
+    fn fault_at_is_pure_and_seed_deterministic() {
+        let plan = FaultPlan::new(42).with_probabilities(0.2, 0.1, 0.05, 0.05, 0.1);
+        let twin = FaultPlan::new(42).with_probabilities(0.2, 0.1, 0.05, 0.05, 0.1);
+        let a: Vec<_> = (1..=200).map(|n| plan.fault_at(n)).collect();
+        let b: Vec<_> = (1..=200).map(|n| twin.fault_at(n)).collect();
+        assert_eq!(a, b);
+        // The schedule actually injects something at these probabilities,
+        // and a different seed yields a different schedule.
+        assert!(a.iter().any(Option::is_some));
+        assert!(a.iter().any(Option::is_none));
+        let other = FaultPlan::new(43).with_probabilities(0.2, 0.1, 0.05, 0.05, 0.1);
+        let c: Vec<_> = (1..=200).map(|n| other.fault_at(n)).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rules_win_over_probability_draws() {
+        let plan = FaultPlan::new(1)
+            .inject(FaultKind::Panic, FaultTrigger::At(5))
+            .with_probabilities(1.0, 0.0, 0.0, 0.0, 0.0);
+        assert_eq!(plan.fault_at(5), Some(FaultKind::Panic));
+        assert_eq!(plan.fault_at(4), Some(FaultKind::Error));
+    }
+
+    #[test]
+    fn injector_records_batch_and_construction_events() {
+        let injector = FaultPlan::new(9)
+            .error_first(1)
+            .fail_constructions(1)
+            .injector();
+        // First construction fails per schedule…
+        let err = FaultBackend::new(Box::new(SimOnlyBackend::new()), injector.clone())
+            .err()
+            .expect("first construction must fail");
+        assert!(err.to_string().contains("injected construction failure"), "{err}");
+        // …the retry succeeds.
+        let mut backend =
+            FaultBackend::new(Box::new(SimOnlyBackend::new()), injector.clone()).unwrap();
+        let input = vec![vec![TensorF32::new(vec![1], vec![1.0])]];
+        assert!(backend.execute_batch(&input).is_err(), "call 1 is an injected error");
+        assert!(backend.execute_batch(&input).is_ok(), "call 2 is clean");
+        assert_eq!(
+            injector.trace(),
+            vec![
+                FaultEvent::Construction { attempt: 1, failed: true },
+                FaultEvent::Construction { attempt: 2, failed: false },
+                FaultEvent::Batch { call: 1, injected: Some(FaultKind::Error) },
+                FaultEvent::Batch { call: 2, injected: None },
+            ]
+        );
+        assert_eq!(injector.batch_calls(), 2);
+        assert_eq!(injector.failures_injected(), 1);
+        assert_eq!(injector.injected(FaultKind::Error), 1);
+    }
+
+    #[test]
+    fn short_and_wrong_arity_mutate_delegated_output() {
+        let injector = FaultPlan::new(0)
+            .inject(FaultKind::ShortOutput, FaultTrigger::At(1))
+            .inject(FaultKind::WrongArity, FaultTrigger::At(2))
+            .injector();
+        let mut backend =
+            FaultBackend::new(Box::new(SimOnlyBackend::new()), injector).unwrap();
+        let batch = vec![
+            vec![TensorF32::new(vec![1], vec![1.0])],
+            vec![TensorF32::new(vec![1], vec![2.0])],
+        ];
+        let short = backend.execute_batch(&batch).unwrap();
+        assert_eq!(short.len(), 1, "ShortOutput drops one lane");
+        let arity = backend.execute_batch(&batch).unwrap();
+        assert_eq!(arity.len(), 2);
+        assert!(arity.iter().all(Vec::is_empty), "WrongArity empties each lane");
+        // Clean pass-through afterwards.
+        let clean = backend.execute_batch(&batch).unwrap();
+        assert_eq!(clean.len(), 2);
+        assert_eq!(clean[0][0].data, vec![1.0]);
+    }
+}

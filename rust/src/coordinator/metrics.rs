@@ -17,6 +17,12 @@ pub struct Metrics {
     sim_energy_j: f64,
     completed: u64,
     padded_lanes: u64,
+    batches_failed: u64,
+    requests_shed: u64,
+    deadline_expired: u64,
+    worker_restarts: u64,
+    construct_failures: u64,
+    consecutive_failures: u64,
 }
 
 impl Metrics {
@@ -31,6 +37,12 @@ impl Metrics {
             sim_energy_j: 0.0,
             completed: 0,
             padded_lanes: 0,
+            batches_failed: 0,
+            requests_shed: 0,
+            deadline_expired: 0,
+            worker_restarts: 0,
+            construct_failures: 0,
+            consecutive_failures: 0,
         }
     }
 
@@ -53,6 +65,42 @@ impl Metrics {
         self.padded_lanes += lanes as u64;
     }
 
+    /// One failed batch (exec error, invalid output shape, or panic).
+    /// `consecutive` mirrors the health cell's running failure count.
+    pub fn record_batch_failed(&mut self, consecutive: u32) {
+        self.batches_failed += 1;
+        self.consecutive_failures = u64::from(consecutive);
+    }
+
+    /// A successful batch resets the consecutive-failure gauge.
+    pub fn record_batch_ok(&mut self) {
+        self.consecutive_failures = 0;
+    }
+
+    /// Requests rejected without execution: circuit breaker open, or the
+    /// worker permanently down.
+    pub fn record_shed(&mut self, n: usize) {
+        self.requests_shed += n as u64;
+    }
+
+    /// Requests dropped because their deadline passed before dispatch
+    /// (at submission or in the worker's pre-dispatch shed).
+    pub fn record_deadline_expired(&mut self, n: usize) {
+        self.deadline_expired += n as u64;
+    }
+
+    /// A replacement backend came up after a panic or a failed
+    /// construction — the worker restarted its executor.
+    pub fn record_restart(&mut self) {
+        self.worker_restarts += 1;
+    }
+
+    /// One failed backend-construction attempt (initial build or rebuild).
+    pub fn record_construct_failure(&mut self, consecutive: u32) {
+        self.construct_failures += 1;
+        self.consecutive_failures = u64::from(consecutive);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let pct = |xs: &Vec<f64>, q| if xs.is_empty() { 0.0 } else { percentile(xs, q) };
         MetricsSnapshot {
@@ -70,6 +118,12 @@ impl Metrics {
             sim_latency_p50_s: pct(&self.sim_latency_s, 50.0),
             sim_energy_total_j: self.sim_energy_j,
             padded_lanes: self.padded_lanes,
+            batches_failed: self.batches_failed,
+            requests_shed: self.requests_shed,
+            deadline_expired: self.deadline_expired,
+            worker_restarts: self.worker_restarts,
+            construct_failures: self.construct_failures,
+            consecutive_failures: self.consecutive_failures,
         }
     }
 }
@@ -95,6 +149,22 @@ pub struct MetricsSnapshot {
     /// Lanes added to fill fixed-size executor batches (never counted as
     /// completions or charged energy).
     pub padded_lanes: u64,
+    /// Batches that failed (exec error, invalid output shape, or panic);
+    /// every member got a typed error or was requeued for retry.
+    pub batches_failed: u64,
+    /// Requests fast-failed without execution ([`crate::TimError::Unavailable`]).
+    pub requests_shed: u64,
+    /// Requests shed because their deadline passed before dispatch
+    /// ([`crate::TimError::DeadlineExceeded`]).
+    pub deadline_expired: u64,
+    /// Backends successfully reconstructed after a panic or construction
+    /// failure.
+    pub worker_restarts: u64,
+    /// Failed backend-construction attempts (initial build or rebuild).
+    pub construct_failures: u64,
+    /// Gauge: the model's consecutive batch/construction failures at
+    /// snapshot time (0 after any success — mirrors the circuit breaker).
+    pub consecutive_failures: u64,
 }
 
 impl MetricsSnapshot {
@@ -119,6 +189,18 @@ impl MetricsSnapshot {
         println!("  queue p95            {:.3} ms", self.queue_p95_s * 1e3);
         println!("  mean batch           {:.2}", self.mean_batch);
         println!("  padded lanes         {}", self.padded_lanes);
+        if self.batches_failed + self.requests_shed + self.deadline_expired > 0
+            || self.worker_restarts + self.construct_failures > 0
+        {
+            println!(
+                "  robustness           {} batches failed, {} shed, {} past deadline",
+                self.batches_failed, self.requests_shed, self.deadline_expired
+            );
+            println!(
+                "  worker restarts      {} ({} construction failures)",
+                self.worker_restarts, self.construct_failures
+            );
+        }
         println!("  sim hw latency p50   {:.3} us", self.sim_latency_p50_s * 1e6);
         println!(
             "  sim hw energy        {:.3} uJ total ({:.3} uJ/inf)",
@@ -160,5 +242,28 @@ mod tests {
         assert!(s.throughput() > 0.0);
         // Padding is visible in the snapshot but never in completions.
         assert_eq!(s.padded_lanes, 3);
+    }
+
+    #[test]
+    fn robustness_counters_accumulate_and_gauge_resets() {
+        let mut m = Metrics::new();
+        m.record_batch_failed(1);
+        m.record_batch_failed(2);
+        m.record_shed(3);
+        m.record_deadline_expired(2);
+        m.record_restart();
+        m.record_construct_failure(3);
+        let s = m.snapshot();
+        assert_eq!(s.batches_failed, 2);
+        assert_eq!(s.requests_shed, 3);
+        assert_eq!(s.deadline_expired, 2);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.construct_failures, 1);
+        assert_eq!(s.consecutive_failures, 3);
+        // Any success resets the gauge, never the counters.
+        m.record_batch_ok();
+        let s = m.snapshot();
+        assert_eq!(s.consecutive_failures, 0);
+        assert_eq!(s.batches_failed, 2);
     }
 }

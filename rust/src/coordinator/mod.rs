@@ -22,10 +22,18 @@
 //! Everything is std-only (threads + channels): the offline build
 //! environment has no tokio, and the workload is compute-bound anyway.
 //! Errors on the request path are typed ([`crate::TimError`]).
+//!
+//! The serving path is supervised: each worker survives backend panics
+//! (`catch_unwind` + factory rebuild with capped backoff), tracks a
+//! per-model health state machine with a circuit breaker
+//! ([`HealthState`], [`SupervisorPolicy`]), and sheds expired requests
+//! ([`SubmitOptions`] deadlines). [`FaultPlan`]/[`FaultBackend`] inject
+//! deterministic faults for chaos testing (`tests/engine_chaos.rs`).
 
 mod backend;
 mod batcher;
 mod engine;
+mod fault;
 mod metrics;
 mod registry;
 
@@ -33,7 +41,12 @@ pub use backend::{
     BackendFactory, ExecutorBackend, FunctionalBackend, PjrtBackend, SimOnlyBackend,
 };
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, EngineBuilder, Session};
+pub use engine::{
+    Engine, EngineBuilder, HealthState, Session, SubmitOptions, SupervisorPolicy,
+};
+pub use fault::{
+    FaultBackend, FaultEvent, FaultInjector, FaultKind, FaultPlan, FaultRule, FaultTrigger,
+};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use registry::{ModelRegistry, ModelSpec};
 // Verifier types most spec-building callers need (see `crate::verify`).
@@ -41,10 +54,19 @@ pub use crate::verify::{NoisePolicy, ProgramAudit};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::runtime::TensorF32;
+
+/// Lock a mutex, recovering the data if a panicking thread poisoned it.
+/// The supervisor's whole job is to outlive backend panics, so poison
+/// must never cascade into `Engine::metrics`/`shutdown` callers — the
+/// guarded state (metric counters, health) stays consistent because
+/// every writer updates it atomically under the lock.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// RAII admission slot: decrements the model's in-flight counter when the
 /// request leaves the system — reply sent, batch dropped on failure, or
@@ -72,6 +94,13 @@ pub struct Request {
     pub id: u64,
     pub inputs: Vec<TensorF32>,
     pub submitted: Instant,
+    /// Absolute deadline: the worker sheds the request with
+    /// [`crate::TimError::DeadlineExceeded`] instead of dispatching it
+    /// late, and the batcher closes a forming batch early rather than
+    /// hold a member past its deadline.
+    pub deadline: Option<Instant>,
+    /// Worker-side re-executions left after a failed batch.
+    pub(crate) retries_left: u32,
     reply: Sender<crate::error::Result<Response>>,
     pub(crate) guard: InflightGuard,
 }
@@ -189,7 +218,9 @@ mod tests {
         let probe = Arc::clone(&seen);
         let engine = Engine::builder()
             .workers(3)
-            .register(ModelSpec::new("m", hw(), move || Ok(Box::new(WorkerProbe(probe)))))
+            .register(ModelSpec::new("m", hw(), move || {
+                Ok(Box::new(WorkerProbe(Arc::clone(&probe))))
+            }))
             .unwrap()
             .build()
             .unwrap();
@@ -204,8 +235,10 @@ mod tests {
         let engine = Engine::builder()
             .workers(3)
             .register(
-                ModelSpec::new("m", hw(), move || Ok(Box::new(WorkerProbe(probe))))
-                    .with_workers(5),
+                ModelSpec::new("m", hw(), move || {
+                    Ok(Box::new(WorkerProbe(Arc::clone(&probe))))
+                })
+                .with_workers(5),
             )
             .unwrap()
             .build()

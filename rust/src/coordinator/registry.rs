@@ -18,6 +18,7 @@ use crate::verify::{NoisePolicy, ProgramAudit};
 
 use super::backend::{BackendFactory, ExecutorBackend};
 use super::batcher::BatchPolicy;
+use super::engine::SupervisorPolicy;
 
 /// Everything the engine needs to serve one model.
 pub struct ModelSpec {
@@ -46,6 +47,10 @@ pub struct ModelSpec {
     /// may attach one with [`ModelSpec::with_audit`] (or leave `None` to
     /// skip the program-shape checks).
     pub audit: Option<ProgramAudit>,
+    /// Per-model supervision knobs (circuit breaker, restart backoff);
+    /// `None` = inherit the engine default ([`SupervisorPolicy::default`]
+    /// unless `EngineBuilder::supervisor` overrides it).
+    pub supervisor: Option<SupervisorPolicy>,
     pub(crate) factory: BackendFactory,
 }
 
@@ -55,7 +60,7 @@ impl ModelSpec {
     pub fn new<B, F>(name: &str, hardware: SimReport, factory: F) -> Self
     where
         B: ExecutorBackend,
-        F: FnOnce() -> Result<Box<B>> + Send + 'static,
+        F: Fn() -> Result<Box<B>> + Send + 'static,
     {
         Self {
             name: name.to_string(),
@@ -66,6 +71,7 @@ impl ModelSpec {
             workers: 0,
             noise: NoisePolicy::default(),
             audit: None,
+            supervisor: None,
             factory: Box::new(move || {
                 let backend: Box<dyn ExecutorBackend> = factory()?;
                 Ok(backend)
@@ -78,7 +84,7 @@ impl ModelSpec {
     pub fn for_network<B, F>(name: &str, net: &Network, arch: &ArchConfig, factory: F) -> Self
     where
         B: ExecutorBackend,
-        F: FnOnce() -> Result<Box<B>> + Send + 'static,
+        F: Fn() -> Result<Box<B>> + Send + 'static,
     {
         let prog = crate::mapper::map_network(net, arch);
         let tiles = prog.max_tiles_used();
@@ -124,6 +130,13 @@ impl ModelSpec {
     /// Attach a static program audit for registration-time verification.
     pub fn with_audit(mut self, audit: ProgramAudit) -> Self {
         self.audit = Some(audit);
+        self
+    }
+
+    /// Override this model's supervision policy (circuit-breaker
+    /// threshold/cooldown, restart backoff, max restarts).
+    pub fn with_supervisor(mut self, supervisor: SupervisorPolicy) -> Self {
+        self.supervisor = Some(supervisor);
         self
     }
 }

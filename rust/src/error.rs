@@ -9,6 +9,9 @@
 
 use std::fmt;
 use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coordinator::HealthState;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, TimError>;
@@ -47,6 +50,16 @@ pub enum TimError {
     Verify { model: String, layer: String, check: &'static str, detail: String },
     /// A backend/runtime execution failure.
     Exec { what: String, reason: String },
+    /// The model's circuit breaker is open: the worker accumulated too
+    /// many consecutive batch failures (or gave up rebuilding its
+    /// backend) and submissions are fast-failed without queueing.
+    /// `retry_after` is the remaining cooldown before the next half-open
+    /// probe is admitted.
+    Unavailable { model: String, state: HealthState, retry_after: Duration },
+    /// The request's deadline passed before it could be served; it was
+    /// shed without spending any (simulated) tile accesses. `missed_by`
+    /// is how far past the deadline the request was when shed.
+    DeadlineExceeded { model: String, missed_by: Duration },
     /// Invalid configuration or CLI usage.
     InvalidConfig(String),
     /// Underlying I/O failure.
@@ -95,6 +108,16 @@ impl fmt::Display for TimError {
                 write!(f, "verification failed for '{model}' layer '{layer}' [{check}]: {detail}")
             }
             TimError::Exec { what, reason } => write!(f, "{what}: {reason}"),
+            TimError::Unavailable { model, state, retry_after } => {
+                write!(
+                    f,
+                    "model '{model}' unavailable ({state}): circuit breaker open, \
+                     retry after {retry_after:?}"
+                )
+            }
+            TimError::DeadlineExceeded { model, missed_by } => {
+                write!(f, "deadline exceeded for '{model}': shed {missed_by:?} past deadline")
+            }
             TimError::InvalidConfig(msg) => write!(f, "{msg}"),
             TimError::Io(e) => write!(f, "io error: {e}"),
         }
@@ -153,6 +176,24 @@ mod tests {
         assert!(s.contains("fc1"), "{s}");
         assert!(s.contains("acc-overflow"), "{s}");
         assert!(s.contains('m'), "{s}");
+    }
+
+    #[test]
+    fn unavailable_display_names_state_and_cooldown() {
+        let e = TimError::Unavailable {
+            model: "m".into(),
+            state: HealthState::Down,
+            retry_after: Duration::from_millis(250),
+        };
+        let s = e.to_string();
+        assert!(s.contains("down"), "{s}");
+        assert!(s.contains("circuit breaker"), "{s}");
+
+        let e = TimError::DeadlineExceeded {
+            model: "m".into(),
+            missed_by: Duration::from_millis(3),
+        };
+        assert!(e.to_string().contains("deadline"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,434 @@
+//! Chaos matrix for the supervised engine (ISSUE 7): a seeded
+//! [`FaultBackend`] injects errors, panics, short/wrong-arity outputs,
+//! and latency on a deterministic schedule, and these tests assert the
+//! robustness contract:
+//!
+//! * the engine never hangs — every submission resolves to a typed reply
+//!   within a bound;
+//! * the worker restarts its backend after panics, and the
+//!   `worker_restarts`/`batches_failed` counters match the injected
+//!   schedule exactly;
+//! * two runs with the same seed produce identical fault traces;
+//! * the circuit breaker opens after N consecutive failures
+//!   (`TimError::Unavailable`) and closes after a successful half-open
+//!   probe;
+//! * expired requests are shed with `TimError::DeadlineExceeded`.
+//!
+//! The probabilistic matrix reads `TIMDNN_CHAOS_SEED` (CI sweeps several
+//! fixed seeds); everything else pins its own seed.
+
+use std::sync::{Arc, Barrier, Once};
+use std::time::{Duration, Instant};
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{
+    BatchPolicy, Engine, FaultBackend, FaultEvent, FaultInjector, FaultKind, FaultPlan,
+    FaultTrigger, HealthState, ModelSpec, SimOnlyBackend, SubmitOptions, SupervisorPolicy,
+};
+use timdnn::model;
+use timdnn::runtime::TensorF32;
+use timdnn::TimError;
+
+/// A hang is a test failure, not a wait.
+const RECV_BOUND: Duration = Duration::from_secs(30);
+
+/// Silence the default panic-hook backtrace for *injected* panics only —
+/// the supervisor catches them by design and dozens of expected
+/// backtraces would bury a real failure. Anything else still prints.
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .is_some_and(|s| s.contains("injected panic"));
+            if !injected {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("TIMDNN_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+fn input(i: usize) -> TensorF32 {
+    TensorF32::new(vec![2], vec![i as f32, -1.0])
+}
+
+/// Engine with one model served through a `FaultBackend` over the echo
+/// backend, per-test policy/supervision.
+fn fault_engine(
+    injector: &FaultInjector,
+    policy: BatchPolicy,
+    supervisor: SupervisorPolicy,
+) -> Engine {
+    let inj = injector.clone();
+    let spec = ModelSpec::for_network("m", &model::tiny_cnn(), &ArchConfig::tim_dnn(), move || {
+        FaultBackend::new(Box::new(SimOnlyBackend::new()), inj.clone()).map(Box::new)
+    })
+    .with_policy(policy)
+    .with_supervisor(supervisor);
+    Engine::builder().register(spec).unwrap().build().unwrap()
+}
+
+/// Acceptance criterion: panic every k-th batch under a fixed seed — no
+/// hang, typed replies following the schedule exactly, restart counters
+/// exact, and the same seed reproduces the identical fault trace.
+#[test]
+fn panic_every_kth_batch_is_supervised_and_reproducible() {
+    quiet_injected_panics();
+    const K: u64 = 3;
+    // Ends on a success (13 % 3 != 0) so the consecutive-failure gauge
+    // must read 0 at shutdown.
+    const M: u64 = 13;
+
+    let run = || {
+        let injector = FaultPlan::new(41).panic_every(K).injector();
+        let engine = fault_engine(
+            &injector,
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+            SupervisorPolicy {
+                // Keep the breaker out of the picture: panics spaced K
+                // apart never accumulate, so health must oscillate
+                // Degraded -> Healthy without ever opening.
+                breaker_threshold: 100,
+                restart_backoff: Duration::from_micros(200),
+                ..SupervisorPolicy::default()
+            },
+        );
+        let session = engine.session("m").unwrap();
+        let mut outcomes = Vec::new();
+        for i in 0..M {
+            match session.infer(input(i as usize)) {
+                Ok(resp) => {
+                    assert_eq!(resp.output().data[0], i as f32, "echo must match request");
+                    assert_eq!(engine.health("m").unwrap(), HealthState::Healthy);
+                    outcomes.push(true);
+                }
+                Err(TimError::Exec { reason, .. }) => {
+                    assert!(reason.contains("injected panic"), "unexpected reason: {reason}");
+                    assert_eq!(engine.health("m").unwrap(), HealthState::Degraded);
+                    outcomes.push(false);
+                }
+                Err(other) => panic!("expected Ok or Exec, got {other:?}"),
+            }
+        }
+        let snaps = engine.shutdown();
+        (injector.trace(), snaps["m"], outcomes)
+    };
+
+    let (trace, snap, outcomes) = run();
+    let panics = M / K;
+    // Sequential max_batch=1 workload: request i+1 is batch call i+1, so
+    // the schedule maps 1:1 onto per-request outcomes.
+    for (i, ok) in outcomes.iter().enumerate() {
+        assert_eq!(*ok, (i as u64 + 1) % K != 0, "request {i} disagrees with the schedule");
+    }
+    assert_eq!(snap.batches_failed, panics, "batches_failed must match the schedule");
+    assert_eq!(snap.worker_restarts, panics, "every panic must rebuild the backend");
+    assert_eq!(snap.completed, M - panics);
+    assert_eq!(snap.construct_failures, 0);
+    assert_eq!(snap.consecutive_failures, 0, "the run ends on a success");
+
+    // Same seed, same workload => identical fault trace and outcomes.
+    let (trace2, _, outcomes2) = run();
+    assert_eq!(trace, trace2, "same seed must reproduce the exact fault trace");
+    assert_eq!(outcomes, outcomes2);
+}
+
+/// Acceptance criterion: the breaker opens after N consecutive failures
+/// with the typed `Unavailable`, and closes after a successful half-open
+/// probe once the cooldown elapses.
+#[test]
+fn breaker_opens_after_n_failures_and_closes_on_probe() {
+    const N: u32 = 3;
+    let injector = FaultPlan::new(5).error_first(u64::from(N)).injector();
+    let engine = fault_engine(
+        &injector,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+        SupervisorPolicy {
+            breaker_threshold: N,
+            breaker_cooldown: Duration::from_millis(20),
+            ..SupervisorPolicy::default()
+        },
+    );
+    let session = engine.session("m").unwrap();
+
+    // The first N batches fail with the injected exec error; health walks
+    // Degraded -> Degraded -> Down.
+    for i in 0..N {
+        match session.infer(input(i as usize)) {
+            Err(TimError::Exec { reason, .. }) => {
+                assert!(reason.contains("injected exec error"), "{reason}");
+            }
+            other => panic!("expected the injected Exec error, got {other:?}"),
+        }
+    }
+    assert_eq!(engine.health("m").unwrap(), HealthState::Down);
+
+    // Open breaker: submissions fast-fail with the typed Unavailable.
+    match session.submit(input(99)) {
+        Err(TimError::Unavailable { model, state, retry_after }) => {
+            assert_eq!(model, "m");
+            assert_eq!(state, HealthState::Down);
+            assert!(retry_after <= Duration::from_millis(20), "retry_after {retry_after:?}");
+        }
+        other => panic!("expected Unavailable, got {other:?}"),
+    }
+    assert_eq!(session.health(), HealthState::Down);
+
+    // After the cooldown a half-open probe is admitted; the fault
+    // schedule is exhausted, so it succeeds and closes the breaker.
+    std::thread::sleep(Duration::from_millis(25));
+    session.infer(input(100)).expect("half-open probe must succeed and close the breaker");
+    assert_eq!(engine.health("m").unwrap(), HealthState::Healthy);
+
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.batches_failed, u64::from(N));
+    assert_eq!(snap.requests_shed, 1, "exactly the fast-failed submission");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.consecutive_failures, 0);
+}
+
+/// Scheduled construction failures exercise rebuild-with-backoff: the
+/// worker retries the factory, counts each failed attempt, and serves
+/// normally once construction succeeds.
+#[test]
+fn construction_failures_retry_with_backoff_then_serve() {
+    quiet_injected_panics();
+    let injector = FaultPlan::new(11).fail_constructions(2).injector();
+    let engine = fault_engine(
+        &injector,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+        SupervisorPolicy {
+            breaker_threshold: 100, // construction failures must not trip it here
+            restart_backoff: Duration::from_micros(200),
+            ..SupervisorPolicy::default()
+        },
+    );
+    let session = engine.session("m").unwrap();
+    let resp = session.infer(input(1)).expect("serving must start after factory retries");
+    assert_eq!(resp.output().data[0], 1.0);
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.construct_failures, 2);
+    assert_eq!(snap.worker_restarts, 1, "one successful rebuild after failed attempts");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(
+        injector.trace()[..3],
+        [
+            FaultEvent::Construction { attempt: 1, failed: true },
+            FaultEvent::Construction { attempt: 2, failed: true },
+            FaultEvent::Construction { attempt: 3, failed: false },
+        ]
+    );
+}
+
+/// A factory that never succeeds must not hang the engine: after
+/// `max_restarts` attempts the model goes permanently Down, queued and
+/// later requests get typed errors, and shutdown still joins.
+#[test]
+fn permanent_construction_failure_degrades_to_unavailable() {
+    let injector = FaultPlan::new(13).fail_constructions(u64::MAX).injector();
+    let engine = fault_engine(
+        &injector,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+        SupervisorPolicy {
+            breaker_threshold: 2,
+            restart_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_micros(800),
+            max_restarts: 4,
+            ..SupervisorPolicy::default()
+        },
+    );
+    let session = engine.session("m").unwrap();
+    // Every request resolves with a typed error: Unavailable from the
+    // drain loop or the breaker, never a hang or an EngineStopped lie.
+    for i in 0..6 {
+        match session.submit(input(i)) {
+            Ok(rx) => match rx.recv_timeout(RECV_BOUND) {
+                Ok(Err(TimError::Unavailable { state, .. })) => {
+                    assert_eq!(state, HealthState::Down);
+                }
+                Ok(other) => panic!("expected Unavailable reply, got {other:?}"),
+                Err(e) => panic!("request hung or channel dropped: {e:?}"),
+            },
+            Err(TimError::Unavailable { .. }) => {}
+            Err(other) => panic!("expected Unavailable, got {other:?}"),
+        }
+    }
+    assert_eq!(engine.health("m").unwrap(), HealthState::Down);
+    let snaps = engine.shutdown(); // must join despite the dead factory
+    let snap = &snaps["m"];
+    assert_eq!(snap.construct_failures, 4, "gave up after max_restarts attempts");
+    assert_eq!(snap.completed, 0);
+    assert!(snap.requests_shed > 0);
+}
+
+/// Deadline handling: an expired deadline is rejected at submission, and
+/// a request that expires while queued behind a slow batch is shed with
+/// the typed error before dispatch.
+#[test]
+fn expired_requests_are_shed_with_typed_deadline_errors() {
+    // Every batch call sleeps 30 ms (latency fault on every call).
+    let injector = FaultPlan::new(3)
+        .inject(FaultKind::Latency, FaultTrigger::Every(1))
+        .with_latency(Duration::from_millis(30))
+        .injector();
+    let engine = fault_engine(
+        &injector,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+        SupervisorPolicy::default(),
+    );
+    let session = engine.session("m").unwrap();
+
+    // First request occupies the worker for ~30 ms; the second carries a
+    // 5 ms deadline and expires while queued behind it.
+    let rx1 = session.submit(input(0)).unwrap();
+    let rx2 = session
+        .submit_with(input(1), SubmitOptions::new().with_deadline_in(Duration::from_millis(5)))
+        .unwrap();
+    assert!(rx1.recv_timeout(RECV_BOUND).unwrap().is_ok(), "undeadlined request completes");
+    match rx2.recv_timeout(RECV_BOUND).unwrap() {
+        Err(TimError::DeadlineExceeded { model, missed_by }) => {
+            assert_eq!(model, "m");
+            assert!(missed_by > Duration::ZERO);
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+
+    // An already-expired deadline never reaches the queue.
+    let past = Instant::now() - Duration::from_millis(1);
+    match session.submit_with(input(2), SubmitOptions::new().with_deadline(past)) {
+        Err(TimError::DeadlineExceeded { model, .. }) => assert_eq!(model, "m"),
+        other => panic!("expected DeadlineExceeded at submission, got {other:?}"),
+    }
+
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.deadline_expired, 2, "one shed pre-dispatch + one at submission");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.batches_failed, 0, "latency faults slow batches, never fail them");
+}
+
+/// Worker-side retry: a request with a retry budget survives a batch
+/// failure by requeueing and completes on a later, clean batch.
+#[test]
+fn retry_budget_survives_injected_failures() {
+    let injector = FaultPlan::new(17).error_first(2).injector();
+    let engine = fault_engine(
+        &injector,
+        BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) },
+        SupervisorPolicy {
+            breaker_threshold: 100, // retries must come from the requeue, not probing
+            ..SupervisorPolicy::default()
+        },
+    );
+    let session = engine.session("m").unwrap();
+    // Calls 1 and 2 fail; with 2 retries the request lands on call 3.
+    let resp = session
+        .infer_with(input(4), SubmitOptions::new().with_retries(2))
+        .expect("retries must absorb the first two injected failures");
+    assert_eq!(resp.output().data[0], 4.0);
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.batches_failed, 2);
+    assert_eq!(snap.completed, 1);
+}
+
+/// The probabilistic chaos matrix (seed from `TIMDNN_CHAOS_SEED`): a
+/// multi-threaded storm against a backend that randomly errors, panics,
+/// truncates outputs, and stalls. Liveness + typed replies + exact
+/// counter/trace accounting must all hold for any seed.
+#[test]
+fn chaos_matrix_never_hangs_and_counters_match_the_trace() {
+    quiet_injected_panics();
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 40;
+    let seed = chaos_seed();
+    let injector = FaultPlan::new(seed)
+        .with_probabilities(0.15, 0.10, 0.05, 0.05, 0.10)
+        .with_latency(Duration::from_millis(1))
+        .injector();
+    let engine = fault_engine(
+        &injector,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) },
+        SupervisorPolicy {
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(5),
+            restart_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(10),
+            ..SupervisorPolicy::default()
+        },
+    );
+    let session = engine.session("m").unwrap();
+    let barrier = Arc::new(Barrier::new(THREADS));
+
+    // Each thread tallies (completed, shed_at_submit, deadline_expired).
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let session = session.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let (mut completed, mut shed, mut expired) = (0u64, 0u64, 0u64);
+                for i in 0..PER_THREAD {
+                    let opts = match i % 4 {
+                        0 => SubmitOptions::new().with_retries(2),
+                        1 => SubmitOptions::new().with_deadline_in(Duration::from_millis(250)),
+                        _ => SubmitOptions::default(),
+                    };
+                    match session.submit_with(input(t * PER_THREAD + i), opts) {
+                        Ok(rx) => match rx.recv_timeout(RECV_BOUND) {
+                            Ok(Ok(_)) => completed += 1,
+                            Ok(Err(TimError::DeadlineExceeded { .. })) => expired += 1,
+                            Ok(Err(
+                                TimError::Exec { .. } | TimError::Unavailable { .. },
+                            )) => {}
+                            Ok(Err(other)) => panic!("untyped failure reply: {other:?}"),
+                            Err(e) => {
+                                panic!("request hung or reply channel dropped: {e:?}")
+                            }
+                        },
+                        Err(TimError::Unavailable { .. }) => shed += 1,
+                        Err(TimError::DeadlineExceeded { .. }) => expired += 1,
+                        Err(other) => panic!("untyped submit error: {other:?}"),
+                    }
+                }
+                (completed, shed, expired)
+            })
+        })
+        .collect();
+
+    let (mut completed, mut shed, mut expired) = (0u64, 0u64, 0u64);
+    for w in workers {
+        let (c, s, e) = w.join().expect("chaos worker panicked");
+        completed += c;
+        shed += s;
+        expired += e;
+    }
+
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    // Client-side and engine-side accounting must agree exactly.
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.requests_shed, shed);
+    assert_eq!(snap.deadline_expired, expired);
+    // Every injected failing fault failed exactly one batch, and the echo
+    // backend never fails on its own.
+    assert_eq!(
+        snap.batches_failed,
+        injector.failures_injected(),
+        "batches_failed must match the injected schedule (seed {seed})"
+    );
+    assert_eq!(
+        snap.worker_restarts,
+        injector.injected(FaultKind::Panic),
+        "every panic (and nothing else) must restart the backend (seed {seed})"
+    );
+}

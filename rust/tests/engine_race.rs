@@ -5,11 +5,14 @@
 //! sweep the interleaving space (no loom offline, so we brute-force the
 //! schedule instead).
 
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Once};
 use std::time::Duration;
 
 use timdnn::arch::ArchConfig;
-use timdnn::coordinator::{BatchPolicy, Engine, ModelSpec, Session, SimOnlyBackend};
+use timdnn::coordinator::{
+    BatchPolicy, Engine, FaultBackend, FaultPlan, ModelSpec, Session, SimOnlyBackend,
+    SupervisorPolicy,
+};
 use timdnn::model;
 use timdnn::TimError;
 
@@ -90,6 +93,80 @@ fn submit_racing_shutdown_never_hangs() {
         for handle in submitters {
             let accepted = handle.join().expect("submitter panicked");
             assert!(accepted <= SUBMITS_PER_THREAD);
+        }
+    }
+}
+
+/// Suppress the default panic-hook backtrace for *injected* panics only
+/// (the supervisor catches them by design); real panics still print.
+fn quiet_injected_panics() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .is_some_and(|s| s.contains("injected panic"));
+            if !injected {
+                default(info);
+            }
+        }));
+    });
+}
+
+/// Panic-during-shutdown interleaving: a backend that panics every other
+/// batch while submissions race `Engine::shutdown`. The supervisor may be
+/// mid-`catch_unwind` or mid-rebuild when the shutdown marker lands —
+/// every submission must still resolve typed, and shutdown must join.
+#[test]
+fn panicking_backend_racing_shutdown_never_hangs() {
+    quiet_injected_panics();
+    for round in 0..12 {
+        let injector = FaultPlan::new(round as u64 + 1).panic_every(2).injector();
+        let inj = injector.clone();
+        let spec =
+            ModelSpec::for_network("m", &model::tiny_cnn(), &ArchConfig::tim_dnn(), move || {
+                FaultBackend::new(Box::new(SimOnlyBackend::new()), inj.clone()).map(Box::new)
+            })
+            .with_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) })
+            .with_supervisor(SupervisorPolicy {
+                // Keep admitting through the storm: the race under test is
+                // panic/rebuild vs shutdown, not the breaker.
+                breaker_threshold: 1_000,
+                restart_backoff: Duration::from_micros(100),
+                ..SupervisorPolicy::default()
+            });
+        let engine = Engine::builder().register(spec).unwrap().build().unwrap();
+        let session = engine.session("m").unwrap();
+        let barrier = Arc::new(Barrier::new(SUBMITTERS + 1));
+
+        let submitters: Vec<_> = (0..SUBMITTERS)
+            .map(|_| {
+                let session = session.clone();
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    submit_storm(&session)
+                })
+            })
+            .collect();
+
+        barrier.wait();
+        if round % 3 != 0 {
+            std::thread::sleep(Duration::from_micros((round as u64) * 53 % 700));
+        }
+        // Must return even when the marker lands mid-panic or mid-rebuild.
+        let snapshots = engine.shutdown();
+        let snap = &snapshots["m"];
+        assert_eq!(
+            snap.worker_restarts,
+            injector.injected(timdnn::coordinator::FaultKind::Panic),
+            "round {round}: every caught panic must map to exactly one rebuild"
+        );
+
+        for handle in submitters {
+            handle.join().expect("submitter panicked");
         }
     }
 }

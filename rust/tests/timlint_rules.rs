@@ -8,8 +8,8 @@
 mod lint;
 
 use lint::{
-    lint_source, Finding, RULE_DIGITIZE_F32, RULE_HOT_ALLOC, RULE_NARROWING, RULE_RNG,
-    RULE_VMM_MATCH,
+    lint_source, Finding, RULE_DIGITIZE_F32, RULE_HOT_ALLOC, RULE_MUTEX, RULE_NARROWING,
+    RULE_RNG, RULE_VMM_MATCH,
 };
 
 fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
@@ -234,6 +234,51 @@ fn build(rng: Option<&mut Rng>) -> VmmMode {
 }
 ";
     assert!(lint_source("fixture.rs", src).is_empty());
+}
+
+// --------------------------------------------------------- mutex-lock-unwrap
+
+#[test]
+fn bare_lock_unwrap_flagged_only_under_coordinator() {
+    let src = "\
+fn read_metrics(m: &Mutex<u64>) -> u64 {
+    let guard = m.lock().unwrap();
+    *guard
+}
+";
+    let f = lint_source("rust/src/coordinator/engine.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_MUTEX], "{f:#?}");
+    assert_eq!(f[0].line, 2);
+    assert!(f[0].message.contains("lock_unpoisoned"), "{}", f[0].message);
+    // The identical source outside the coordinator subsystem is fine:
+    // nothing panics while holding locks there.
+    assert!(lint_source("rust/src/tile/mod.rs", src).is_empty());
+}
+
+#[test]
+fn poison_aware_lock_recovery_is_clean() {
+    let src = "\
+fn read_metrics(m: &Mutex<u64>) -> u64 {
+    let guard = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    *guard
+}
+fn not_a_mutex(s: &str) -> char {
+    // `.unwrap()` on things other than `lock()` stays permitted.
+    s.chars().next().unwrap()
+}
+";
+    assert!(lint_source("rust/src/coordinator/metrics.rs", src).is_empty());
+}
+
+#[test]
+fn lock_unwrap_waivable_with_allow_comment() {
+    let src = "\
+fn snapshot(m: &Mutex<u64>) -> u64 {
+    // timlint::allow(mutex-lock-unwrap): test-only helper, poison is fatal here
+    *m.lock().unwrap()
+}
+";
+    assert!(lint_source("rust/src/coordinator/fault.rs", src).is_empty());
 }
 
 // --------------------------------------------------------- lexer edge cases

@@ -18,6 +18,7 @@
 //! | `rng-construction`| everywhere except util/prng  | RNG state built directly  |
 //! | `digitize-f32`    | `impl Digitize for` bodies   | any f32/f64 arithmetic    |
 //! | `vmm-mode-match`  | every `match` on `VmmMode`   | missing variant/wildcard  |
+//! | `mutex-lock-unwrap`| `rust/src/coordinator/**`   | bare `.lock().unwrap()`   |
 //!
 //! Waivers: a `// timlint::allow(rule): why` comment covers its own line
 //! and the next; `#[timdnn::timlint_allow(rule)]` covers a whole fn.
@@ -36,6 +37,7 @@ pub const RULE_NARROWING: &str = "narrowing-cast";
 pub const RULE_RNG: &str = "rng-construction";
 pub const RULE_DIGITIZE_F32: &str = "digitize-f32";
 pub const RULE_VMM_MATCH: &str = "vmm-mode-match";
+pub const RULE_MUTEX: &str = "mutex-lock-unwrap";
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Kind {
@@ -536,6 +538,33 @@ impl Ctx<'_> {
         }
     }
 
+    /// Coordinator-only rule: a bare `.lock().unwrap()` turns a poisoned
+    /// mutex (some thread panicked while holding it) into a cascading
+    /// coordinator crash. `lock_unpoisoned` — or any explicit
+    /// `PoisonError` handling such as `unwrap_or_else(PoisonError::
+    /// into_inner)` — keeps serving through worker panics.
+    fn mutex_rules(&mut self) {
+        for j in 0..self.toks.len() {
+            if self.toks[j].text == "."
+                && self.text(j + 1) == "lock"
+                && self.text(j + 2) == "("
+                && self.text(j + 3) == ")"
+                && self.text(j + 4) == "."
+                && self.text(j + 5) == "unwrap"
+                && self.text(j + 6) == "("
+            {
+                self.report(
+                    j + 1,
+                    RULE_MUTEX,
+                    "bare `.lock().unwrap()` in coordinator code panics on a poisoned \
+                     mutex; use coordinator::lock_unpoisoned (or handle the PoisonError) \
+                     so a worker panic cannot cascade"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
     fn vmm_match_rules(&mut self) {
         let mut j = 0;
         while j < self.toks.len() {
@@ -668,6 +697,14 @@ fn is_prng_module(file: &str) -> bool {
     file.replace('\\', "/").ends_with("util/prng.rs")
 }
 
+/// True when `file` lives under the coordinator subsystem, where the
+/// `mutex-lock-unwrap` rule applies (supervised workers may panic, so
+/// poisoned locks there are expected, not fatal).
+fn is_coordinator_module(file: &str) -> bool {
+    let norm = file.replace('\\', "/");
+    norm.contains("/coordinator/") || norm.starts_with("coordinator/")
+}
+
 /// Lint one source file; `file` is used for diagnostics and the
 /// `util/prng.rs` carve-out.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
@@ -684,6 +721,9 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     }
     if !is_prng_module(file) {
         ctx.rng_rules();
+    }
+    if is_coordinator_module(file) {
+        ctx.mutex_rules();
     }
     ctx.vmm_match_rules();
     ctx.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
