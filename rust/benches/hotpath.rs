@@ -221,6 +221,25 @@ fn main() {
     );
     results.push(r);
 
+    // ABFT-guarded forward on a clean array: the checksum-verification
+    // overhead vs the unguarded weight-stationary pipeline (the guard
+    // also forgoes input/weight gating — see EXPERIMENTS.md §Reliability).
+    let mut acc_guarded = TimNetAccelerator::new(&weights, TileConfig::paper());
+    acc_guarded.enable_abft();
+    let r = bench("functional/forward_ws_abft", warmup, measure, || {
+        acc_guarded
+            .forward_checked_into(black_box(&img), &mut VmmMode::Ideal, &mut logits)
+            .expect("clean array must verify");
+        black_box(&logits);
+    });
+    let fwd_abft_mean = r.mean.as_secs_f64();
+    let abft_overhead = fwd_abft_mean / fwd_ws_mean;
+    println!(
+        "  -> {:.0} guarded inf/s ({abft_overhead:.2}x the unguarded cost)",
+        r.per_second(1.0)
+    );
+    results.push(r);
+
     // --- Batched serving: pre-PR serial scalar vs packed worker pool -----
     let images: Vec<Vec<f32>> = (0..SERVE_BATCH)
         .map(|b| (0..256).map(|i| ((i * 7 + b * 31) % 13) as f32 / 13.0).collect())
@@ -283,6 +302,7 @@ fn main() {
         ("vmm_2bit_speedup_packed_vs_scalar", scalar_2bit_mean / packed_2bit_mean),
         ("kernel_ws_speedup_vs_scalar", kernel_scalar_mean / kernel_ws_mean),
         ("kernel_ws_speedup_vs_packed", kernel_packed_mean / kernel_ws_mean),
+        ("abft_overhead_guarded_vs_ws", abft_overhead),
     ];
     let mode = if smoke { "smoke" } else { "full" };
     match write_json_report("BENCH_hotpath.json", "hotpath", mode, &results, &derived) {

@@ -19,8 +19,33 @@ use std::path::Path;
 
 use crate::error::{Result, TimError};
 use crate::quant::TernarySystem;
-use crate::tile::{PackedCodes, TileConfig, TileMeter, TimTile, VmmMode};
+use crate::tile::{
+    AbftEvent, PackedCodes, TileConfig, TileHealth, TileMeter, TimTile, TpcFaultMap, VmmMode,
+};
 use crate::tpc::{Trit, TritMatrix};
+
+/// Fill the `tile` coordinate of a [`TimError::DeviceFault`] bubbling out
+/// of a tile (which only knows its block/column); other errors pass
+/// through.
+fn fill_tile(e: TimError, tile: usize) -> TimError {
+    match e {
+        TimError::DeviceFault { layer, block, column, detail, .. } => {
+            TimError::DeviceFault { layer, tile, block, column, detail }
+        }
+        other => other,
+    }
+}
+
+/// Fill the `layer` name of a [`TimError::DeviceFault`] bubbling out of a
+/// layer engine (which knows tile/block/column but not its own name).
+fn fill_layer(e: TimError, layer: &str) -> TimError {
+    match e {
+        TimError::DeviceFault { tile, block, column, detail, .. } => {
+            TimError::DeviceFault { layer: layer.to_string(), tile, block, column, detail }
+        }
+        other => other,
+    }
+}
 
 /// One VMM layer: ternary weights + PCU scale register value.
 #[derive(Clone)]
@@ -363,6 +388,111 @@ impl LayerEngine {
         }
         scratch.trim();
     }
+
+    /// Arm the ABFT checksum guard on every tile of this engine: logical
+    /// columns `0..cols` are guarded, physical columns `cols..N` become
+    /// the spare pool. Call after construction (weights are loaded there).
+    fn enable_abft(&mut self) {
+        for t in &mut self.tiles {
+            t.enable_abft(self.cols);
+        }
+    }
+
+    /// Install a device-fault map on one tile of this engine.
+    fn set_fault_map(&mut self, tile: usize, map: TpcFaultMap) {
+        self.tiles[tile].set_fault_map(map);
+    }
+
+    /// Merged ABFT counters across this engine's tiles (`None` until
+    /// [`Self::enable_abft`]).
+    fn health(&self) -> Option<TileHealth> {
+        let mut merged = TileHealth::default();
+        let mut any = false;
+        for t in &self.tiles {
+            if let Some(h) = t.health() {
+                merged.merge(&h);
+                any = true;
+            }
+        }
+        any.then_some(merged)
+    }
+
+    /// Append this engine's fault-localization events, tagged with the
+    /// layer name and tile index.
+    fn events_into(&self, layer: &str, out: &mut Vec<(String, usize, AbftEvent)>) {
+        for (i, t) in self.tiles.iter().enumerate() {
+            for e in t.abft_events() {
+                out.push((layer.to_string(), i, *e));
+            }
+        }
+    }
+
+    /// Checksum-guarded twin of [`Self::forward_2bit_batch`]: same
+    /// packing and weight-stationary dispatch, but every block access
+    /// runs through [`TimTile::vmm_block_batch_guarded_into`] — verified
+    /// against the weight checksums, re-executed on transients, spared on
+    /// persistents, typed [`TimError::DeviceFault`] (with the tile index
+    /// filled in) when recovery is impossible. Value-equivalent to the
+    /// unguarded pass under `Ideal`/`Analog` when no fault map is
+    /// installed.
+    ///
+    /// Unlike the hot path there is **no input- or weight-gating**: the
+    /// guard must observe every (patch, plane, block) access to verify
+    /// it, so gated-away accesses would be unverified blind spots. This
+    /// is the documented coverage/throughput trade of running checked.
+    fn forward_2bit_batch_guarded(
+        &mut self,
+        codes: &[u8],
+        n_patches: usize,
+        act_clip: f32,
+        mode: &mut VmmMode,
+        scratch: &mut LayerScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        assert_eq!(codes.len(), n_patches * self.rows, "patch matrix shape");
+        let LayerScratch { packed, masks, acc } = scratch;
+        if packed.len() < n_patches {
+            packed.resize_with(n_patches, PackedCodes::default);
+        }
+        for (p, planes) in packed.iter_mut().take(n_patches).enumerate() {
+            planes.pack_into(&codes[p * self.rows..(p + 1) * self.rows], self.block_len);
+        }
+        acc.clear();
+        acc.resize(n_patches * self.cols, 0);
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let lo = t * self.rows_per_tile;
+            let hi = (lo + self.rows_per_tile).min(self.rows);
+            let n_blocks = (hi - lo).div_ceil(self.block_len);
+            let first_block = t * self.blocks_per_tile;
+            for plane in 0..2usize {
+                for b in 0..n_blocks {
+                    masks.clear();
+                    masks.extend(
+                        packed
+                            .iter()
+                            .take(n_patches)
+                            .map(|pl| (pl.planes()[first_block + b][plane], 0u32)),
+                    );
+                    tile.vmm_block_batch_guarded_into(
+                        b,
+                        masks.as_slice(),
+                        plane as u32,
+                        mode,
+                        acc.as_mut_slice(),
+                    )
+                    .map_err(|e| fill_tile(e, t))?;
+                }
+            }
+        }
+        let k = self.scale * act_clip / 3.0;
+        out.clear();
+        out.resize(n_patches * self.cols, 0.0);
+        for (o, &v) in out.iter_mut().zip(acc.iter()) {
+            *o = v as f32 * k;
+        }
+        scratch.trim();
+        Ok(())
+    }
 }
 
 /// SFU ops (functional).
@@ -501,6 +631,8 @@ pub struct TimNetAccelerator {
     fc2: LayerEngine,
     clips: [f32; 4],
     scratch: ScratchArena,
+    /// True once [`Self::enable_abft`] armed the checksum guards.
+    abft: bool,
 }
 
 impl TimNetAccelerator {
@@ -512,7 +644,129 @@ impl TimNetAccelerator {
             fc2: LayerEngine::new(&weights.fc2, cfg),
             clips: weights.clips,
             scratch: ScratchArena::default(),
+            abft: false,
         }
+    }
+
+    /// Arm the ABFT checksum guard on every tile of every layer; after
+    /// this, [`Self::forward_checked_into`] is available. Each layer
+    /// guards its real output columns and keeps the tile's remaining
+    /// physical columns as its spare pool.
+    pub fn enable_abft(&mut self) {
+        self.conv1.enable_abft();
+        self.conv2.enable_abft();
+        self.fc1.enable_abft();
+        self.fc2.enable_abft();
+        self.abft = true;
+    }
+
+    /// Whether [`Self::enable_abft`] has been called.
+    pub fn abft_enabled(&self) -> bool {
+        self.abft
+    }
+
+    /// Install a device-fault map on one tile of one layer (read-path
+    /// overlay — stored weights stay golden). Layers are named
+    /// `conv1`/`conv2`/`fc1`/`fc2`; unknown names or out-of-range tile
+    /// indices are typed [`TimError::InvalidConfig`] errors.
+    pub fn inject_fault(&mut self, layer: &str, tile: usize, map: TpcFaultMap) -> Result<()> {
+        let engine = match layer {
+            "conv1" => &mut self.conv1,
+            "conv2" => &mut self.conv2,
+            "fc1" => &mut self.fc1,
+            "fc2" => &mut self.fc2,
+            other => {
+                return Err(TimError::InvalidConfig(format!(
+                    "unknown layer '{other}' (TiMNet layers: conv1, conv2, fc1, fc2)"
+                )))
+            }
+        };
+        if tile >= engine.tiles.len() {
+            return Err(TimError::InvalidConfig(format!(
+                "layer '{layer}' has {} tile(s), no tile {tile}",
+                engine.tiles.len()
+            )));
+        }
+        engine.set_fault_map(tile, map);
+        Ok(())
+    }
+
+    /// Checksum-guarded forward pass: the [`Self::forward_into`] pipeline
+    /// with every layer VMM verified, re-executed, and spared by the ABFT
+    /// guard. Returns the logits bit-exact with the fault-free pipeline,
+    /// or a typed [`TimError::DeviceFault`] naming the
+    /// `(layer, tile, block, column)` when recovery is impossible —
+    /// never silently-corrupt logits. Requires [`Self::enable_abft`].
+    pub fn forward_checked_into(
+        &mut self,
+        image: &[f32],
+        mode: &mut VmmMode,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        if !self.abft {
+            return Err(TimError::InvalidConfig(
+                "forward_checked_into requires enable_abft() first".into(),
+            ));
+        }
+        assert_eq!(image.len(), 256);
+        let [a0, a1, a2, a3] = self.clips;
+        let sc = &mut self.scratch;
+
+        // conv1: 16×16×1 → 16×16×16, ReLU, quant, pool → 8×8×16.
+        sfu::quantize_2bit_into(image, a0, &mut sc.codes);
+        sfu::im2col3x3_codes_into(&sc.codes, 16, 16, 1, &mut sc.patches);
+        self.conv1
+            .forward_2bit_batch_guarded(&sc.patches, 256, a0, mode, &mut sc.layer, &mut sc.fm)
+            .map_err(|e| fill_layer(e, "conv1"))?;
+        sfu::relu(&mut sc.fm);
+        sfu::quantize_2bit_into(&sc.fm, a1, &mut sc.codes2);
+        sfu::maxpool2_codes_into(&sc.codes2, 16, 16, 16, &mut sc.pooled);
+
+        // conv2: 8×8×16 → 8×8×32, ReLU, quant, pool → 4×4×32.
+        sfu::im2col3x3_codes_into(&sc.pooled, 8, 8, 16, &mut sc.patches);
+        self.conv2
+            .forward_2bit_batch_guarded(&sc.patches, 64, a1, mode, &mut sc.layer, &mut sc.fm)
+            .map_err(|e| fill_layer(e, "conv2"))?;
+        sfu::relu(&mut sc.fm);
+        sfu::quantize_2bit_into(&sc.fm, a2, &mut sc.codes2);
+        sfu::maxpool2_codes_into(&sc.codes2, 8, 8, 32, &mut sc.pooled);
+
+        // fc1 → ReLU → quant → fc2 (single-"patch" matrix passes).
+        self.fc1
+            .forward_2bit_batch_guarded(&sc.pooled, 1, a2, mode, &mut sc.layer, &mut sc.fm)
+            .map_err(|e| fill_layer(e, "fc1"))?;
+        sfu::relu(&mut sc.fm);
+        sfu::quantize_2bit_into(&sc.fm, a3, &mut sc.codes2);
+        self.fc2
+            .forward_2bit_batch_guarded(&sc.codes2, 1, a3, mode, &mut sc.layer, logits)
+            .map_err(|e| fill_layer(e, "fc2"))
+    }
+
+    /// Merged ABFT counters across all four layer engines (`None` until
+    /// [`Self::enable_abft`]).
+    pub fn tile_health(&self) -> Option<TileHealth> {
+        let mut merged = TileHealth::default();
+        let mut any = false;
+        for h in [&self.conv1, &self.conv2, &self.fc1, &self.fc2]
+            .into_iter()
+            .filter_map(|e| e.health())
+        {
+            merged.merge(&h);
+            any = true;
+        }
+        any.then_some(merged)
+    }
+
+    /// Every fault-localization event recorded so far, tagged
+    /// `(layer, tile, event)` — the CI reliability report serializes
+    /// these.
+    pub fn abft_events(&self) -> Vec<(String, usize, AbftEvent)> {
+        let mut out = Vec::new();
+        self.conv1.events_into("conv1", &mut out);
+        self.conv2.events_into("conv2", &mut out);
+        self.fc1.events_into("fc1", &mut out);
+        self.fc2.events_into("fc2", &mut out);
+        out
     }
 
     /// Forward one 16×16×1 image (f32 in [0,1]) → 10 logits.
@@ -787,6 +1041,113 @@ mod tests {
         assert_eq!(scratch.packed.len(), MAX_RETAINED_PATCHES);
         assert!(scratch.masks.capacity() <= MAX_RETAINED_PATCHES);
         assert!(scratch.acc.capacity() <= MAX_RETAINED_ACC);
+    }
+
+    #[test]
+    fn checked_forward_matches_oracle_when_clean() {
+        let w = TimNetWeights::synthetic(9);
+        let mut acc = TimNetAccelerator::new(&w, TileConfig::paper());
+        acc.enable_abft();
+        let img: Vec<f32> = (0..256).map(|i| ((i * 13) % 11) as f32 / 11.0).collect();
+        let want = acc.forward_scalar(&img, &mut VmmMode::Ideal);
+        let mut logits = Vec::new();
+        acc.forward_checked_into(&img, &mut VmmMode::Ideal, &mut logits).unwrap();
+        assert_eq!(logits, want, "guarded pipeline must be bit-exact with the scalar oracle");
+        let h = acc.tile_health().unwrap();
+        assert!(h.abft_checks > 0, "{h:?}");
+        assert_eq!(h.abft_detected, 0, "{h:?}");
+        assert_eq!(h.columns_spared, 0, "{h:?}");
+        assert!(acc.abft_events().is_empty());
+    }
+
+    #[test]
+    fn checked_forward_requires_enable() {
+        let w = TimNetWeights::synthetic(9);
+        let mut acc = TimNetAccelerator::new(&w, TileConfig::paper());
+        let img = vec![0.5f32; 256];
+        let mut logits = Vec::new();
+        match acc.forward_checked_into(&img, &mut VmmMode::Ideal, &mut logits) {
+            Err(TimError::InvalidConfig(msg)) => assert!(msg.contains("enable_abft"), "{msg}"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inject_fault_validates_layer_and_tile() {
+        let cfg = TileConfig::paper();
+        let w = TimNetWeights::synthetic(9);
+        let mut acc = TimNetAccelerator::new(&w, cfg);
+        assert!(matches!(
+            acc.inject_fault("conv9", 0, TpcFaultMap::seeded(1, &cfg)),
+            Err(TimError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            acc.inject_fault("fc2", 7, TpcFaultMap::seeded(1, &cfg)),
+            Err(TimError::InvalidConfig(_))
+        ));
+        acc.inject_fault("fc1", 0, TpcFaultMap::seeded(1, &cfg)).unwrap();
+    }
+
+    #[test]
+    fn checked_forward_recovers_persistent_fault_and_stays_recovered() {
+        let cfg = TileConfig::paper();
+        let w = TimNetWeights::synthetic(11);
+        let mut faulty = TimNetAccelerator::new(&w, cfg);
+        let mut clean = TimNetAccelerator::new(&w, cfg);
+        faulty.enable_abft();
+        // Drift every guarded fc1 column; the spare pool (phys 64..256)
+        // stays healthy, so two-strike sparing can repair everything.
+        let map = TpcFaultMap::seeded(7, &cfg).column_drift(256, 2).confined_below(64);
+        faulty.inject_fault("fc1", 0, map).unwrap();
+        let img: Vec<f32> = (0..256).map(|i| ((i * 31) % 17) as f32 / 17.0).collect();
+        let want = clean.forward_scalar(&img, &mut VmmMode::Ideal);
+        let mut logits = Vec::new();
+        // Persistent map + identical input ⇒ identical per-pass fault
+        // visibility, so every column visible at least once per pass is
+        // spared within two passes; by pass 3 the visible set is empty.
+        for pass in 0..3 {
+            faulty.forward_checked_into(&img, &mut VmmMode::Ideal, &mut logits).unwrap();
+            assert_eq!(logits, want, "pass {pass} must be bit-exact with the fault-free oracle");
+        }
+        let h = faulty.tile_health().unwrap();
+        assert!(h.abft_detected > 0, "{h:?}");
+        assert!(h.columns_spared > 0, "{h:?}");
+        let detected_after_3 = h.abft_detected;
+        faulty.forward_checked_into(&img, &mut VmmMode::Ideal, &mut logits).unwrap();
+        assert_eq!(logits, want);
+        let h4 = faulty.tile_health().unwrap();
+        assert_eq!(
+            h4.abft_detected, detected_after_3,
+            "sparing must have repaired every visible persistent fault"
+        );
+        // Localization named the faulted layer/tile.
+        assert!(faulty.abft_events().iter().all(|(layer, tile, _)| layer == "fc1" && *tile == 0));
+    }
+
+    #[test]
+    fn checked_forward_fails_typed_when_spares_are_faulty_too() {
+        let cfg = TileConfig::paper();
+        let w = TimNetWeights::synthetic(13);
+        let mut acc = TimNetAccelerator::new(&w, cfg);
+        acc.enable_abft();
+        // Visible drift on every physical column — sparing lands on
+        // drifted spares, so recovery can never converge.
+        let mut map = TpcFaultMap::seeded(3, &cfg);
+        for c in 0..cfg.n {
+            map = map.drift_at(c, 3, 3);
+        }
+        acc.inject_fault("fc2", 0, map).unwrap();
+        let img: Vec<f32> = (0..256).map(|i| ((i * 7) % 13) as f32 / 13.0).collect();
+        let mut logits = Vec::new();
+        match acc.forward_checked_into(&img, &mut VmmMode::Ideal, &mut logits) {
+            Err(TimError::DeviceFault { layer, tile, .. }) => {
+                assert_eq!(layer, "fc2");
+                assert_eq!(tile, 0);
+            }
+            other => panic!("expected DeviceFault in fc2, got {other:?}"),
+        }
+        let h = acc.tile_health().unwrap();
+        assert!(h.abft_detected > 0, "{h:?}");
     }
 
     #[test]

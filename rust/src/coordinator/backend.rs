@@ -12,7 +12,7 @@
 use crate::arch::functional::{TimNetAccelerator, TimNetWeights};
 use crate::error::{Result, TimError};
 use crate::runtime::{Runtime, TensorF32};
-use crate::tile::{TileConfig, VmmMode};
+use crate::tile::{TileConfig, TileHealth, TpcFaultMap, VmmMode};
 use crate::util::prng::{Rng, SplitMix64};
 
 /// Abstraction over batch execution so the engine can serve any model
@@ -40,6 +40,14 @@ pub trait ExecutorBackend: 'static {
     /// `EngineBuilder::workers`). Backends without intra-batch
     /// parallelism ignore it (the default).
     fn set_workers(&mut self, _workers: usize) {}
+
+    /// Aggregate ABFT/device-fault counters for the compute fabric this
+    /// backend runs on, or `None` when the backend has no checksum guard
+    /// (the default). The supervisor polls this after each batch and
+    /// feeds deltas into the engine metrics.
+    fn tile_health(&self) -> Option<TileHealth> {
+        None
+    }
 
     /// Short backend name for logs/metrics.
     fn name(&self) -> &str;
@@ -200,6 +208,12 @@ pub struct FunctionalBackend {
     /// matter how many times the pool was reconfigured on the way.
     noise_seed: Option<u64>,
     worker_rngs: Vec<Rng>,
+    /// True once [`Self::with_abft`] armed checksum guards: batches run
+    /// through the checked forward pass and [`Self::tile_health`] reports.
+    abft: bool,
+    /// Device-fault maps installed via [`Self::with_device_fault`], kept
+    /// so pool growth re-applies them to new worker accelerators.
+    device_faults: Vec<(String, usize, TpcFaultMap)>,
 }
 
 /// TiMNet input: 16×16×1 image = 256 scalars.
@@ -212,7 +226,15 @@ impl FunctionalBackend {
     pub fn from_weights(weights: &TimNetWeights, cfg: TileConfig) -> Self {
         let weights = weights.clone();
         let accs = vec![TimNetAccelerator::new(&weights, cfg)];
-        Self { weights, cfg, accs, noise_seed: None, worker_rngs: Vec::new() }
+        Self {
+            weights,
+            cfg,
+            accs,
+            noise_seed: None,
+            worker_rngs: Vec::new(),
+            abft: false,
+            device_faults: Vec::new(),
+        }
     }
 
     /// Deterministic untrained weights — structural serving without
@@ -256,6 +278,46 @@ impl FunctionalBackend {
         self
     }
 
+    /// Arm the ABFT checksum guard on every worker accelerator: batches
+    /// run through the checked forward pass (verify → re-execute →
+    /// spare → typed error), and [`ExecutorBackend::tile_health`]
+    /// surfaces the counters. Guards survive pool resizes.
+    pub fn with_abft(mut self) -> Self {
+        for acc in &mut self.accs {
+            acc.enable_abft();
+        }
+        self.abft = true;
+        self
+    }
+
+    /// Install a device-fault map on one `(layer, tile)` of **every**
+    /// worker accelerator (each worker models the same faulty physical
+    /// array), validating the coordinates. Re-applied to new workers on
+    /// pool growth.
+    pub fn with_device_fault(
+        mut self,
+        layer: &str,
+        tile: usize,
+        map: TpcFaultMap,
+    ) -> Result<Self> {
+        for acc in &mut self.accs {
+            acc.inject_fault(layer, tile, map.clone())?;
+        }
+        self.device_faults.push((layer.to_string(), tile, map));
+        Ok(self)
+    }
+
+    /// Fault-localization events across every worker accelerator, each
+    /// tagged `(layer, tile, event)` — the reliability report serializes
+    /// these after a seeded sweep.
+    pub fn abft_events(&self) -> Vec<(String, usize, crate::tile::AbftEvent)> {
+        let mut out = Vec::new();
+        for acc in &self.accs {
+            out.extend(acc.abft_events());
+        }
+        out
+    }
+
     /// Current pool width.
     pub fn workers(&self) -> usize {
         self.accs.len()
@@ -277,22 +339,31 @@ impl FunctionalBackend {
     }
 
     /// Run `part` serially on one accelerator, appending one output list
-    /// per request. Inputs are pre-validated.
+    /// per request. Inputs are pre-validated. With `checked` set the
+    /// ABFT-guarded forward runs instead, and the first unrecoverable
+    /// device fault aborts the chunk with its typed error — no partially
+    /// corrupt output ever leaves this function.
     fn run_chunk(
         acc: &mut TimNetAccelerator,
         rng: Option<&mut Rng>,
+        checked: bool,
         part: &[Vec<TensorF32>],
         out: &mut Vec<Vec<TensorF32>>,
-    ) {
+    ) -> Result<()> {
         let mut mode = match rng {
             Some(r) => VmmMode::AnalogNoisy(r),
             None => VmmMode::Ideal,
         };
         for inputs in part {
             let mut logits = Vec::with_capacity(TIMNET_LOGITS);
-            acc.forward_into(&inputs[0].data, &mut mode, &mut logits);
+            if checked {
+                acc.forward_checked_into(&inputs[0].data, &mut mode, &mut logits)?;
+            } else {
+                acc.forward_into(&inputs[0].data, &mut mode, &mut logits);
+            }
             out.push(vec![TensorF32::new(vec![TIMNET_LOGITS], logits)]);
         }
+        Ok(())
     }
 }
 
@@ -313,11 +384,12 @@ impl ExecutorBackend for FunctionalBackend {
                 });
             }
         }
+        let checked = self.abft;
         let workers = self.accs.len().min(batch.len()).max(1);
         let mut out = Vec::with_capacity(batch.len());
         if workers <= 1 {
             let acc = self.accs.first_mut().expect("pool holds at least one accelerator");
-            Self::run_chunk(acc, self.worker_rngs.first_mut(), batch, &mut out);
+            Self::run_chunk(acc, self.worker_rngs.first_mut(), checked, batch, &mut out)?;
             return Ok(out);
         }
         // Contiguous chunks keep request order: worker w computes requests
@@ -325,15 +397,14 @@ impl ExecutorBackend for FunctionalBackend {
         // order restores the batch order exactly.
         let chunk = batch.len().div_ceil(workers);
         let noisy = !self.worker_rngs.is_empty();
-        let chunk_outs: Vec<Vec<Vec<TensorF32>>> = std::thread::scope(|s| {
+        let chunk_outs: Vec<Result<Vec<Vec<TensorF32>>>> = std::thread::scope(|s| {
             let mut rng_iter = self.worker_rngs.iter_mut();
             let mut handles = Vec::with_capacity(workers);
             for (acc, part) in self.accs.iter_mut().zip(batch.chunks(chunk)) {
                 let rng = if noisy { rng_iter.next() } else { None };
                 handles.push(s.spawn(move || {
                     let mut outs = Vec::with_capacity(part.len());
-                    Self::run_chunk(acc, rng, part, &mut outs);
-                    outs
+                    Self::run_chunk(acc, rng, checked, part, &mut outs).map(|()| outs)
                 }));
             }
             handles
@@ -341,8 +412,10 @@ impl ExecutorBackend for FunctionalBackend {
                 .map(|h| h.join().expect("functional worker thread panicked"))
                 .collect()
         });
+        // Any chunk's device fault fails the whole batch — the engine
+        // retries/degrades; no request gets an unverified output.
         for chunk_out in chunk_outs {
-            out.extend(chunk_out);
+            out.extend(chunk_out?);
         }
         Ok(out)
     }
@@ -350,10 +423,30 @@ impl ExecutorBackend for FunctionalBackend {
     fn set_workers(&mut self, workers: usize) {
         let n = workers.max(1);
         while self.accs.len() < n {
-            self.accs.push(TimNetAccelerator::new(&self.weights, self.cfg));
+            let mut acc = TimNetAccelerator::new(&self.weights, self.cfg);
+            if self.abft {
+                acc.enable_abft();
+            }
+            for (layer, tile, map) in &self.device_faults {
+                acc.inject_fault(layer, *tile, map.clone())
+                    .expect("fault coordinates were validated when first installed");
+            }
+            self.accs.push(acc);
         }
         self.accs.truncate(n);
         self.reseed_workers();
+    }
+
+    fn tile_health(&self) -> Option<TileHealth> {
+        let mut merged = TileHealth::default();
+        let mut any = false;
+        for acc in &self.accs {
+            if let Some(h) = acc.tile_health() {
+                merged.merge(&h);
+                any = true;
+            }
+        }
+        any.then_some(merged)
     }
 
     fn name(&self) -> &str {
@@ -444,6 +537,80 @@ mod tests {
             assert_eq!(o[0].shape, vec![10]);
         }
         assert_eq!(b.fixed_batch(), None);
+    }
+
+    #[test]
+    fn abft_backend_recovers_device_fault_bit_exact() {
+        let img = |s: f32| vec![TensorF32::new(vec![16, 16, 1], vec![s; 256])];
+        let batch: Vec<_> = (0..4).map(|i| img(i as f32 / 5.0)).collect();
+        let mut clean = FunctionalBackend::synthetic(3);
+        let cfg = TileConfig::paper();
+        let map = TpcFaultMap::seeded(7, &cfg).column_drift(256, 2).confined_below(64);
+        let mut faulty = FunctionalBackend::synthetic(3)
+            .with_abft()
+            .with_device_fault("fc1", 0, map)
+            .unwrap();
+        assert!(clean.tile_health().is_none(), "no guard, no health");
+        let want = clean.execute_batch(&batch).unwrap();
+        let got = faulty.execute_batch(&batch).unwrap();
+        assert_eq!(got, want, "recovered batch must be bit-exact with the clean backend");
+        let h = faulty.tile_health().expect("guard armed");
+        assert!(h.abft_checks > 0, "{h:?}");
+        assert!(h.abft_detected > 0, "{h:?}");
+        assert!(h.columns_spared > 0, "{h:?}");
+        assert!(!faulty.abft_events().is_empty());
+    }
+
+    #[test]
+    fn abft_backend_survives_pool_resize_with_faults() {
+        let img = |s: f32| vec![TensorF32::new(vec![16, 16, 1], vec![s; 256])];
+        let batch: Vec<_> = (0..6).map(|i| img(i as f32 / 7.0)).collect();
+        let mut clean = FunctionalBackend::synthetic(5);
+        let cfg = TileConfig::paper();
+        let map = TpcFaultMap::seeded(11, &cfg).column_drift(256, 2).confined_below(64);
+        let mut faulty = FunctionalBackend::synthetic(5)
+            .with_abft()
+            .with_device_fault("fc1", 0, map)
+            .unwrap()
+            .with_workers(3);
+        let want = clean.execute_batch(&batch).unwrap();
+        assert_eq!(faulty.execute_batch(&batch).unwrap(), want);
+        // New workers minted by the resize carry both guard and faults.
+        faulty.set_workers(5);
+        assert_eq!(faulty.execute_batch(&batch).unwrap(), want);
+        let h = faulty.tile_health().expect("guard armed");
+        assert!(h.abft_detected > 0, "{h:?}");
+    }
+
+    #[test]
+    fn abft_backend_fails_typed_when_unrecoverable() {
+        let cfg = TileConfig::paper();
+        let mut map = TpcFaultMap::seeded(13, &cfg);
+        for c in 0..cfg.n {
+            map = map.drift_at(c, 3, 3);
+        }
+        let mut b = FunctionalBackend::synthetic(7)
+            .with_abft()
+            .with_device_fault("fc2", 0, map)
+            .unwrap();
+        let img = vec![vec![TensorF32::new(vec![16, 16, 1], vec![0.4; 256])]];
+        match b.execute_batch(&img) {
+            Err(TimError::DeviceFault { layer, .. }) => assert_eq!(layer, "fc2"),
+            other => panic!("expected DeviceFault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn with_device_fault_validates_coordinates() {
+        let cfg = TileConfig::paper();
+        assert!(matches!(
+            FunctionalBackend::synthetic(1).with_device_fault(
+                "conv9",
+                0,
+                TpcFaultMap::seeded(1, &cfg)
+            ),
+            Err(TimError::InvalidConfig(_))
+        ));
     }
 
     #[test]

@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Result, TimError};
 use crate::runtime::TensorF32;
 use crate::sim::SimReport;
+use crate::tile::TileHealth;
 
 use super::backend::{BackendFactory, ExecutorBackend};
 use super::batcher::Batcher;
@@ -366,6 +367,7 @@ impl ModelWorker {
                     requeue,
                     backoff: sup.restart_backoff,
                     ever_built: false,
+                    tile_baseline: TileHealth::default(),
                 }
                 .run(rx, policy)
             })
@@ -404,6 +406,10 @@ struct Supervisor {
     /// Whether any backend was ever successfully constructed (so rebuilds
     /// can be counted as restarts).
     ever_built: bool,
+    /// Cumulative [`TileHealth`] counters at the last poll; deltas against
+    /// this baseline flow into the ABFT metrics so each poll contributes
+    /// exactly once (reset whenever a backend is (re)constructed).
+    tile_baseline: TileHealth,
 }
 
 impl Supervisor {
@@ -452,6 +458,14 @@ impl Supervisor {
             // state the closure can leave inconsistent is the backend
             // itself — which is discarded and rebuilt below.
             let outcome = catch_unwind(AssertUnwindSafe(|| backend.execute_batch(&inputs)));
+            // Poll device-fault counters whenever the backend survived the
+            // batch — including typed failures, where ABFT activity (checks,
+            // exhausted spares) is exactly what explains the error. The
+            // panic path skips the poll: that backend is discarded and the
+            // baseline resets with its replacement.
+            if outcome.is_ok() {
+                self.poll_tile_health(&*backend);
+            }
             let outputs = match outcome {
                 Ok(Ok(outputs)) => {
                     if outputs.len() < real {
@@ -556,6 +570,10 @@ impl Supervisor {
                         lock_unpoisoned(&self.metrics).record_restart();
                     }
                     self.ever_built = true;
+                    // A fresh backend starts its TileHealth counters from
+                    // whatever its construction left them at (usually zero);
+                    // rebase so the first poll reports only new activity.
+                    self.tile_baseline = backend.tile_health().unwrap_or_default();
                     return Some(backend);
                 }
                 Err(e) => {
@@ -575,6 +593,22 @@ impl Supervisor {
                 }
             }
         }
+    }
+
+    /// Fold the delta of the backend's cumulative [`TileHealth`] counters
+    /// since the last poll into the ABFT metrics. `saturating_sub` guards
+    /// against a backend whose counters went backwards (e.g. a pool that
+    /// shrank and dropped per-accelerator state).
+    fn poll_tile_health(&mut self, backend: &dyn ExecutorBackend) {
+        let Some(h) = backend.tile_health() else { return };
+        let b = self.tile_baseline;
+        lock_unpoisoned(&self.metrics).record_abft(
+            h.abft_checks.saturating_sub(b.abft_checks),
+            h.abft_detected.saturating_sub(b.abft_detected),
+            h.blocks_reexecuted.saturating_sub(b.blocks_reexecuted),
+            h.columns_spared.saturating_sub(b.columns_spared),
+        );
+        self.tile_baseline = h;
     }
 
     /// Drop already-expired requests before dispatch; each gets the typed

@@ -359,6 +359,10 @@ impl ExecutorBackend for FaultBackend {
         self.inner.set_workers(workers);
     }
 
+    fn tile_health(&self) -> Option<crate::tile::TileHealth> {
+        self.inner.tile_health()
+    }
+
     fn name(&self) -> &str {
         "fault"
     }

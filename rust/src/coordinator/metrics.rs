@@ -23,6 +23,10 @@ pub struct Metrics {
     worker_restarts: u64,
     construct_failures: u64,
     consecutive_failures: u64,
+    abft_checks: u64,
+    abft_detected: u64,
+    blocks_reexecuted: u64,
+    columns_spared: u64,
 }
 
 impl Metrics {
@@ -43,6 +47,10 @@ impl Metrics {
             worker_restarts: 0,
             construct_failures: 0,
             consecutive_failures: 0,
+            abft_checks: 0,
+            abft_detected: 0,
+            blocks_reexecuted: 0,
+            columns_spared: 0,
         }
     }
 
@@ -101,6 +109,17 @@ impl Metrics {
         self.consecutive_failures = u64::from(consecutive);
     }
 
+    /// Fold in ABFT deltas polled from the backend's [`crate::tile::TileHealth`]
+    /// after a batch: checksum verifications run, mismatches detected, blocks
+    /// re-executed for transient faults, and columns remapped to spares for
+    /// persistent ones.
+    pub fn record_abft(&mut self, checks: u64, detected: u64, reexecuted: u64, spared: u64) {
+        self.abft_checks += checks;
+        self.abft_detected += detected;
+        self.blocks_reexecuted += reexecuted;
+        self.columns_spared += spared;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let pct = |xs: &Vec<f64>, q| if xs.is_empty() { 0.0 } else { percentile(xs, q) };
         MetricsSnapshot {
@@ -124,6 +143,10 @@ impl Metrics {
             worker_restarts: self.worker_restarts,
             construct_failures: self.construct_failures,
             consecutive_failures: self.consecutive_failures,
+            abft_checks: self.abft_checks,
+            abft_detected: self.abft_detected,
+            blocks_reexecuted: self.blocks_reexecuted,
+            columns_spared: self.columns_spared,
         }
     }
 }
@@ -165,6 +188,16 @@ pub struct MetricsSnapshot {
     /// Gauge: the model's consecutive batch/construction failures at
     /// snapshot time (0 after any success — mirrors the circuit breaker).
     pub consecutive_failures: u64,
+    /// ABFT checksum verifications run (one per guarded block-batch VMM).
+    pub abft_checks: u64,
+    /// Checksum mismatches detected (raw count corruption caught before
+    /// digitization could propagate it to the client).
+    pub abft_detected: u64,
+    /// Blocks re-executed after a detected transient fault.
+    pub blocks_reexecuted: u64,
+    /// Logical columns remapped to spare tile capacity after repeated
+    /// (persistent) faults.
+    pub columns_spared: u64,
 }
 
 impl MetricsSnapshot {
@@ -189,18 +222,18 @@ impl MetricsSnapshot {
         println!("  queue p95            {:.3} ms", self.queue_p95_s * 1e3);
         println!("  mean batch           {:.2}", self.mean_batch);
         println!("  padded lanes         {}", self.padded_lanes);
-        if self.batches_failed + self.requests_shed + self.deadline_expired > 0
-            || self.worker_restarts + self.construct_failures > 0
-        {
-            println!(
-                "  robustness           {} batches failed, {} shed, {} past deadline",
-                self.batches_failed, self.requests_shed, self.deadline_expired
-            );
-            println!(
-                "  worker restarts      {} ({} construction failures)",
-                self.worker_restarts, self.construct_failures
-            );
-        }
+        println!(
+            "  robustness           {} batches failed, {} shed, {} past deadline",
+            self.batches_failed, self.requests_shed, self.deadline_expired
+        );
+        println!(
+            "  worker restarts      {} ({} construction failures)",
+            self.worker_restarts, self.construct_failures
+        );
+        println!(
+            "  abft                 {} checks, {} detected, {} blocks re-executed, {} columns spared",
+            self.abft_checks, self.abft_detected, self.blocks_reexecuted, self.columns_spared
+        );
         println!("  sim hw latency p50   {:.3} us", self.sim_latency_p50_s * 1e6);
         println!(
             "  sim hw energy        {:.3} uJ total ({:.3} uJ/inf)",
@@ -265,5 +298,24 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.consecutive_failures, 0);
         assert_eq!(s.batches_failed, 2);
+    }
+
+    #[test]
+    fn abft_counters_accumulate_across_polls() {
+        let mut m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.abft_checks, 0);
+        assert_eq!(s.abft_detected, 0);
+        assert_eq!(s.blocks_reexecuted, 0);
+        assert_eq!(s.columns_spared, 0);
+        m.record_abft(120, 4, 3, 1);
+        m.record_abft(80, 0, 0, 0);
+        let s = m.snapshot();
+        assert_eq!(s.abft_checks, 200);
+        assert_eq!(s.abft_detected, 4);
+        assert_eq!(s.blocks_reexecuted, 3);
+        assert_eq!(s.columns_spared, 1);
+        // report() must never panic regardless of counter state.
+        s.report("abft-test");
     }
 }

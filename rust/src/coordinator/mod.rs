@@ -306,6 +306,87 @@ mod tests {
     }
 
     #[test]
+    fn shutdown_then_drop_is_idempotent() {
+        // `Engine::shutdown` joins the workers and then drops the engine,
+        // which runs the `Drop` impl — so every shutdown exercises the
+        // "second shutdown marker" path. The second send must be a
+        // harmless no-op: no panic, no double-counted drain, and the
+        // worker (which holds its own requeue sender clone, so channel
+        // disconnect alone never wakes it) must already be gone.
+        let engine = doubler_engine(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        let s = engine.session("doubler").unwrap();
+        let resp = s.infer(TensorF32::new(vec![1], vec![2.0])).unwrap();
+        assert_eq!(resp.output().data, vec![4.0]);
+        let snaps = engine.shutdown();
+        assert_eq!(snaps["doubler"].completed, 1);
+        // The worker is joined: a surviving session clone gets the typed
+        // stop error immediately instead of hanging on a dead queue.
+        match s.submit(TensorF32::new(vec![1], vec![1.0])) {
+            Err(TimError::EngineStopped { model }) => assert_eq!(model, "doubler"),
+            other => panic!("expected EngineStopped after shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drop_without_shutdown_stops_worker_despite_requeue_sender() {
+        // Dropping the engine without an orderly shutdown must still stop
+        // the worker: the worker holds a clone of its own queue sender
+        // (for retry requeues), so it only exits via the in-band marker
+        // the Drop impl sends. Every submission that races the marker gets
+        // a typed reply — never a hang, never a panicked worker.
+        let engine = doubler_engine(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        let s = engine.session("doubler").unwrap();
+        s.infer(TensorF32::new(vec![1], vec![1.0])).unwrap();
+        drop(engine);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match s.submit(TensorF32::new(vec![1], vec![1.0])) {
+                // Worker gone, queue receiver dropped: typed at submit.
+                Err(TimError::EngineStopped { .. }) => break,
+                // Submission raced the drain: the request landed behind
+                // the shutdown marker and must get the typed stop reply.
+                Ok(rx) => match rx.recv() {
+                    Ok(Err(TimError::EngineStopped { .. })) => {}
+                    // The request slipped in after the worker's final
+                    // drain pass: it is dropped with the queue, which is
+                    // still "stopped", never a hang.
+                    Err(_) => break,
+                    other => panic!("expected EngineStopped reply, got {other:?}"),
+                },
+                other => panic!("unexpected submit outcome: {other:?}"),
+            }
+            assert!(Instant::now() < deadline, "worker did not stop after engine drop");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_a_poisoned_mutex() {
+        let m = Mutex::new(41usize);
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| {
+                // timlint::allow(mutex-lock-unwrap): deliberately poisoning the mutex under test
+                let _g = m.lock().unwrap();
+                panic!("poison the coordinator mutex on purpose");
+            });
+            assert!(h.join().is_err(), "the poisoning thread must panic");
+        });
+        assert!(m.is_poisoned(), "a panic while holding the guard must poison");
+        // Recovery, not propagation: the guarded data is still reachable
+        // and writable — exactly what the supervisor relies on when a
+        // backend panic unwinds past a metrics lock.
+        *lock_unpoisoned(&m) += 1;
+        assert_eq!(*lock_unpoisoned(&m), 42);
+        assert!(m.is_poisoned(), "recovery does not clear the poison flag");
+    }
+
+    #[test]
     fn session_for_unknown_model_is_typed() {
         let engine = doubler_engine(BatchPolicy::default());
         match engine.session("nope") {

@@ -60,6 +60,13 @@ pub enum TimError {
     /// shed without spending any (simulated) tile accesses. `missed_by`
     /// is how far past the deadline the request was when shed.
     DeadlineExceeded { model: String, missed_by: Duration },
+    /// The ABFT checksum guard detected device corruption it could not
+    /// repair (spares exhausted, or the fault persisted across every
+    /// re-execution attempt). Coordinates localize the fault: the tile
+    /// fills `block`/`column`, the layer engine the `tile` index, the
+    /// accelerator the `layer` name. The output that would have carried
+    /// the corruption was never committed.
+    DeviceFault { layer: String, tile: usize, block: usize, column: usize, detail: String },
     /// Invalid configuration or CLI usage.
     InvalidConfig(String),
     /// Underlying I/O failure.
@@ -117,6 +124,13 @@ impl fmt::Display for TimError {
             }
             TimError::DeadlineExceeded { model, missed_by } => {
                 write!(f, "deadline exceeded for '{model}': shed {missed_by:?} past deadline")
+            }
+            TimError::DeviceFault { layer, tile, block, column, detail } => {
+                write!(
+                    f,
+                    "device fault in layer '{layer}' tile {tile} block {block} \
+                     column {column}: {detail}"
+                )
             }
             TimError::InvalidConfig(msg) => write!(f, "{msg}"),
             TimError::Io(e) => write!(f, "io error: {e}"),
@@ -194,6 +208,29 @@ mod tests {
             missed_by: Duration::from_millis(3),
         };
         assert!(e.to_string().contains("deadline"), "{e}");
+    }
+
+    #[test]
+    fn device_fault_display_localizes() {
+        let e = TimError::DeviceFault {
+            layer: "fc1".into(),
+            tile: 1,
+            block: 3,
+            column: 7,
+            detail: "spare columns exhausted".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("fc1"), "{s}");
+        assert!(s.contains("tile 1"), "{s}");
+        assert!(s.contains("block 3"), "{s}");
+        assert!(s.contains("column 7"), "{s}");
+        assert!(s.contains("exhausted"), "{s}");
+        match e {
+            TimError::DeviceFault { tile, block, column, .. } => {
+                assert_eq!((tile, block, column), (1, 3, 7));
+            }
+            _ => panic!("wrong variant"),
+        }
     }
 
     #[test]

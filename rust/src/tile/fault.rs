@@ -1,0 +1,352 @@
+//! TPC fault model and ABFT health types (paper §V + Laborieux et al.
+//! 2005.01973: in-memory ternary storage is exposed to stuck cells and
+//! ADC reference drift; a deployment must *detect* those, not only
+//! simulate them).
+//!
+//! [`TpcFaultMap`] is the deterministic device-fault counterpart of the
+//! serving layer's `FaultPlan`: a seeded, pure-function description of
+//! which cells are stuck and which ADC columns have drifted. Faults are
+//! applied as a **read-path overlay** — the stored weights stay golden —
+//! which is exactly how a physical defect behaves (the programmed state
+//! is fine, the readout lies) and what makes column sparing possible:
+//! copying a logical column to a spare physical column re-reads the
+//! golden storage through healthy cells.
+//!
+//! Transient faults use a duty cycle that is a pure function of
+//! `(seed, access_counter)` via one `SplitMix64` draw, mirroring
+//! `FaultPlan::fault_at`: independent of thread timing, reproducible
+//! across reruns, and shared by the batch kernel and the scalar oracle.
+
+use crate::util::prng::{Rng, SplitMix64};
+
+use super::TileConfig;
+
+/// Per-(block, physical-column) stuck-cell masks. Bit `i` of each mask
+/// refers to row `i` of the block, matching the storage mask layout in
+/// `tim.rs`. A stuck cell forces the *read* value of that TPC:
+///
+/// * `force_plus`:  reads as +1 regardless of the stored trit
+/// * `force_minus`: reads as −1 regardless of the stored trit
+/// * `force_zero`:  reads as 0 (stuck-at-zero — both bit-cells dead)
+///
+/// The three masks are disjoint by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CellOverlay {
+    pub force_plus: u32,
+    pub force_minus: u32,
+    pub force_zero: u32,
+}
+
+impl CellOverlay {
+    /// True when the overlay changes nothing.
+    pub fn is_clean(&self) -> bool {
+        (self.force_plus | self.force_minus | self.force_zero) == 0
+    }
+
+    /// Apply the overlay to a stored `(plus, minus)` mask pair, returning
+    /// the masks the faulty read path observes.
+    pub fn apply(&self, wp: u32, wm: u32) -> (u32, u32) {
+        let wp = (wp & !(self.force_zero | self.force_minus)) | self.force_plus;
+        let wm = (wm & !(self.force_zero | self.force_plus)) | self.force_minus;
+        (wp, wm)
+    }
+}
+
+/// Deterministic persistent/transient device-fault map for one tile.
+///
+/// Built from a seed plus the tile geometry, then refined with the
+/// builder methods. All randomness is drawn from `util::prng` at build
+/// time; at read time the map is a pure lookup (plus one `SplitMix64`
+/// draw per access for the transient duty cycle), so two runs with the
+/// same seed observe identical fault behaviour.
+#[derive(Clone, Debug)]
+pub struct TpcFaultMap {
+    seed: u64,
+    n: usize,
+    /// Rows per block (stuck cells are drawn from the live rows only).
+    l: usize,
+    /// Dense `k × n` overlay table, indexed `block * n + col`.
+    overlays: Vec<CellOverlay>,
+    /// Per-physical-column ADC count drift `(δn, δk)`, applied to the raw
+    /// bitline counts before clamping to `[0, L]` — a drifted flash-ADC
+    /// reference ladder digitizes as if the count had shifted.
+    drift: Vec<(i32, i32)>,
+    /// `Some((num, den))`: the fault is active on accesses where
+    /// `hash(seed + access) % den < num`. `None`: always active
+    /// (persistent).
+    duty: Option<(u64, u64)>,
+    /// True once any builder installed a fault (lets the kernel skip the
+    /// overlay walk for an empty map).
+    any: bool,
+}
+
+impl TpcFaultMap {
+    /// An empty (fault-free) map for the given tile geometry.
+    pub fn seeded(seed: u64, cfg: &TileConfig) -> Self {
+        Self {
+            seed,
+            n: cfg.n,
+            l: cfg.l,
+            overlays: vec![CellOverlay::default(); cfg.k * cfg.n],
+            drift: vec![(0, 0); cfg.n],
+            duty: None,
+            any: false,
+        }
+    }
+
+    /// Install `count` stuck cells at seeded-random `(block, row, col)`
+    /// sites, each stuck at a seeded-random state (+1 / −1 / 0).
+    /// Collisions overwrite (the cell keeps the last state drawn), so the
+    /// effective stuck-cell count can be slightly below `count` for dense
+    /// requests — deterministic either way.
+    pub fn stuck_cells(mut self, count: usize) -> Self {
+        let blocks = self.overlays.len() / self.n;
+        let mut rng = Rng::seeded(self.seed ^ 0x57C6_CE11);
+        for _ in 0..count {
+            let b = rng.below(blocks as u64) as usize;
+            let row = rng.below(self.l as u64) as u32;
+            let c = rng.below(self.n as u64) as usize;
+            let bit = 1u32 << row;
+            let o = &mut self.overlays[b * self.n + c];
+            o.force_plus &= !bit;
+            o.force_minus &= !bit;
+            o.force_zero &= !bit;
+            match rng.below(3) {
+                0 => o.force_plus |= bit,
+                1 => o.force_minus |= bit,
+                _ => o.force_zero |= bit,
+            }
+        }
+        self.any = true;
+        self
+    }
+
+    /// Install ADC count drift on `n_cols` distinct seeded-random physical
+    /// columns. Each drifted column gets independent nonzero `δn` and `δk`
+    /// with magnitude in `1..=max_mag`.
+    pub fn column_drift(mut self, n_cols: usize, max_mag: u32) -> Self {
+        assert!(max_mag >= 1, "drift magnitude must be at least 1");
+        let n_cols = n_cols.min(self.n);
+        let mut rng = Rng::seeded(self.seed ^ 0xD21F_7C01);
+        let mut cols: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut cols);
+        for &c in cols.iter().take(n_cols) {
+            let mag = |r: &mut Rng| {
+                let m = r.range_i64(1, i64::from(max_mag)) as i32;
+                if r.chance(0.5) {
+                    m
+                } else {
+                    -m
+                }
+            };
+            self.drift[c] = (mag(&mut rng), mag(&mut rng));
+        }
+        self.any = true;
+        self
+    }
+
+    /// Install an exact drift `(δn, δk)` on one physical column —
+    /// targeted injection for tests and fault-coverage studies.
+    pub fn drift_at(mut self, col: usize, dn: i32, dk: i32) -> Self {
+        self.drift[col] = (dn, dk);
+        self.any = true;
+        self
+    }
+
+    /// Make the fault transient with duty cycle `num/den`: the map is
+    /// active on an access iff one `SplitMix64` draw keyed by
+    /// `(seed, access)` lands below the duty threshold. Default (without
+    /// this call) is persistent — active on every access.
+    pub fn transient(mut self, num: u64, den: u64) -> Self {
+        assert!(den > 0 && num <= den, "duty cycle must satisfy num <= den, den > 0");
+        self.duty = Some((num, den));
+        self
+    }
+
+    /// Whether the fault is active for the given access counter value.
+    /// Pure function of `(seed, access)` — independent of timing and of
+    /// which code path (batch kernel vs scalar oracle) performs the read.
+    pub fn is_active(&self, access: u64) -> bool {
+        match self.duty {
+            None => true,
+            Some((num, den)) => {
+                SplitMix64::new(self.seed.wrapping_add(access)).next_u64() % den < num
+            }
+        }
+    }
+
+    /// The stuck-cell overlay for `(block, physical column)`.
+    pub fn overlay(&self, block: usize, col: usize) -> CellOverlay {
+        self.overlays[block * self.n + col]
+    }
+
+    /// The ADC count drift `(δn, δk)` for a physical column.
+    pub fn drift(&self, col: usize) -> (i32, i32) {
+        self.drift[col]
+    }
+
+    /// True if any builder installed a fault.
+    pub fn has_faults(&self) -> bool {
+        self.any
+    }
+
+    /// Physical columns touched by any fault (stuck cell in any block, or
+    /// drift) — handy for tests placing faults away from the spare pool.
+    pub fn faulty_columns(&self) -> Vec<usize> {
+        let blocks = self.overlays.len() / self.n;
+        (0..self.n)
+            .filter(|&c| {
+                self.drift[c] != (0, 0)
+                    || (0..blocks).any(|b| !self.overlays[b * self.n + c].is_clean())
+            })
+            .collect()
+    }
+
+    /// Restrict all faults to physical columns `< limit` by clearing
+    /// overlays and drift at or above it. Used by recovery tests to keep
+    /// the spare pool healthy.
+    pub fn confined_below(mut self, limit: usize) -> Self {
+        let blocks = self.overlays.len() / self.n;
+        for b in 0..blocks {
+            for c in limit..self.n {
+                self.overlays[b * self.n + c] = CellOverlay::default();
+            }
+        }
+        for c in limit..self.n {
+            self.drift[c] = (0, 0);
+        }
+        self
+    }
+}
+
+/// Aggregate ABFT counters for one tile (or summed across tiles/layers).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileHealth {
+    /// Checksum verifications performed (one per patch-block attempt).
+    pub abft_checks: u64,
+    /// Verifications that flagged a mismatch.
+    pub abft_detected: u64,
+    /// Block re-executions triggered by a detection.
+    pub blocks_reexecuted: u64,
+    /// Logical columns remapped to spare physical columns.
+    pub columns_spared: u64,
+    /// Spare physical columns still available.
+    pub spares_left: u64,
+}
+
+impl TileHealth {
+    /// Element-wise sum (spares_left adds too — it is reported as total
+    /// remaining spare capacity across the aggregated tiles).
+    pub fn merge(&mut self, other: &TileHealth) {
+        self.abft_checks += other.abft_checks;
+        self.abft_detected += other.abft_detected;
+        self.blocks_reexecuted += other.blocks_reexecuted;
+        self.columns_spared += other.columns_spared;
+        self.spares_left += other.spares_left;
+    }
+}
+
+/// What the ABFT guard did about one detection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AbftAction {
+    /// Mismatch detected; the block was re-executed.
+    Reexecuted,
+    /// A column reached two strikes and was remapped to a spare.
+    Spared,
+    /// Recovery gave up (spares exhausted or attempt cap hit) and the
+    /// guard returned a typed `DeviceFault` error.
+    Exhausted,
+}
+
+/// One entry of the fault-localization log kept by the ABFT guard
+/// (bounded; see `AbftGuard::MAX_EVENTS`). Feeds the CI reliability
+/// report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AbftEvent {
+    /// The tile's access counter at detection time.
+    pub access: u64,
+    /// Block index the mismatch occurred in.
+    pub block: usize,
+    /// Logical column implicated (the localized column, or the first
+    /// implicated column for multi-column detections).
+    pub column: usize,
+    pub action: AbftAction,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TileConfig {
+        TileConfig { l: 16, k: 4, n: 32, m: 8, n_max: 8 }
+    }
+
+    #[test]
+    fn same_seed_same_map() {
+        let a = TpcFaultMap::seeded(9, &cfg()).stuck_cells(12).column_drift(4, 3);
+        let b = TpcFaultMap::seeded(9, &cfg()).stuck_cells(12).column_drift(4, 3);
+        for blk in 0..cfg().k {
+            for c in 0..cfg().n {
+                assert_eq!(a.overlay(blk, c), b.overlay(blk, c));
+            }
+        }
+        for c in 0..cfg().n {
+            assert_eq!(a.drift(c), b.drift(c));
+        }
+        assert_eq!(a.faulty_columns(), b.faulty_columns());
+    }
+
+    #[test]
+    fn overlay_masks_are_disjoint_and_apply_forces_state() {
+        let m = TpcFaultMap::seeded(3, &cfg()).stuck_cells(40);
+        for blk in 0..cfg().k {
+            for c in 0..cfg().n {
+                let o = m.overlay(blk, c);
+                assert_eq!(o.force_plus & o.force_minus, 0);
+                assert_eq!(o.force_plus & o.force_zero, 0);
+                assert_eq!(o.force_minus & o.force_zero, 0);
+            }
+        }
+        // A stuck-plus cell reads +1 whatever was stored.
+        let o = CellOverlay { force_plus: 0b100, force_minus: 0, force_zero: 0 };
+        assert_eq!(o.apply(0, 0b100), (0b100, 0)); // stored −1 → reads +1
+        assert_eq!(o.apply(0, 0), (0b100, 0)); // stored 0 → reads +1
+        // Stuck-zero kills both planes.
+        let z = CellOverlay { force_plus: 0, force_minus: 0, force_zero: 0b1 };
+        assert_eq!(z.apply(0b1, 0), (0, 0));
+        assert_eq!(z.apply(0, 0b1), (0, 0));
+    }
+
+    #[test]
+    fn drift_is_nonzero_on_exactly_n_cols() {
+        let m = TpcFaultMap::seeded(5, &cfg()).column_drift(6, 2);
+        let drifted: Vec<usize> = (0..cfg().n).filter(|&c| m.drift(c) != (0, 0)).collect();
+        assert_eq!(drifted.len(), 6);
+        for &c in &drifted {
+            let (dn, dk) = m.drift(c);
+            assert!(dn != 0 && dn.abs() <= 2, "dn={dn}");
+            assert!(dk != 0 && dk.abs() <= 2, "dk={dk}");
+        }
+    }
+
+    #[test]
+    fn duty_cycle_is_pure_and_roughly_proportional() {
+        let m = TpcFaultMap::seeded(11, &cfg()).stuck_cells(1).transient(1, 4);
+        // Purity: same access → same answer, any order.
+        let first: Vec<bool> = (0..1000).map(|a| m.is_active(a)).collect();
+        let again: Vec<bool> = (0..1000).rev().map(|a| m.is_active(a)).collect();
+        let again: Vec<bool> = again.into_iter().rev().collect();
+        assert_eq!(first, again);
+        let active = first.iter().filter(|&&x| x).count();
+        assert!((150..=350).contains(&active), "duty 1/4 gave {active}/1000");
+        // Persistent map is always active.
+        let p = TpcFaultMap::seeded(11, &cfg()).stuck_cells(1);
+        assert!((0..100).all(|a| p.is_active(a)));
+    }
+
+    #[test]
+    fn confined_below_clears_high_columns() {
+        let m = TpcFaultMap::seeded(7, &cfg()).stuck_cells(64).column_drift(16, 3).confined_below(8);
+        assert!(m.faulty_columns().iter().all(|&c| c < 8));
+    }
+}

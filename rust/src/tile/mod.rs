@@ -13,9 +13,11 @@
 //! second stage of a two-stage pipeline with the array access, so the
 //! steady-state VMM issue rate is one access per `T_VMM` (§III-C).
 
+mod fault;
 mod meter;
 mod tim;
 
+pub use fault::{AbftAction, AbftEvent, CellOverlay, TileHealth, TpcFaultMap};
 pub use meter::{EnergyBreakdown, TileMeter};
 pub use tim::{PackedCodes, PackedTrits, TimTile, VmmMode, VmmResult};
 

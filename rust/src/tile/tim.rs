@@ -8,6 +8,7 @@
 //! full bitline-voltage → flash-ADC path (optionally with V_T variation
 //! noise), which is what the Monte-Carlo study exercises.
 
+use super::fault::{AbftAction, AbftEvent, TileHealth, TpcFaultMap};
 use super::{TileConfig, TileMeter};
 use crate::analog::{sample_bl_voltage, Adc, BitlineCurve};
 use crate::error::{Result, TimError};
@@ -169,6 +170,87 @@ struct TileScratch {
     counts: Vec<(u32, u32)>,
     plane: Vec<Trit>,
     plane_out: Vec<f32>,
+    /// Guarded-path observation buffers: per-column raw observed (n, k)
+    /// counts and the digitized row pending checksum verification.
+    obs_n: Vec<u32>,
+    obs_k: Vec<u32>,
+    digrow: Vec<i32>,
+}
+
+/// Strikes before a logical column is declared persistently bad and
+/// remapped to a spare physical column: the first detection re-executes
+/// (a transient clears on retry), the second spares.
+const ABFT_STRIKES: u8 = 2;
+
+/// Re-execution attempts per patch before the guard gives up with a
+/// typed `DeviceFault` — a backstop against fault maps that corrupt the
+/// spare pool itself (multi-column sparing converges in ≤ 3 attempts for
+/// recoverable maps).
+const MAX_GUARD_ATTEMPTS: u32 = 16;
+
+/// Fault-localization log cap (the CI reliability report reads these;
+/// a runaway fault must not grow the log unboundedly).
+const MAX_ABFT_EVENTS: usize = 256;
+
+/// ABFT state for one tile (Huang–Abraham style column checksums over
+/// the *raw count* domain, where the VMM is exactly linear — see
+/// DESIGN.md "Fault domains & supervision").
+///
+/// Per (block, row-in-block) the guard stores four weight checksums over
+/// the guarded logical columns `0..guard_cols`, split by weight plane
+/// and by column-index weighting:
+///
+/// ```text
+/// c0p[b·L + r] = Σ_c   wp[b][r][c]        c0m[b·L + r] = Σ_c   wm[b][r][c]
+/// c1p[b·L + r] = Σ_c (c+1)·wp[b][r][c]    c1m[b·L + r] = Σ_c (c+1)·wm[b][r][c]
+/// ```
+///
+/// For an access with RWD masks `(xp, xm)` the clean raw counts satisfy
+/// four integer identities (n collects `wp·xp + wm·xm`, k collects
+/// `wp·xm + wm·xp`):
+///
+/// ```text
+/// Σ_c n_c = Σ_{r∈xp} c0p + Σ_{r∈xm} c0m      Σ_c (c+1)·n_c = … with c1·
+/// Σ_c k_c = Σ_{r∈xm} c0p + Σ_{r∈xp} c0m      Σ_c (c+1)·k_c = … with c1·
+/// ```
+///
+/// Verifying n and k *separately* (not just their difference) catches
+/// equal drift on both ADCs of a column, which preserves `n − k` but
+/// corrupts the clipped digitization. The index-weighted pair localizes
+/// a single faulty column as `syndrome₁ / syndrome₀ − 1`; any fault
+/// confined to one column is localized exactly, and a fault confined to
+/// ≤ 2 columns is always *detected* (two columns cannot zero both the
+/// unweighted and the weighted syndrome of the same plane).
+#[derive(Clone, Debug)]
+struct AbftGuard {
+    /// Logical (guarded) column count; physical columns `guard_cols..N`
+    /// form the spare pool.
+    guard_cols: usize,
+    c0p: Vec<i32>,
+    c0m: Vec<i32>,
+    c1p: Vec<i32>,
+    c1m: Vec<i32>,
+    /// Logical → physical column map (identity until sparing remaps).
+    remap: Vec<u32>,
+    /// Detections charged against each logical column; at
+    /// [`ABFT_STRIKES`] the column is spared. Never reset on success, so
+    /// a recurring transient on one column eventually gets spared too.
+    strikes: Vec<u8>,
+    /// Next unused physical spare column.
+    next_spare: usize,
+    checks: u64,
+    detected: u64,
+    reexecuted: u64,
+    spared: u64,
+    events: Vec<AbftEvent>,
+}
+
+impl AbftGuard {
+    fn push_event(&mut self, e: AbftEvent) {
+        if self.events.len() < MAX_ABFT_EVENTS {
+            self.events.push(e);
+        }
+    }
 }
 
 /// Register-block width of the weight-stationary batch kernel: the inner
@@ -288,6 +370,15 @@ pub struct TimTile {
     /// hoisting all LUT/ADC work out of the batch kernel's inner loop.
     digit_lut: Vec<u32>,
     scratch: TileScratch,
+    /// Installed device-fault map: a read-path overlay (stored weights
+    /// stay golden). `None` keeps every VMM entry point on the clean hot
+    /// path — the injection branch is one `Option` discriminant test.
+    fault: Option<TpcFaultMap>,
+    /// Monotone access counter driving the transient duty cycle; advances
+    /// once per physical block access on the faulty read paths.
+    fault_access: u64,
+    /// ABFT checksum guard (None until [`Self::enable_abft`]).
+    guard: Option<AbftGuard>,
     pub meter: TileMeter,
 }
 
@@ -309,6 +400,9 @@ impl TimTile {
             volt_lut,
             digit_lut,
             scratch: TileScratch::default(),
+            fault: None,
+            fault_access: 0,
+            guard: None,
             meter: TileMeter::new(),
         }
     }
@@ -442,6 +536,9 @@ impl TimTile {
     ) -> u64 {
         assert!(block < self.cfg.k, "block {block} out of range");
         assert!(ncols <= self.cfg.n, "ncols {ncols} wider than the tile");
+        if self.fault.is_some() {
+            return self.vmm_block_masks_into_faulty(block, xp, xm, ncols, mode, counts);
+        }
         // Size once, slot-write after: at steady state (same ncols every
         // call — the packed paths' access pattern) this never touches Vec
         // capacity logic, unlike the old clear()/reserve()/push per call.
@@ -541,6 +638,9 @@ impl TimTile {
             patch_masks.len() * ncols,
             "acc must be patch_masks.len() × ncols, patch-major"
         );
+        if self.fault.is_some() {
+            return self.vmm_block_batch_into_faulty(block, patch_masks, ncols, shift, mode, acc);
+        }
         let live = || patch_masks.iter().filter(|&&(xp, xm)| (xp | xm) != 0).count() as u64;
         let (accesses, discharges) = match mode {
             VmmMode::Ideal => {
@@ -673,6 +773,481 @@ impl TimTile {
             *slot += (dn - dk) << shift;
         }
         discharges
+    }
+
+    // -----------------------------------------------------------------
+    // Device faults + ABFT (cold paths — the clean kernels above never
+    // enter these; see DESIGN.md "Fault domains & supervision")
+    // -----------------------------------------------------------------
+
+    /// Install a device-fault map on this tile's read path. Stored
+    /// weights are untouched; every subsequent VMM entry point (including
+    /// the scalar oracle paths) observes the faulted reads.
+    pub fn set_fault_map(&mut self, map: TpcFaultMap) {
+        self.fault = Some(map);
+    }
+
+    /// Remove the fault map — reads are clean again.
+    pub fn clear_fault_map(&mut self) {
+        self.fault = None;
+    }
+
+    /// The installed fault map, if any.
+    pub fn fault_map(&self) -> Option<&TpcFaultMap> {
+        self.fault.as_ref()
+    }
+
+    /// Enable the ABFT checksum guard over logical columns
+    /// `0..guard_cols`; physical columns `guard_cols..N` become the spare
+    /// pool. Checksums are computed from the *stored* (golden) weights,
+    /// so call this after the weights are loaded; reloading weights
+    /// afterwards invalidates the guard (re-enable to refresh).
+    pub fn enable_abft(&mut self, guard_cols: usize) {
+        assert!(guard_cols <= self.cfg.n, "guard_cols wider than the tile");
+        let kl = self.cfg.k * self.cfg.l;
+        let mut c0p = vec![0i32; kl];
+        let mut c0m = vec![0i32; kl];
+        let mut c1p = vec![0i32; kl];
+        let mut c1m = vec![0i32; kl];
+        for (b, blk) in self.blocks.iter().enumerate() {
+            for c in 0..guard_cols {
+                let w1 = (c + 1) as i32;
+                let (wp, wm) = (blk.plus[c], blk.minus[c]);
+                for r in 0..self.cfg.l {
+                    let bit = 1u32 << r;
+                    let idx = b * self.cfg.l + r;
+                    if wp & bit != 0 {
+                        c0p[idx] += 1;
+                        c1p[idx] += w1;
+                    }
+                    if wm & bit != 0 {
+                        c0m[idx] += 1;
+                        c1m[idx] += w1;
+                    }
+                }
+            }
+        }
+        self.guard = Some(AbftGuard {
+            guard_cols,
+            c0p,
+            c0m,
+            c1p,
+            c1m,
+            remap: (0..guard_cols as u32).collect(),
+            strikes: vec![0; guard_cols],
+            next_spare: guard_cols,
+            checks: 0,
+            detected: 0,
+            reexecuted: 0,
+            spared: 0,
+            events: Vec::new(),
+        });
+    }
+
+    /// ABFT counters, `None` until [`Self::enable_abft`].
+    pub fn health(&self) -> Option<TileHealth> {
+        self.guard.as_ref().map(|g| TileHealth {
+            abft_checks: g.checks,
+            abft_detected: g.detected,
+            blocks_reexecuted: g.reexecuted,
+            columns_spared: g.spared,
+            spares_left: (self.cfg.n - g.next_spare) as u64,
+        })
+    }
+
+    /// Fault-localization log (empty until the guard detects something;
+    /// bounded at [`MAX_ABFT_EVENTS`]).
+    pub fn abft_events(&self) -> &[AbftEvent] {
+        self.guard.as_ref().map_or(&[], |g| &g.events)
+    }
+
+    /// Observed raw bitline counts for one physical column under the
+    /// installed fault map: stuck-cell overlay on the weight masks, then
+    /// ADC reference drift as a count-domain shift clamped to `[0, L]`
+    /// (a drifted flash-ADC ladder digitizes as if the count had moved).
+    /// Returns `(n_obs, k_obs, discharges)`; discharges reflect the
+    /// faulted masks (a stuck-at-+1 cell really does discharge).
+    fn observed_counts(
+        &self,
+        block: usize,
+        col: usize,
+        xp: u32,
+        xm: u32,
+        active: bool,
+    ) -> (u32, u32, u64) {
+        let blk = &self.blocks[block];
+        let (mut wp, mut wm) = (blk.plus[col], blk.minus[col]);
+        let (mut dn, mut dk) = (0i32, 0i32);
+        if active {
+            if let Some(f) = &self.fault {
+                let (p, m) = f.overlay(block, col).apply(wp, wm);
+                wp = p;
+                wm = m;
+                let (a, b) = f.drift(col);
+                dn = a;
+                dk = b;
+            }
+        }
+        let n_raw = ((wp & xp) | (wm & xm)).count_ones();
+        let k_raw = ((wp & xm) | (wm & xp)).count_ones();
+        let d = u64::from(n_raw + k_raw);
+        let lim = self.cfg.l as i64;
+        let n_obs = (i64::from(n_raw) + i64::from(dn)).clamp(0, lim) as u32;
+        let k_obs = (i64::from(k_raw) + i64::from(dk)).clamp(0, lim) as u32;
+        (n_obs, k_obs, d)
+    }
+
+    /// Digitize one observed `(n, k)` pair per the active mode — the
+    /// cold-path mirror of the specialized digitization in the clean
+    /// kernels (exhaustive over [`VmmMode`]).
+    fn digitize_pair(&self, n_obs: u32, k_obs: u32, mode: &mut VmmMode) -> (u32, u32) {
+        match mode {
+            VmmMode::Ideal => (n_obs.min(self.cfg.n_max), k_obs.min(self.cfg.n_max)),
+            VmmMode::Analog => (self.digit_lut[n_obs as usize], self.digit_lut[k_obs as usize]),
+            VmmMode::AnalogNoisy(rng) => {
+                let vn = sample_bl_voltage(&self.curve, n_obs, rng);
+                let vk = sample_bl_voltage(&self.curve, k_obs, rng);
+                (self.adc.decode_noisy(vn, rng), self.adc.decode_noisy(vk, rng))
+            }
+        }
+    }
+
+    /// Fault-injected twin of the masks core: same digitized-counts
+    /// contract, but weights pass through the stuck-cell overlay and the
+    /// counts through the ADC drift before digitization. Cold path —
+    /// reached only when a fault map is installed.
+    fn vmm_block_masks_into_faulty(
+        &mut self,
+        block: usize,
+        xp: u32,
+        xm: u32,
+        ncols: usize,
+        mode: &mut VmmMode,
+        counts: &mut Vec<(u32, u32)>,
+    ) -> u64 {
+        if counts.len() != ncols {
+            counts.resize(ncols, (0, 0));
+        }
+        let access = self.fault_access;
+        self.fault_access += 1;
+        let active = self.fault.as_ref().is_some_and(|f| f.is_active(access));
+        let mut discharges = 0u64;
+        for c in 0..ncols {
+            let (n_obs, k_obs, d) = self.observed_counts(block, c, xp, xm, active);
+            discharges += d;
+            counts[c] = self.digitize_pair(n_obs, k_obs, mode);
+        }
+        self.meter.record_access(discharges);
+        discharges
+    }
+
+    /// Fault-injected twin of the batch kernel: sequential per-patch
+    /// accesses (each advancing the fault-duty counter), observed through
+    /// the overlay + drift. Meters every patch as an access — the faulty
+    /// read path does not input-gate, matching the noisy arm's metering.
+    fn vmm_block_batch_into_faulty(
+        &mut self,
+        block: usize,
+        patch_masks: &[(u32, u32)],
+        ncols: usize,
+        shift: u32,
+        mode: &mut VmmMode,
+        acc: &mut [i32],
+    ) -> u64 {
+        let mut discharges = 0u64;
+        if ncols > 0 {
+            for (&(xp, xm), row) in patch_masks.iter().zip(acc.chunks_exact_mut(ncols)) {
+                let access = self.fault_access;
+                self.fault_access += 1;
+                let active = self.fault.as_ref().is_some_and(|f| f.is_active(access));
+                for (c, slot) in row.iter_mut().enumerate() {
+                    let (n_obs, k_obs, d) = self.observed_counts(block, c, xp, xm, active);
+                    discharges += d;
+                    let (dn, dk) = self.digitize_pair(n_obs, k_obs, mode);
+                    *slot += (dn as i32 - dk as i32) << shift;
+                }
+            }
+        }
+        self.meter.record_batch_access(patch_masks.len() as u64, discharges);
+        discharges
+    }
+
+    /// Checksum-guarded batch VMM: the ABFT entry point of the batch hot
+    /// path. Value-equivalent to [`Self::vmm_block_batch_into`] at
+    /// `ncols = guard_cols` with no gating, but every patch access is
+    /// verified against the weight-column checksums *before* its
+    /// digitized row is committed to `acc`:
+    ///
+    /// * on a clean verify, the row commits and the patch advances;
+    /// * on a mismatch, the implicated logical column(s) are localized
+    ///   (syndrome division for a single column, golden per-column
+    ///   recompute otherwise), each collects a strike, any column at
+    ///   [`ABFT_STRIKES`] is remapped to a spare physical column
+    ///   (weights re-read from golden storage), and the patch
+    ///   re-executes — a transient clears on retry, a persistent fault
+    ///   is repaired by the sparing;
+    /// * spares exhausted or [`MAX_GUARD_ATTEMPTS`] reached returns a
+    ///   typed [`TimError::DeviceFault`] naming the `(block, column)` —
+    ///   the caller never receives an unverified row.
+    ///
+    /// Requires [`Self::enable_abft`]. `acc.len()` must equal
+    /// `patch_masks.len() * guard_cols`. Under `AnalogNoisy`, failed
+    /// attempts consume RNG draws (the retry re-samples), so fixed-seed
+    /// noisy streams are only comparable between runs with identical
+    /// fault schedules.
+    pub fn vmm_block_batch_guarded_into(
+        &mut self,
+        block: usize,
+        patch_masks: &[(u32, u32)],
+        shift: u32,
+        mode: &mut VmmMode,
+        acc: &mut [i32],
+    ) -> Result<u64> {
+        let mut obs_n = std::mem::take(&mut self.scratch.obs_n);
+        let mut obs_k = std::mem::take(&mut self.scratch.obs_k);
+        let mut digrow = std::mem::take(&mut self.scratch.digrow);
+        let res = self.guarded_core(
+            block,
+            patch_masks,
+            shift,
+            mode,
+            acc,
+            &mut obs_n,
+            &mut obs_k,
+            &mut digrow,
+        );
+        self.scratch.obs_n = obs_n;
+        self.scratch.obs_k = obs_k;
+        self.scratch.digrow = digrow;
+        res
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn guarded_core(
+        &mut self,
+        block: usize,
+        patch_masks: &[(u32, u32)],
+        shift: u32,
+        mode: &mut VmmMode,
+        acc: &mut [i32],
+        obs_n: &mut Vec<u32>,
+        obs_k: &mut Vec<u32>,
+        digrow: &mut Vec<i32>,
+    ) -> Result<u64> {
+        let ncols =
+            self.guard.as_ref().expect("enable_abft before the guarded VMM").guard_cols;
+        assert!(block < self.cfg.k, "block {block} out of range");
+        assert_eq!(
+            acc.len(),
+            patch_masks.len() * ncols,
+            "acc must be patch_masks.len() × guard_cols, patch-major"
+        );
+        let l = self.cfg.l;
+        let mut total_discharges = 0u64;
+        let mut attempts_total = 0u64;
+        for (p, &(xp, xm)) in patch_masks.iter().enumerate() {
+            // Input-side checksum folds: the clean-read expectations for
+            // this (block, input) pair, exact in integer arithmetic.
+            let (e_n0, e_k0, e_n1, e_k1) = {
+                let g = self.guard.as_ref().expect("guard verified above");
+                let base = block * l;
+                let (mut en0, mut ek0, mut en1, mut ek1) = (0i64, 0i64, 0i64, 0i64);
+                for r in 0..l {
+                    let bit = 1u32 << r;
+                    if xp & bit != 0 {
+                        en0 += i64::from(g.c0p[base + r]);
+                        ek0 += i64::from(g.c0m[base + r]);
+                        en1 += i64::from(g.c1p[base + r]);
+                        ek1 += i64::from(g.c1m[base + r]);
+                    }
+                    if xm & bit != 0 {
+                        en0 += i64::from(g.c0m[base + r]);
+                        ek0 += i64::from(g.c0p[base + r]);
+                        en1 += i64::from(g.c1m[base + r]);
+                        ek1 += i64::from(g.c1p[base + r]);
+                    }
+                }
+                (en0, ek0, en1, ek1)
+            };
+            let mut attempt = 0u32;
+            loop {
+                attempt += 1;
+                attempts_total += 1;
+                let access = self.fault_access;
+                self.fault_access += 1;
+                let active = self.fault.as_ref().is_some_and(|f| f.is_active(access));
+                obs_n.clear();
+                obs_n.resize(ncols, 0);
+                obs_k.clear();
+                obs_k.resize(ncols, 0);
+                digrow.clear();
+                digrow.resize(ncols, 0);
+                for c in 0..ncols {
+                    let phys = self.guard.as_ref().expect("guard").remap[c] as usize;
+                    let (n_obs, k_obs, d) = self.observed_counts(block, phys, xp, xm, active);
+                    total_discharges += d;
+                    obs_n[c] = n_obs;
+                    obs_k[c] = k_obs;
+                    let (dn, dk) = self.digitize_pair(n_obs, k_obs, mode);
+                    digrow[c] = (dn as i32 - dk as i32) << shift;
+                }
+                // Verify all four raw-count identities (i64: worst case
+                // 256 cols × weight 256 × count 32 ≈ 2.1M, far in range).
+                let (mut rn0, mut rk0, mut rn1, mut rk1) = (0i64, 0i64, 0i64, 0i64);
+                for c in 0..ncols {
+                    let w1 = (c + 1) as i64;
+                    rn0 += i64::from(obs_n[c]);
+                    rk0 += i64::from(obs_k[c]);
+                    rn1 += w1 * i64::from(obs_n[c]);
+                    rk1 += w1 * i64::from(obs_k[c]);
+                }
+                {
+                    let g = self.guard.as_mut().expect("guard");
+                    g.checks += 1;
+                }
+                if rn0 == e_n0 && rk0 == e_k0 && rn1 == e_n1 && rk1 == e_k1 {
+                    let row = &mut acc[p * ncols..(p + 1) * ncols];
+                    for (o, &v) in row.iter_mut().zip(digrow.iter()) {
+                        *o += v;
+                    }
+                    break;
+                }
+                self.guard.as_mut().expect("guard").detected += 1;
+                // Localize: a single faulty column satisfies
+                // weighted = (col + 1) · unweighted on its plane's
+                // syndromes; both planes must agree when both fire.
+                let single_from = |s0: i64, s1: i64| -> Option<usize> {
+                    if s0 != 0 && s1 % s0 == 0 {
+                        let q = s1 / s0;
+                        if (1..=ncols as i64).contains(&q) {
+                            return Some((q - 1) as usize);
+                        }
+                    }
+                    None
+                };
+                let (sn0, sn1) = (e_n0 - rn0, e_n1 - rn1);
+                let (sk0, sk1) = (e_k0 - rk0, e_k1 - rk1);
+                let n_hit = sn0 != 0 || sn1 != 0;
+                let k_hit = sk0 != 0 || sk1 != 0;
+                let single = match (n_hit, k_hit) {
+                    (true, false) => single_from(sn0, sn1),
+                    (false, true) => single_from(sk0, sk1),
+                    _ => match (single_from(sn0, sn1), single_from(sk0, sk1)) {
+                        (Some(a), Some(b)) if a == b => Some(a),
+                        _ => None,
+                    },
+                };
+                let mut event_col = single.unwrap_or(0);
+                match single {
+                    Some(c) => self.strike(block, c, access)?,
+                    None => {
+                        // Multi-column: recompute each column's clean raw
+                        // counts from golden storage and strike every
+                        // column whose observation deviates.
+                        let mut first = true;
+                        for c in 0..ncols {
+                            let phys = self.guard.as_ref().expect("guard").remap[c] as usize;
+                            let blk = &self.blocks[block];
+                            let (wp, wm) = (blk.plus[phys], blk.minus[phys]);
+                            let n = ((wp & xp) | (wm & xm)).count_ones();
+                            let k = ((wp & xm) | (wm & xp)).count_ones();
+                            if n != obs_n[c] || k != obs_k[c] {
+                                if first {
+                                    event_col = c;
+                                    first = false;
+                                }
+                                self.strike(block, c, access)?;
+                            }
+                        }
+                    }
+                }
+                if attempt >= MAX_GUARD_ATTEMPTS {
+                    let g = self.guard.as_mut().expect("guard");
+                    g.push_event(AbftEvent {
+                        access,
+                        block,
+                        column: event_col,
+                        action: AbftAction::Exhausted,
+                    });
+                    return Err(self.device_fault(
+                        block,
+                        event_col,
+                        "re-execution attempts exhausted (fault persists across spares)",
+                    ));
+                }
+                let g = self.guard.as_mut().expect("guard");
+                g.reexecuted += 1;
+                g.push_event(AbftEvent {
+                    access,
+                    block,
+                    column: event_col,
+                    action: AbftAction::Reexecuted,
+                });
+            }
+        }
+        self.meter.record_batch_access(attempts_total, total_discharges);
+        Ok(total_discharges)
+    }
+
+    /// Charge one strike against a logical column; at [`ABFT_STRIKES`]
+    /// remap it to the next spare physical column (or fail typed if the
+    /// spare pool is dry).
+    fn strike(&mut self, block: usize, col: usize, access: u64) -> Result<()> {
+        let g = self.guard.as_mut().expect("guard");
+        g.strikes[col] = g.strikes[col].saturating_add(1);
+        if g.strikes[col] < ABFT_STRIKES {
+            return Ok(());
+        }
+        if self.spare_column(col) {
+            let g = self.guard.as_mut().expect("guard");
+            g.push_event(AbftEvent { access, block, column: col, action: AbftAction::Spared });
+            Ok(())
+        } else {
+            let g = self.guard.as_mut().expect("guard");
+            g.push_event(AbftEvent { access, block, column: col, action: AbftAction::Exhausted });
+            Err(self.device_fault(block, col, "spare columns exhausted"))
+        }
+    }
+
+    /// Remap a logical column to the next spare physical column, copying
+    /// its golden weights there across all blocks (the physical repair
+    /// action; reload energy is not metered — a documented simulation
+    /// liberty, see EXPERIMENTS.md §Reliability). Returns false when the
+    /// pool is exhausted.
+    fn spare_column(&mut self, logical: usize) -> bool {
+        let Some(g) = self.guard.as_mut() else {
+            return false;
+        };
+        if g.next_spare >= self.cfg.n {
+            return false;
+        }
+        let spare = g.next_spare;
+        g.next_spare += 1;
+        let old = g.remap[logical] as usize;
+        g.remap[logical] = spare as u32;
+        g.strikes[logical] = 0;
+        g.spared += 1;
+        for blk in &mut self.blocks {
+            blk.plus[spare] = blk.plus[old];
+            blk.minus[spare] = blk.minus[old];
+            if (blk.plus[spare] | blk.minus[spare]) != 0 {
+                blk.zero = false;
+            }
+        }
+        true
+    }
+
+    /// A `DeviceFault` with tile-local coordinates; the layer engine and
+    /// accelerator fill in the tile index and layer name as the error
+    /// propagates outward.
+    fn device_fault(&self, block: usize, column: usize, detail: &str) -> TimError {
+        TimError::DeviceFault {
+            layer: "-".to_string(),
+            tile: 0,
+            block,
+            column,
+            detail: detail.to_string(),
+        }
     }
 
     /// Full-matrix VMM: the input spans `rows ≤ L·K`; blocks are accessed
@@ -1172,6 +1747,192 @@ mod tests {
         assert!(tile.block_weights_zero(1), "other blocks unaffected");
         tile.write_row(0, &[0i8; 32]);
         assert!(tile.block_weights_zero(0), "clearing the row restores the gate");
+    }
+
+    fn patch_masks(rng: &mut Rng, n_patches: usize, p_zero: f64) -> Vec<(u32, u32)> {
+        (0..n_patches)
+            .map(|_| {
+                let x = rng.trit_vec(16, p_zero);
+                *PackedTrits::pack(&x, 16).blocks().first().unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn guarded_matches_unguarded_when_clean() {
+        let mut rng = Rng::seeded(41);
+        let w = TritMatrix::random(64, 16, 0.4, &mut rng);
+        let mut guarded = TimTile::new(small_cfg());
+        let mut plain = TimTile::new(small_cfg());
+        guarded.load_weights(&w);
+        plain.load_weights(&w);
+        guarded.enable_abft(16);
+        let patches = patch_masks(&mut rng, 6, 0.3);
+        for block in 0..4 {
+            let mut acc_g = vec![0i32; 6 * 16];
+            let mut acc_p = vec![0i32; 6 * 16];
+            guarded
+                .vmm_block_batch_guarded_into(block, &patches, 1, &mut VmmMode::Ideal, &mut acc_g)
+                .unwrap();
+            plain.vmm_block_batch_into(block, &patches, 16, 1, &mut VmmMode::Ideal, &mut acc_p);
+            assert_eq!(acc_g, acc_p, "block {block}");
+        }
+        let h = guarded.health().unwrap();
+        assert!(h.abft_checks >= 24, "one check per patch per block");
+        assert_eq!(h.abft_detected, 0);
+        assert_eq!(h.columns_spared, 0);
+        assert_eq!(h.spares_left, 16);
+        assert!(plain.health().is_none(), "no guard, no health");
+    }
+
+    #[test]
+    fn fault_map_corrupts_unguarded_reads() {
+        // Sanity for the e2e story: without ABFT, an installed fault map
+        // silently changes both the scalar and the batch outputs.
+        let mut rng = Rng::seeded(42);
+        let w = TritMatrix::random(64, 32, 0.3, &mut rng);
+        let mut clean = TimTile::new(small_cfg());
+        let mut faulty = TimTile::new(small_cfg());
+        clean.load_weights(&w);
+        faulty.load_weights(&w);
+        faulty.set_fault_map(TpcFaultMap::seeded(5, &small_cfg()).column_drift(32, 3));
+        let x = rng.trit_vec(16, 0.2);
+        let a = clean.vmm_block(0, &x, &mut VmmMode::Ideal);
+        let b = faulty.vmm_block(0, &x, &mut VmmMode::Ideal);
+        assert_ne!(a.counts, b.counts, "drift on every column must corrupt dense reads");
+        // Batch kernel path corrupts identically silently.
+        let patches = patch_masks(&mut rng, 4, 0.2);
+        let mut acc_c = vec![0i32; 4 * 32];
+        let mut acc_f = vec![0i32; 4 * 32];
+        clean.vmm_block_batch_into(0, &patches, 32, 0, &mut VmmMode::Ideal, &mut acc_c);
+        faulty.vmm_block_batch_into(0, &patches, 32, 0, &mut VmmMode::Ideal, &mut acc_f);
+        assert_ne!(acc_c, acc_f);
+    }
+
+    #[test]
+    fn guard_detects_and_spares_persistent_faults() {
+        let mut rng = Rng::seeded(43);
+        let w = TritMatrix::random(64, 16, 0.4, &mut rng);
+        let mut guarded = TimTile::new(small_cfg());
+        let mut clean = TimTile::new(small_cfg());
+        guarded.load_weights(&w);
+        clean.load_weights(&w);
+        guarded.enable_abft(16);
+        // Stuck cells + ADC drift, all confined to the guarded columns so
+        // the spare pool (phys 16..32) is healthy.
+        let map = TpcFaultMap::seeded(9, &small_cfg())
+            .stuck_cells(64)
+            .column_drift(32, 3)
+            .confined_below(16);
+        guarded.set_fault_map(map);
+        let patches = patch_masks(&mut rng, 8, 0.3);
+        for block in 0..4 {
+            let mut acc_g = vec![0i32; 8 * 16];
+            let mut acc_c = vec![0i32; 8 * 16];
+            guarded
+                .vmm_block_batch_guarded_into(block, &patches, 0, &mut VmmMode::Ideal, &mut acc_g)
+                .unwrap();
+            clean.vmm_block_batch_into(block, &patches, 16, 0, &mut VmmMode::Ideal, &mut acc_c);
+            assert_eq!(acc_g, acc_c, "recovered output must be bit-exact (block {block})");
+        }
+        let h = guarded.health().unwrap();
+        assert!(h.abft_detected > 0, "persistent faults must be detected: {h:?}");
+        assert!(h.columns_spared > 0, "two strikes must spare: {h:?}");
+        assert!(h.spares_left < 16, "sparing consumes the pool: {h:?}");
+        assert!(!guarded.abft_events().is_empty());
+        assert!(guarded
+            .abft_events()
+            .iter()
+            .any(|e| matches!(e.action, super::AbftAction::Spared)));
+    }
+
+    #[test]
+    fn guard_recovers_transient_faults_by_reexecution() {
+        let mut rng = Rng::seeded(44);
+        let w = TritMatrix::random(64, 16, 0.4, &mut rng);
+        let mut guarded = TimTile::new(small_cfg());
+        let mut clean = TimTile::new(small_cfg());
+        guarded.load_weights(&w);
+        clean.load_weights(&w);
+        guarded.enable_abft(16);
+        let map = TpcFaultMap::seeded(13, &small_cfg())
+            .column_drift(32, 2)
+            .confined_below(16)
+            .transient(1, 3);
+        guarded.set_fault_map(map);
+        let patches = patch_masks(&mut rng, 16, 0.3);
+        let mut acc_g = vec![0i32; 16 * 16];
+        let mut acc_c = vec![0i32; 16 * 16];
+        guarded
+            .vmm_block_batch_guarded_into(0, &patches, 0, &mut VmmMode::Ideal, &mut acc_g)
+            .unwrap();
+        clean.vmm_block_batch_into(0, &patches, 16, 0, &mut VmmMode::Ideal, &mut acc_c);
+        assert_eq!(acc_g, acc_c, "every committed row must be clean");
+        let h = guarded.health().unwrap();
+        assert!(h.abft_detected > 0, "{h:?}");
+        assert!(h.blocks_reexecuted > 0, "{h:?}");
+    }
+
+    #[test]
+    fn guard_localizes_single_column_exactly() {
+        let mut rng = Rng::seeded(45);
+        let w = TritMatrix::random(64, 16, 0.3, &mut rng);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        tile.enable_abft(16);
+        // One drifted column: the syndrome quotient must name it.
+        tile.set_fault_map(TpcFaultMap::seeded(1, &small_cfg()).drift_at(5, 2, 1));
+        let patches = patch_masks(&mut rng, 4, 0.2);
+        let mut acc = vec![0i32; 4 * 16];
+        tile.vmm_block_batch_guarded_into(0, &patches, 0, &mut VmmMode::Ideal, &mut acc).unwrap();
+        let h = tile.health().unwrap();
+        assert!(h.abft_detected > 0);
+        for e in tile.abft_events() {
+            assert_eq!(e.column, 5, "single-column localization must be exact: {e:?}");
+        }
+    }
+
+    #[test]
+    fn guard_catches_equal_drift_on_both_adcs() {
+        // δn == δk preserves n − k, so a difference-only checksum would
+        // miss it while clipping still corrupts the digitized output.
+        // The n/k-separate identities catch it.
+        let w = TritMatrix::from_vec(16, 32, vec![1; 16 * 32]);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        tile.enable_abft(16);
+        tile.set_fault_map(TpcFaultMap::seeded(1, &small_cfg()).drift_at(3, 2, 2));
+        // Dense input: n_raw is large, k_raw = 0 → drift shifts both.
+        let patches = vec![(0xFFFFu32, 0u32)];
+        let mut acc = vec![0i32; 16];
+        tile.vmm_block_batch_guarded_into(0, &patches, 0, &mut VmmMode::Ideal, &mut acc).unwrap();
+        assert!(tile.health().unwrap().abft_detected > 0, "equal drift must be detected");
+    }
+
+    #[test]
+    fn guard_exhausts_spares_with_typed_error() {
+        let mut rng = Rng::seeded(46);
+        let w = TritMatrix::random(64, 32, 0.3, &mut rng);
+        let mut tile = TimTile::new(small_cfg());
+        tile.load_weights(&w);
+        // Guard the full width: the spare pool is empty.
+        tile.enable_abft(32);
+        tile.set_fault_map(TpcFaultMap::seeded(17, &small_cfg()).column_drift(32, 3));
+        let patches = patch_masks(&mut rng, 2, 0.2);
+        let mut acc = vec![0i32; 2 * 32];
+        let err = tile
+            .vmm_block_batch_guarded_into(0, &patches, 0, &mut VmmMode::Ideal, &mut acc)
+            .unwrap_err();
+        match err {
+            crate::error::TimError::DeviceFault { block, detail, .. } => {
+                assert_eq!(block, 0);
+                assert!(detail.contains("exhausted"), "{detail}");
+            }
+            other => panic!("expected DeviceFault, got {other:?}"),
+        }
+        let h = tile.health().unwrap();
+        assert!(h.abft_detected > 0);
+        assert_eq!(h.spares_left, 0);
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! End-to-end device-fault chaos (ISSUE 8): a seeded [`TpcFaultMap`]
+//! corrupts the ternary VMM read path of a served model, and these tests
+//! assert the ABFT corruption-recovery contract:
+//!
+//! * with a recoverable fault map active, every client reply is bit-exact
+//!   with the fault-free scalar oracle — detections are repaired by block
+//!   re-execution (transient) or tile sparing (persistent), never served;
+//! * persistent faults show `columns_spared > 0` in the engine metrics,
+//!   and subsequent replies stay correct off the spare columns;
+//! * an unrecoverable map (every physical column faulty, spares included)
+//!   yields typed errors only — no silent corruption — and degrades the
+//!   model through the circuit breaker to `Down`;
+//! * the seeded sweep (`TIMDNN_FAULT_SEED` × `TIMDNN_FAULT_MODE`, swept
+//!   by the CI `reliability` job) writes a fault-localization report,
+//!   `FAULT_report_{seed}_{mode}.json`, from the ABFT event log.
+
+use std::time::Duration;
+
+use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{
+    BatchPolicy, Engine, ExecutorBackend, FunctionalBackend, ModelSpec, SupervisorPolicy,
+};
+use timdnn::model;
+use timdnn::runtime::TensorF32;
+use timdnn::tile::{AbftAction, TileConfig, TpcFaultMap, VmmMode};
+use timdnn::TimError;
+
+/// A hang is a test failure, not a wait.
+const RECV_BOUND: Duration = Duration::from_secs(30);
+
+fn fault_seed() -> u64 {
+    std::env::var("TIMDNN_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+/// `transient` or `persistent` (the default; anything else falls back).
+fn fault_mode() -> String {
+    match std::env::var("TIMDNN_FAULT_MODE").as_deref() {
+        Ok("transient") => "transient".to_string(),
+        _ => "persistent".to_string(),
+    }
+}
+
+fn image(i: usize) -> TensorF32 {
+    let img: Vec<f32> = (0..256).map(|p| ((i * 31 + p * 7) % 101) as f32 / 101.0).collect();
+    TensorF32::new(vec![16, 16, 1], img)
+}
+
+/// Fault-free logits straight from the scalar oracle — the ground truth
+/// every ABFT-guarded reply must match bit-for-bit.
+fn oracle_logits(seed: u64, n: usize) -> Vec<Vec<f32>> {
+    let weights = TimNetWeights::synthetic(seed);
+    let mut acc = TimNetAccelerator::new(&weights, TileConfig::paper());
+    (0..n).map(|i| acc.forward_scalar(&image(i).data, &mut VmmMode::Ideal)).collect()
+}
+
+/// A recoverable map: column drift (and optionally stuck cells) confined
+/// to the guarded logical columns, so the spare pool above stays clean.
+fn recoverable_map(seed: u64, transient: bool) -> TpcFaultMap {
+    let mut map = TpcFaultMap::seeded(seed, &TileConfig::paper())
+        .stuck_cells(48)
+        .column_drift(32, 2)
+        .confined_below(64);
+    if transient {
+        map = map.transient(1, 3);
+    }
+    map
+}
+
+/// Engine serving one TiMNet model through an ABFT-armed
+/// `FunctionalBackend` carrying `map` on fc1 tile 0.
+fn faulty_engine(seed: u64, map: TpcFaultMap, layer: &'static str, sup: SupervisorPolicy) -> Engine {
+    let spec =
+        ModelSpec::for_network("m", &model::tiny_cnn(), &ArchConfig::tim_dnn(), move || {
+            FunctionalBackend::synthetic(seed)
+                .with_abft()
+                .with_device_fault(layer, 0, map.clone())
+                .map(Box::new)
+        })
+        .with_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) })
+        .with_supervisor(sup);
+    Engine::builder().register(spec).unwrap().build().unwrap()
+}
+
+/// Acceptance criterion: with a persistent `TpcFaultMap` active, every
+/// client reply is bit-exact with the fault-free oracle, the metrics show
+/// `columns_spared > 0`, and replies stay correct after sparing.
+#[test]
+fn persistent_faults_are_spared_and_every_reply_is_bit_exact() {
+    const N: usize = 12;
+    let seed = fault_seed();
+    let engine = faulty_engine(
+        seed,
+        recoverable_map(seed, false),
+        "fc1",
+        SupervisorPolicy::default(),
+    );
+    let session = engine.session("m").unwrap();
+    let want = oracle_logits(seed, N);
+    for (i, want_logits) in want.iter().enumerate() {
+        let rx = session.submit(image(i)).unwrap();
+        let resp = rx
+            .recv_timeout(RECV_BOUND)
+            .expect("reply within bound")
+            .unwrap_or_else(|e| panic!("request {i} failed (seed {seed}): {e}"));
+        assert_eq!(
+            &resp.output().data, want_logits,
+            "request {i} differs from the fault-free oracle (seed {seed})"
+        );
+    }
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.completed, N as u64);
+    assert_eq!(snap.batches_failed, 0, "a recoverable map must never fail a batch");
+    assert!(snap.abft_checks > 0, "guarded forward must run checksum verifications");
+    assert!(snap.abft_detected > 0, "the drifted columns must be detected (seed {seed})");
+    assert!(
+        snap.columns_spared > 0,
+        "persistent faults must be repaired by sparing (seed {seed})"
+    );
+}
+
+/// Transient faults (duty-cycled drift) recover by block re-execution:
+/// replies stay bit-exact and `blocks_reexecuted` counts the retries.
+#[test]
+fn transient_faults_recover_by_reexecution_bit_exact() {
+    const N: usize = 8;
+    let seed = fault_seed();
+    let engine = faulty_engine(
+        seed,
+        recoverable_map(seed, true),
+        "fc1",
+        SupervisorPolicy::default(),
+    );
+    let session = engine.session("m").unwrap();
+    let want = oracle_logits(seed, N);
+    for (i, want_logits) in want.iter().enumerate() {
+        let resp = session.infer(image(i)).unwrap_or_else(|e| {
+            panic!("request {i} failed under transient faults (seed {seed}): {e}")
+        });
+        assert_eq!(
+            &resp.output().data, want_logits,
+            "request {i} differs from the fault-free oracle (seed {seed})"
+        );
+    }
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.completed, N as u64);
+    assert_eq!(snap.batches_failed, 0);
+    assert!(snap.abft_detected > 0, "duty-cycled drift must be caught (seed {seed})");
+    assert!(
+        snap.blocks_reexecuted > 0,
+        "transient detections must trigger re-execution (seed {seed})"
+    );
+}
+
+/// Acceptance criterion: an unrecoverable map (all physical columns of
+/// fc2 drifted — spares included) never produces silent corruption. Every
+/// reply is a typed error, and the repeated failures walk the health
+/// machine Degraded → Down so further submissions shed at the breaker.
+#[test]
+fn unrecoverable_faults_fail_typed_and_degrade_through_the_breaker() {
+    const THRESHOLD: u32 = 2;
+    let seed = fault_seed();
+    let cfg = TileConfig::paper();
+    let mut map = TpcFaultMap::seeded(seed, &cfg);
+    for c in 0..cfg.n {
+        // n_raw = L and k_raw = L cannot hold at once (wp/wm are disjoint),
+        // so a (+3, +3) drift on every column is visible on every access —
+        // including the spares that repair attempts land on.
+        map = map.drift_at(c, 3, 3);
+    }
+    let engine = faulty_engine(
+        seed,
+        map,
+        "fc2",
+        SupervisorPolicy {
+            breaker_threshold: THRESHOLD,
+            breaker_cooldown: Duration::from_secs(30),
+            ..SupervisorPolicy::default()
+        },
+    );
+    let session = engine.session("m").unwrap();
+    for i in 0..THRESHOLD {
+        match session.submit(image(i as usize)).unwrap().recv_timeout(RECV_BOUND) {
+            Ok(Err(TimError::Exec { reason, .. })) => {
+                assert!(
+                    reason.contains("device fault") && reason.contains("fc2"),
+                    "error must localize the fault (seed {seed}): {reason}"
+                );
+            }
+            other => panic!("expected a typed device-fault reply, got {other:?}"),
+        }
+    }
+    // Breaker open: the model is Down and submissions fast-fail.
+    match session.submit(image(99)) {
+        Err(TimError::Unavailable { model, .. }) => assert_eq!(model, "m"),
+        other => panic!("expected Unavailable after {THRESHOLD} failures, got {other:?}"),
+    }
+    let snaps = engine.shutdown();
+    let snap = &snaps["m"];
+    assert_eq!(snap.completed, 0, "no unverified output may ever reach a client");
+    assert_eq!(snap.batches_failed, u64::from(THRESHOLD));
+    assert_eq!(snap.requests_shed, 1);
+    assert!(snap.abft_checks > 0, "failed batches still report their ABFT activity");
+    assert!(snap.abft_detected > 0);
+}
+
+/// The seeded sweep behind the CI `reliability` job: run one batch
+/// through a faulty ABFT-armed backend, prove bit-exactness against a
+/// clean backend, and serialize the fault-localization report
+/// (`FAULT_report_{seed}_{mode}.json`) from the event log.
+#[test]
+fn seeded_sweep_writes_fault_localization_report() {
+    const N: usize = 8;
+    let seed = fault_seed();
+    let mode = fault_mode();
+    let map = recoverable_map(seed, mode == "transient");
+    let mut faulty = FunctionalBackend::synthetic(seed)
+        .with_abft()
+        .with_device_fault("fc1", 0, map)
+        .unwrap();
+    let mut clean = FunctionalBackend::synthetic(seed);
+    let batch: Vec<Vec<TensorF32>> = (0..N).map(|i| vec![image(i)]).collect();
+    let got = faulty
+        .execute_batch(&batch)
+        .unwrap_or_else(|e| panic!("recoverable map must serve (seed {seed}, {mode}): {e}"));
+    let want = clean.execute_batch(&batch).unwrap();
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(
+            g[0].data, w[0].data,
+            "request {i} corrupted (seed {seed}, mode {mode})"
+        );
+    }
+
+    let health = faulty.tile_health().expect("ABFT armed, health must report");
+    assert!(health.abft_checks > 0);
+    let events = faulty.abft_events();
+    assert!(!events.is_empty(), "detections must leave a localization trail (seed {seed})");
+
+    // Hand-rolled JSON (std-only workspace): counters plus the per-event
+    // (layer, tile, block, column, action) localization records.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str(&format!("  \"seed\": {seed},\n"));
+    json.push_str(&format!("  \"mode\": \"{mode}\",\n"));
+    json.push_str(&format!("  \"abft_checks\": {},\n", health.abft_checks));
+    json.push_str(&format!("  \"abft_detected\": {},\n", health.abft_detected));
+    json.push_str(&format!("  \"blocks_reexecuted\": {},\n", health.blocks_reexecuted));
+    json.push_str(&format!("  \"columns_spared\": {},\n", health.columns_spared));
+    json.push_str(&format!("  \"spares_left\": {},\n", health.spares_left));
+    json.push_str("  \"events\": [\n");
+    for (i, (layer, tile, ev)) in events.iter().enumerate() {
+        let action = match ev.action {
+            AbftAction::Reexecuted => "reexecuted",
+            AbftAction::Spared => "spared",
+            AbftAction::Exhausted => "exhausted",
+        };
+        let sep = if i + 1 == events.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    {{\"layer\": \"{layer}\", \"tile\": {tile}, \"access\": {}, \
+             \"block\": {}, \"column\": {}, \"action\": \"{action}\"}}{sep}\n",
+            ev.access, ev.block, ev.column
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = format!("FAULT_report_{seed}_{mode}.json");
+    std::fs::write(&path, json).unwrap_or_else(|e| panic!("write {path}: {e}"));
+}

@@ -18,7 +18,7 @@
 //! | `rng-construction`| everywhere except util/prng  | RNG state built directly  |
 //! | `digitize-f32`    | `impl Digitize for` bodies   | any f32/f64 arithmetic    |
 //! | `vmm-mode-match`  | every `match` on `VmmMode`   | missing variant/wildcard  |
-//! | `mutex-lock-unwrap`| `rust/src/coordinator/**`   | bare `.lock().unwrap()`   |
+//! | `mutex-lock-unwrap`| `rust/src/**`               | bare `.lock().unwrap()`   |
 //!
 //! Waivers: a `// timlint::allow(rule): why` comment covers its own line
 //! and the next; `#[timdnn::timlint_allow(rule)]` covers a whole fn.
@@ -538,11 +538,14 @@ impl Ctx<'_> {
         }
     }
 
-    /// Coordinator-only rule: a bare `.lock().unwrap()` turns a poisoned
-    /// mutex (some thread panicked while holding it) into a cascading
-    /// coordinator crash. `lock_unpoisoned` — or any explicit
-    /// `PoisonError` handling such as `unwrap_or_else(PoisonError::
-    /// into_inner)` — keeps serving through worker panics.
+    /// A bare `.lock().unwrap()` turns a poisoned mutex (some thread
+    /// panicked while holding it) into a cascading crash. The rule applies
+    /// to all of `rust/src/**`: supervised workers may panic anywhere a
+    /// backend runs, so every subsystem that shares a mutex with them must
+    /// use `coordinator::lock_unpoisoned` — or explicit `PoisonError`
+    /// handling such as `unwrap_or_else(PoisonError::into_inner)` — to
+    /// keep serving through worker panics. Waivable where a panic is the
+    /// intended behaviour (e.g. tests that poison a mutex on purpose).
     fn mutex_rules(&mut self) {
         for j in 0..self.toks.len() {
             if self.toks[j].text == "."
@@ -556,8 +559,8 @@ impl Ctx<'_> {
                 self.report(
                     j + 1,
                     RULE_MUTEX,
-                    "bare `.lock().unwrap()` in coordinator code panics on a poisoned \
-                     mutex; use coordinator::lock_unpoisoned (or handle the PoisonError) \
+                    "bare `.lock().unwrap()` panics on a poisoned mutex; use \
+                     coordinator::lock_unpoisoned (or handle the PoisonError) \
                      so a worker panic cannot cascade"
                         .to_string(),
                 );
@@ -697,14 +700,6 @@ fn is_prng_module(file: &str) -> bool {
     file.replace('\\', "/").ends_with("util/prng.rs")
 }
 
-/// True when `file` lives under the coordinator subsystem, where the
-/// `mutex-lock-unwrap` rule applies (supervised workers may panic, so
-/// poisoned locks there are expected, not fatal).
-fn is_coordinator_module(file: &str) -> bool {
-    let norm = file.replace('\\', "/");
-    norm.contains("/coordinator/") || norm.starts_with("coordinator/")
-}
-
 /// Lint one source file; `file` is used for diagnostics and the
 /// `util/prng.rs` carve-out.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
@@ -722,9 +717,7 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     if !is_prng_module(file) {
         ctx.rng_rules();
     }
-    if is_coordinator_module(file) {
-        ctx.mutex_rules();
-    }
+    ctx.mutex_rules();
     ctx.vmm_match_rules();
     ctx.findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     ctx.findings
