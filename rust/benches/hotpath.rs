@@ -15,6 +15,9 @@
 //!   weight-stationary batched pipeline,
 //! * 8-wide batched serving through `FunctionalBackend` — pre-PR serial
 //!   scalar cost vs. the batched pool at widths 1 and 8,
+//! * ternary transformer: 16-token batched prefill vs. a single-token
+//!   decode step against the resident KV cache (the autoregressive
+//!   steady state — the ratio is what the cache buys per token),
 //! * mapper + simulator end-to-end, Monte-Carlo variation sampling.
 //!
 //! `cargo bench --bench hotpath -- --smoke` runs a fast CI subset.
@@ -30,6 +33,7 @@ use timdnn::runtime::TensorF32;
 use timdnn::sim;
 use timdnn::tile::{PackedCodes, PackedTrits, TileConfig, TimTile, VmmMode};
 use timdnn::tpc::TritMatrix;
+use timdnn::transformer::{DecoderConfig, DecoderEngine, DecoderWeights};
 use timdnn::util::bench::{bench, black_box, write_json_report, BenchResult};
 use timdnn::util::prng::Rng;
 use timdnn::variation::VariationStudy;
@@ -277,6 +281,45 @@ fn main() {
     );
     results.push(r);
 
+    // --- Transformer: batched prefill vs per-token KV decode -------------
+    // tiny_bitnet geometry; both cases run in the smoke subset (CI checks
+    // the transformer group is present in the smoke report).
+    const PREFILL_LEN: usize = 16;
+    let mut dec = DecoderEngine::new(&DecoderWeights::synthetic(DecoderConfig::tiny(), 7));
+    let prompt: Vec<u32> = (0..PREFILL_LEN as u32).map(|i| (i * 5 + 3) % 64).collect();
+    let mut kv = dec.alloc_kv();
+    let mut dlogits = Vec::new();
+    let r = bench("transformer/decode_prefill16", warmup, measure, || {
+        kv.reset();
+        dec.prefill(black_box(&prompt), &mut kv, &mut VmmMode::Ideal, &mut dlogits);
+        black_box(&dlogits);
+    });
+    let prefill_mean = r.mean.as_secs_f64();
+    println!("  -> {:.0} prompt tokens/s (batched prefill)", r.per_second(PREFILL_LEN as f64));
+    results.push(r);
+
+    // Steady-state single-token decode against the resident cache; the
+    // occasional refill when the 48-slot context runs out amortizes away.
+    kv.reset();
+    dec.prefill(&prompt, &mut kv, &mut VmmMode::Ideal, &mut dlogits);
+    let r = bench("transformer/decode_step", warmup, measure, || {
+        if kv.remaining() == 0 {
+            kv.reset();
+            dec.prefill(&prompt, &mut kv, &mut VmmMode::Ideal, &mut dlogits);
+        }
+        dec.decode_step(black_box(9), &mut kv, &mut VmmMode::Ideal, &mut dlogits);
+        black_box(&dlogits);
+    });
+    let decode_mean = r.mean.as_secs_f64();
+    let prefill_per_token_vs_decode = prefill_mean / (PREFILL_LEN as f64) / decode_mean;
+    println!(
+        "  -> {:.0} tokens/s resident-KV decode (prefill costs {prefill_per_token_vs_decode:.2}x \
+         a decode step per token)",
+        r.per_second(1.0)
+    );
+    results.push(r);
+    dec.release_kv(kv);
+
     // --- Simulator + Monte-Carlo (skipped in smoke mode) -----------------
     if !smoke {
         let resnet = model::resnet34();
@@ -303,6 +346,7 @@ fn main() {
         ("kernel_ws_speedup_vs_scalar", kernel_scalar_mean / kernel_ws_mean),
         ("kernel_ws_speedup_vs_packed", kernel_packed_mean / kernel_ws_mean),
         ("abft_overhead_guarded_vs_ws", abft_overhead),
+        ("transformer_prefill_per_token_vs_decode", prefill_per_token_vs_decode),
     ];
     let mode = if smoke { "smoke" } else { "full" };
     match write_json_report("BENCH_hotpath.json", "hotpath", mode, &results, &derived) {

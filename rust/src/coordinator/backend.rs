@@ -13,7 +13,21 @@ use crate::arch::functional::{TimNetAccelerator, TimNetWeights};
 use crate::error::{Result, TimError};
 use crate::runtime::{Runtime, TensorF32};
 use crate::tile::{TileConfig, TileHealth, TpcFaultMap, VmmMode};
+use crate::transformer::{DecoderConfig, DecoderEngine, DecoderWeights, KvCache};
 use crate::util::prng::{Rng, SplitMix64};
+
+/// Cumulative generation-session counters of a stateful backend. The
+/// supervisor polls these after each batch and feeds the deltas into the
+/// engine metrics, exactly like the [`TileHealth`] ABFT counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// KV caches allocated for new generation sessions.
+    pub opened: u64,
+    /// Sessions evicted (explicit close, LRU pressure, or capacity).
+    pub evicted: u64,
+    /// Single-token decode steps served from a resident KV cache.
+    pub decode_steps: u64,
+}
 
 /// Abstraction over batch execution so the engine can serve any model
 /// without knowing how it computes.
@@ -46,6 +60,13 @@ pub trait ExecutorBackend: 'static {
     /// (the default). The supervisor polls this after each batch and
     /// feeds deltas into the engine metrics.
     fn tile_health(&self) -> Option<TileHealth> {
+        None
+    }
+
+    /// Cumulative generation-session counters for stateful backends
+    /// ([`TransformerBackend`]), or `None` for stateless ones (the
+    /// default). Polled after each batch like [`Self::tile_health`].
+    fn session_stats(&self) -> Option<SessionStats> {
         None
     }
 
@@ -455,6 +476,258 @@ impl ExecutorBackend for FunctionalBackend {
 }
 
 // ---------------------------------------------------------------------------
+// Transformer (stateful KV-cache generation)
+// ---------------------------------------------------------------------------
+
+/// Stateful decoder backend: runs the ternary transformer
+/// ([`crate::transformer::DecoderEngine`]) with **per-session KV caches
+/// kept resident across requests**, so autoregressive decode pays one
+/// token of compute per step instead of re-running the whole prefix.
+///
+/// ### Wire protocol
+///
+/// Each request carries one tensor `[session_id, op, payload…]`:
+///
+/// | op | payload | effect | output |
+/// |----|---------|--------|--------|
+/// | 1 (prefill) | prompt tokens | (re)opens the session, fills its KV | vocab logits of the last position |
+/// | 0 (decode)  | one token     | appends to the resident KV          | vocab logits |
+/// | 2 (close)   | —             | evicts the session's KV             | `[0.0]` |
+///
+/// Build requests with [`Self::prefill_request`] / [`Self::decode_request`]
+/// / [`Self::close_request`]; [`crate::coordinator::Session::generate`]
+/// drives the protocol end to end. Session ids and tokens ride as exact
+/// f32 integers (ids must stay below 2^24).
+///
+/// ### Session lifecycle
+///
+/// KV caches come from the engine's [`crate::transformer::ScratchArena`]
+/// pool, so steady-state session churn is allocation-free. Sessions are
+/// evicted on explicit close, by LRU when `max_sessions` is exceeded, and
+/// wholesale when the supervisor rebuilds the backend after a panic or
+/// breaker trip (the map is backend state). Decoding on an unknown or
+/// evicted session is a typed error, never silent recomputation.
+pub struct TransformerBackend {
+    engine: DecoderEngine,
+    /// `Some` ⇒ every VMM runs [`VmmMode::AnalogNoisy`] over this stream.
+    noise: Option<Rng>,
+    /// Live sessions: `(id, kv, last_used_tick)`. Linear scan — bounded
+    /// by `max_sessions`, which is small.
+    sessions: Vec<(u64, KvCache, u64)>,
+    tick: u64,
+    max_sessions: usize,
+    stats: SessionStats,
+    logits: Vec<i32>,
+}
+
+impl TransformerBackend {
+    /// `op` payload value for a single-token decode step.
+    pub const OP_DECODE: f32 = 0.0;
+    /// `op` payload value for a prompt prefill (opens/resets the session).
+    pub const OP_PREFILL: f32 = 1.0;
+    /// `op` payload value for an explicit session close (KV eviction).
+    pub const OP_CLOSE: f32 = 2.0;
+
+    /// Synthetic decoder weights under `seed` for `cfg`.
+    pub fn new(cfg: DecoderConfig, seed: u64) -> Self {
+        Self::from_weights(&DecoderWeights::synthetic(cfg, seed))
+    }
+
+    /// The `tiny_bitnet` geometry ([`DecoderConfig::tiny`]).
+    pub fn tiny(seed: u64) -> Self {
+        Self::new(DecoderConfig::tiny(), seed)
+    }
+
+    pub fn from_weights(weights: &DecoderWeights) -> Self {
+        Self {
+            engine: DecoderEngine::new(weights),
+            noise: None,
+            sessions: Vec::new(),
+            tick: 0,
+            max_sessions: 8,
+            stats: SessionStats::default(),
+            logits: Vec::new(),
+        }
+    }
+
+    /// Enable V_T-variation sensing noise on every VMM; the provided RNG
+    /// contributes one draw as the seed of the backend's noise stream.
+    pub fn with_noise(mut self, mut rng: Rng) -> Self {
+        self.noise = Some(Rng::seeded(rng.next_u64()));
+        self
+    }
+
+    /// Cap on concurrently-resident sessions (≥ 1); LRU beyond it.
+    pub fn with_max_sessions(mut self, n: usize) -> Self {
+        self.max_sessions = n.max(1);
+        self
+    }
+
+    /// Vocabulary size (logits width).
+    pub fn vocab(&self) -> usize {
+        self.engine.cfg().vocab
+    }
+
+    /// Live (resident-KV) session count.
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Build a prefill request: opens (or resets) `session` with `tokens`.
+    pub fn prefill_request(session: u64, tokens: &[u32]) -> TensorF32 {
+        let mut data = Vec::with_capacity(2 + tokens.len());
+        data.push(session as f32);
+        data.push(Self::OP_PREFILL);
+        data.extend(tokens.iter().map(|&t| t as f32));
+        TensorF32::new(vec![data.len()], data)
+    }
+
+    /// Build a single-token decode request against a resident session.
+    pub fn decode_request(session: u64, token: u32) -> TensorF32 {
+        TensorF32::new(vec![3], vec![session as f32, Self::OP_DECODE, token as f32])
+    }
+
+    /// Build an explicit close request: evicts the session's KV cache.
+    pub fn close_request(session: u64) -> TensorF32 {
+        TensorF32::new(vec![2], vec![session as f32, Self::OP_CLOSE])
+    }
+
+    fn find(&self, id: u64) -> Option<usize> {
+        self.sessions.iter().position(|(sid, _, _)| *sid == id)
+    }
+
+    fn evict_at(&mut self, idx: usize) {
+        let (_, kv, _) = self.sessions.swap_remove(idx);
+        self.engine.release_kv(kv);
+        self.stats.evicted += 1;
+    }
+
+    /// Open a new session, evicting least-recently-used ones as needed.
+    fn open(&mut self, id: u64) -> usize {
+        while self.sessions.len() >= self.max_sessions {
+            if let Some(lru) = (0..self.sessions.len()).min_by_key(|&i| self.sessions[i].2) {
+                self.evict_at(lru);
+            }
+        }
+        self.sessions.push((id, self.engine.alloc_kv(), self.tick));
+        self.stats.opened += 1;
+        self.sessions.len() - 1
+    }
+
+    fn proto_err(what: &str, reason: String) -> TimError {
+        TimError::Exec { what: format!("transformer {what}"), reason }
+    }
+
+    /// Serve one protocol request.
+    fn step(&mut self, req: &TensorF32) -> Result<TensorF32> {
+        let d = &req.data;
+        if d.len() < 2 {
+            return Err(Self::proto_err(
+                "request",
+                format!("needs [session, op, …], got {} scalars", d.len()),
+            ));
+        }
+        self.tick += 1;
+        let id = d[0] as u64;
+        let op = d[1] as u32;
+        if op == Self::OP_CLOSE as u32 {
+            if let Some(i) = self.find(id) {
+                self.evict_at(i);
+            }
+            return Ok(TensorF32::new(vec![1], vec![0.0]));
+        }
+        let vocab = self.engine.cfg().vocab;
+        let tokens: Vec<u32> = d[2..].iter().map(|&t| t as u32).collect();
+        if tokens.is_empty() {
+            return Err(Self::proto_err("request", "no tokens in payload".into()));
+        }
+        if let Some(&bad) = tokens.iter().find(|&&t| t as usize >= vocab) {
+            return Err(Self::proto_err(
+                "request",
+                format!("token {bad} outside the {vocab}-entry vocabulary"),
+            ));
+        }
+        let idx = match op {
+            o if o == Self::OP_PREFILL as u32 => match self.find(id) {
+                Some(i) => {
+                    self.sessions[i].1.reset();
+                    i
+                }
+                None => self.open(id),
+            },
+            o if o == Self::OP_DECODE as u32 => {
+                if tokens.len() != 1 {
+                    return Err(Self::proto_err(
+                        "decode",
+                        format!("expected 1 token, got {}", tokens.len()),
+                    ));
+                }
+                self.find(id).ok_or_else(|| {
+                    Self::proto_err(
+                        "decode",
+                        format!("unknown session {id} (never prefilled, or evicted)"),
+                    )
+                })?
+            }
+            other => {
+                return Err(Self::proto_err("request", format!("unknown op {other}")));
+            }
+        };
+        if tokens.len() > self.sessions[idx].1.remaining() {
+            return Err(Self::proto_err(
+                "request",
+                format!(
+                    "{} token(s) exceed the session's remaining KV capacity of {}",
+                    tokens.len(),
+                    self.sessions[idx].1.remaining()
+                ),
+            ));
+        }
+        self.sessions[idx].2 = self.tick;
+        let mut mode = match self.noise.as_mut() {
+            Some(r) => VmmMode::AnalogNoisy(r),
+            None => VmmMode::Ideal,
+        };
+        if op == Self::OP_PREFILL as u32 {
+            self.engine.prefill(&tokens, &mut self.sessions[idx].1, &mut mode, &mut self.logits);
+        } else {
+            self.engine.decode_step(
+                tokens[0],
+                &mut self.sessions[idx].1,
+                &mut mode,
+                &mut self.logits,
+            );
+            self.stats.decode_steps += 1;
+        }
+        Ok(TensorF32::new(vec![vocab], self.logits.iter().map(|&x| x as f32).collect()))
+    }
+}
+
+impl ExecutorBackend for TransformerBackend {
+    fn execute_batch(&mut self, batch: &[Vec<TensorF32>]) -> Result<Vec<Vec<TensorF32>>> {
+        // Sequential by design: requests mutate session state, and decode
+        // order is the correctness contract (KV positions are appended in
+        // submission order).
+        let mut out = Vec::with_capacity(batch.len());
+        for inputs in batch {
+            if inputs.len() != 1 {
+                return Err(TimError::InputArity { expected: 1, got: inputs.len() });
+            }
+            out.push(vec![self.step(&inputs[0])?]);
+        }
+        Ok(out)
+    }
+
+    fn session_stats(&self) -> Option<SessionStats> {
+        Some(self.stats)
+    }
+
+    fn name(&self) -> &str {
+        "transformer"
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Sim-only
 // ---------------------------------------------------------------------------
 
@@ -627,5 +900,96 @@ mod tests {
                 Err(TimError::BatchMismatch { expected: 4, got: 1 })
             ));
         }
+    }
+
+    fn run_one(b: &mut TransformerBackend, req: TensorF32) -> Result<TensorF32> {
+        let out = b.execute_batch(&[vec![req]])?;
+        Ok(out.into_iter().next().unwrap().into_iter().next().unwrap())
+    }
+
+    #[test]
+    fn transformer_prefill_then_decode_serves_vocab_logits() {
+        let mut b = TransformerBackend::tiny(31);
+        let vocab = b.vocab();
+        let logits = run_one(&mut b, TransformerBackend::prefill_request(1, &[5, 9, 2])).unwrap();
+        assert_eq!(logits.shape, vec![vocab]);
+        let next = run_one(&mut b, TransformerBackend::decode_request(1, 7)).unwrap();
+        assert_eq!(next.shape, vec![vocab]);
+        let stats = b.session_stats().unwrap();
+        assert_eq!(stats.opened, 1);
+        assert_eq!(stats.decode_steps, 1);
+        assert_eq!(stats.evicted, 0);
+        assert_eq!(b.live_sessions(), 1);
+    }
+
+    #[test]
+    fn transformer_decode_against_unknown_session_is_typed_error() {
+        let mut b = TransformerBackend::tiny(31);
+        match run_one(&mut b, TransformerBackend::decode_request(42, 3)) {
+            Err(TimError::Exec { reason, .. }) => assert!(reason.contains("42"), "{reason}"),
+            other => panic!("expected Exec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn transformer_close_evicts_and_further_decodes_fail() {
+        let mut b = TransformerBackend::tiny(31);
+        run_one(&mut b, TransformerBackend::prefill_request(3, &[1])).unwrap();
+        run_one(&mut b, TransformerBackend::close_request(3)).unwrap();
+        assert_eq!(b.live_sessions(), 0);
+        assert_eq!(b.session_stats().unwrap().evicted, 1);
+        assert!(run_one(&mut b, TransformerBackend::decode_request(3, 1)).is_err());
+        // Closing an already-closed session is idempotent.
+        run_one(&mut b, TransformerBackend::close_request(3)).unwrap();
+        assert_eq!(b.session_stats().unwrap().evicted, 1);
+    }
+
+    #[test]
+    fn transformer_lru_eviction_under_session_pressure() {
+        let mut b = TransformerBackend::tiny(31).with_max_sessions(2);
+        run_one(&mut b, TransformerBackend::prefill_request(1, &[1])).unwrap();
+        run_one(&mut b, TransformerBackend::prefill_request(2, &[2])).unwrap();
+        // Touch 1 so 2 becomes the LRU victim.
+        run_one(&mut b, TransformerBackend::decode_request(1, 3)).unwrap();
+        run_one(&mut b, TransformerBackend::prefill_request(9, &[4])).unwrap();
+        assert_eq!(b.live_sessions(), 2);
+        assert_eq!(b.session_stats().unwrap().evicted, 1);
+        assert!(run_one(&mut b, TransformerBackend::decode_request(1, 5)).is_ok());
+        assert!(run_one(&mut b, TransformerBackend::decode_request(2, 5)).is_err());
+    }
+
+    #[test]
+    fn transformer_validates_protocol_before_touching_the_engine() {
+        let mut b = TransformerBackend::tiny(31);
+        let vocab = b.vocab() as u32;
+        // Out-of-vocab token.
+        assert!(run_one(&mut b, TransformerBackend::prefill_request(1, &[vocab])).is_err());
+        // Empty payload.
+        assert!(run_one(&mut b, TransformerBackend::prefill_request(1, &[])).is_err());
+        // Unknown op.
+        let junk = TensorF32::new(vec![3], vec![1.0, 9.0, 0.0]);
+        assert!(run_one(&mut b, junk).is_err());
+        // Truncated request.
+        assert!(run_one(&mut b, TensorF32::new(vec![1], vec![1.0])).is_err());
+        // Over-capacity prompt (max_seq is 48 for the tiny config).
+        let long = vec![0u32; 49];
+        assert!(run_one(&mut b, TransformerBackend::prefill_request(1, &long)).is_err());
+        // None of the failures opened a session or panicked the backend.
+        assert_eq!(b.live_sessions(), 0);
+        assert!(run_one(&mut b, TransformerBackend::prefill_request(1, &[1, 2])).is_ok());
+    }
+
+    #[test]
+    fn transformer_noisy_backend_is_seed_deterministic() {
+        let logits_of = |seed| {
+            let mut b = TransformerBackend::tiny(5).with_noise(Rng::seeded(seed));
+            run_one(&mut b, TransformerBackend::prefill_request(1, &[3, 1, 4])).unwrap().data
+        };
+        assert_eq!(logits_of(7), logits_of(7), "same noise seed, same logits");
+        let ideal = {
+            let mut b = TransformerBackend::tiny(5);
+            run_one(&mut b, TransformerBackend::prefill_request(1, &[3, 1, 4])).unwrap().data
+        };
+        assert_ne!(logits_of(7), ideal, "noise must perturb at least one logit");
     }
 }

@@ -37,7 +37,7 @@ use crate::runtime::TensorF32;
 use crate::sim::SimReport;
 use crate::tile::TileHealth;
 
-use super::backend::{BackendFactory, ExecutorBackend};
+use super::backend::{BackendFactory, ExecutorBackend, SessionStats, TransformerBackend};
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::registry::{ModelRegistry, ModelSpec};
@@ -368,6 +368,7 @@ impl ModelWorker {
                     backoff: sup.restart_backoff,
                     ever_built: false,
                     tile_baseline: TileHealth::default(),
+                    session_baseline: SessionStats::default(),
                 }
                 .run(rx, policy)
             })
@@ -410,6 +411,9 @@ struct Supervisor {
     /// this baseline flow into the ABFT metrics so each poll contributes
     /// exactly once (reset whenever a backend is (re)constructed).
     tile_baseline: TileHealth,
+    /// Same delta-baseline scheme for the generation-session counters of
+    /// stateful backends ([`SessionStats`]).
+    session_baseline: SessionStats,
 }
 
 impl Supervisor {
@@ -465,6 +469,7 @@ impl Supervisor {
             // baseline resets with its replacement.
             if outcome.is_ok() {
                 self.poll_tile_health(&*backend);
+                self.poll_session_stats(&*backend);
             }
             let outputs = match outcome {
                 Ok(Ok(outputs)) => {
@@ -574,6 +579,10 @@ impl Supervisor {
                     // whatever its construction left them at (usually zero);
                     // rebase so the first poll reports only new activity.
                     self.tile_baseline = backend.tile_health().unwrap_or_default();
+                    // Likewise for session counters — a rebuilt stateful
+                    // backend also dropped every resident KV cache, so its
+                    // counters restart with it.
+                    self.session_baseline = backend.session_stats().unwrap_or_default();
                     return Some(backend);
                 }
                 Err(e) => {
@@ -609,6 +618,20 @@ impl Supervisor {
             h.columns_spared.saturating_sub(b.columns_spared),
         );
         self.tile_baseline = h;
+    }
+
+    /// Fold the delta of a stateful backend's cumulative [`SessionStats`]
+    /// counters into the metrics (same baseline scheme as
+    /// [`Self::poll_tile_health`]).
+    fn poll_session_stats(&mut self, backend: &dyn ExecutorBackend) {
+        let Some(s) = backend.session_stats() else { return };
+        let b = self.session_baseline;
+        lock_unpoisoned(&self.metrics).record_sessions(
+            s.opened.saturating_sub(b.opened),
+            s.evicted.saturating_sub(b.evicted),
+            s.decode_steps.saturating_sub(b.decode_steps),
+        );
+        self.session_baseline = s;
     }
 
     /// Drop already-expired requests before dispatch; each gets the typed
@@ -924,6 +947,58 @@ impl Session {
         self.submit_multi(inputs)?.recv().map_err(|_| self.worker_died())?
     }
 
+    /// Autoregressive greedy generation against a stateful transformer
+    /// model (a [`TransformerBackend`] worker): prefill the prompt, then
+    /// decode one token at a time with the session's KV cache resident on
+    /// the worker between steps — each step submits a single token, not
+    /// the growing prefix.
+    ///
+    /// Returns the `max_new` generated token ids (greedy argmax, ties to
+    /// the lowest id). `opts` applies to every step, so a deadline bounds
+    /// the *whole* generation: the step that misses it fails with
+    /// [`TimError::DeadlineExceeded`] and the error propagates. On every
+    /// exit — completion, deadline expiry, breaker trip, any submit or
+    /// batch error — the worker-side KV cache is released with a
+    /// best-effort close, so abandoned generations don't pin KV slots
+    /// until LRU pressure reclaims them.
+    pub fn generate(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        opts: SubmitOptions,
+    ) -> Result<Vec<u32>> {
+        if prompt.is_empty() {
+            return Err(TimError::InputArity { expected: 1, got: 0 });
+        }
+        let sid = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let result = self.generate_steps(sid, prompt, max_new, opts);
+        // Best-effort eviction on every path; ignore the outcome — a
+        // stopped or Down worker has already dropped its KV state.
+        let _ = self.submit_multi(vec![TransformerBackend::close_request(sid)]);
+        result
+    }
+
+    fn generate_steps(
+        &self,
+        sid: u64,
+        prompt: &[u32],
+        max_new: usize,
+        opts: SubmitOptions,
+    ) -> Result<Vec<u32>> {
+        let mut logits =
+            self.infer_with(TransformerBackend::prefill_request(sid, prompt), opts)?.outputs;
+        let mut out = Vec::with_capacity(max_new);
+        for step in 0..max_new {
+            let next = argmax_f32(&logits[0].data) as u32;
+            out.push(next);
+            if step + 1 == max_new {
+                break;
+            }
+            logits = self.infer_with(TransformerBackend::decode_request(sid, next), opts)?.outputs;
+        }
+        Ok(out)
+    }
+
     /// A dropped reply channel after a successful submit means the worker
     /// died without answering — orderly shutdown always replies with
     /// EngineStopped first (see `Supervisor::drain_stopped`). Surface it
@@ -937,9 +1012,28 @@ impl Session {
     }
 }
 
+/// Greedy pick over f32 logits: first maximum wins, matching the
+/// fixed-point `intmath::argmax` tie-break (lowest index).
+fn argmax_f32(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn argmax_breaks_ties_to_the_lowest_index() {
+        assert_eq!(argmax_f32(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax_f32(&[-5.0]), 0);
+        assert_eq!(argmax_f32(&[0.0, 0.0]), 0);
+    }
 
     #[test]
     fn health_cell_walks_the_state_machine() {

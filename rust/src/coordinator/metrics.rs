@@ -27,6 +27,9 @@ pub struct Metrics {
     abft_detected: u64,
     blocks_reexecuted: u64,
     columns_spared: u64,
+    sessions_opened: u64,
+    sessions_evicted: u64,
+    decode_steps: u64,
 }
 
 impl Metrics {
@@ -51,6 +54,9 @@ impl Metrics {
             abft_detected: 0,
             blocks_reexecuted: 0,
             columns_spared: 0,
+            sessions_opened: 0,
+            sessions_evicted: 0,
+            decode_steps: 0,
         }
     }
 
@@ -120,6 +126,15 @@ impl Metrics {
         self.columns_spared += spared;
     }
 
+    /// Fold in generation-session deltas polled from a stateful backend's
+    /// [`crate::coordinator::SessionStats`] after a batch: KV caches
+    /// opened, sessions evicted, and single-token decode steps served.
+    pub fn record_sessions(&mut self, opened: u64, evicted: u64, steps: u64) {
+        self.sessions_opened += opened;
+        self.sessions_evicted += evicted;
+        self.decode_steps += steps;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let pct = |xs: &Vec<f64>, q| if xs.is_empty() { 0.0 } else { percentile(xs, q) };
         MetricsSnapshot {
@@ -147,6 +162,9 @@ impl Metrics {
             abft_detected: self.abft_detected,
             blocks_reexecuted: self.blocks_reexecuted,
             columns_spared: self.columns_spared,
+            sessions_opened: self.sessions_opened,
+            sessions_evicted: self.sessions_evicted,
+            decode_steps: self.decode_steps,
         }
     }
 }
@@ -198,6 +216,14 @@ pub struct MetricsSnapshot {
     /// Logical columns remapped to spare tile capacity after repeated
     /// (persistent) faults.
     pub columns_spared: u64,
+    /// Generation sessions opened (KV caches allocated) on a stateful
+    /// transformer backend.
+    pub sessions_opened: u64,
+    /// Generation sessions evicted (explicit close, LRU pressure, or
+    /// backend rebuild).
+    pub sessions_evicted: u64,
+    /// Single-token decode steps served from a resident KV cache.
+    pub decode_steps: u64,
 }
 
 impl MetricsSnapshot {
@@ -233,6 +259,10 @@ impl MetricsSnapshot {
         println!(
             "  abft                 {} checks, {} detected, {} blocks re-executed, {} columns spared",
             self.abft_checks, self.abft_detected, self.blocks_reexecuted, self.columns_spared
+        );
+        println!(
+            "  kv sessions          {} opened, {} evicted, {} decode steps",
+            self.sessions_opened, self.sessions_evicted, self.decode_steps
         );
         println!("  sim hw latency p50   {:.3} us", self.sim_latency_p50_s * 1e6);
         println!(
@@ -317,5 +347,21 @@ mod tests {
         assert_eq!(s.columns_spared, 1);
         // report() must never panic regardless of counter state.
         s.report("abft-test");
+    }
+
+    #[test]
+    fn session_counters_accumulate_across_polls() {
+        let mut m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.sessions_opened, 0);
+        assert_eq!(s.sessions_evicted, 0);
+        assert_eq!(s.decode_steps, 0);
+        m.record_sessions(2, 1, 40);
+        m.record_sessions(0, 1, 8);
+        let s = m.snapshot();
+        assert_eq!(s.sessions_opened, 2);
+        assert_eq!(s.sessions_evicted, 2);
+        assert_eq!(s.decode_steps, 48);
+        s.report("session-test");
     }
 }

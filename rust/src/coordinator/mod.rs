@@ -13,9 +13,11 @@
 //! * each worker drains batches, executes them on its backend —
 //!   [`PjrtBackend`] (AOT JAX/Pallas artifact via PJRT),
 //!   [`FunctionalBackend`] (pure-rust ternary forward pass on the tile
-//!   model, no artifacts needed), or [`SimOnlyBackend`] (echo, for load
-//!   studies) — and charges the batch against the simulated TiM-DNN
-//!   hardware for latency/energy accounting;
+//!   model, no artifacts needed), [`TransformerBackend`] (stateful
+//!   ternary decoder with per-session KV caches resident across
+//!   requests — see [`Session::generate`]), or [`SimOnlyBackend`]
+//!   (echo, for load studies) — and charges the batch against the
+//!   simulated TiM-DNN hardware for latency/energy accounting;
 //! * [`Metrics`] report host wall-clock and simulated-hardware numbers
 //!   per model.
 //!
@@ -38,7 +40,8 @@ mod metrics;
 mod registry;
 
 pub use backend::{
-    BackendFactory, ExecutorBackend, FunctionalBackend, PjrtBackend, SimOnlyBackend,
+    BackendFactory, ExecutorBackend, FunctionalBackend, PjrtBackend, SessionStats,
+    SimOnlyBackend, TransformerBackend,
 };
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{

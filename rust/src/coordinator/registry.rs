@@ -89,7 +89,10 @@ impl ModelSpec {
         let prog = crate::mapper::map_network(net, arch);
         let tiles = prog.max_tiles_used();
         let hardware = crate::sim::simulate(&prog, arch);
-        let audit = ProgramAudit::of(&prog, arch);
+        let mut audit = ProgramAudit::of(&prog, arch);
+        // Exact head counts for the attention checks (the bare program
+        // audit only has the conservative single-head fallback).
+        audit.annotate_attention(net);
         Self::new(name, hardware, factory).with_tiles(tiles).with_audit(audit)
     }
 

@@ -44,6 +44,7 @@ pub mod runtime;
 pub mod sim;
 pub mod tile;
 pub mod tpc;
+pub mod transformer;
 pub mod util;
 pub mod variation;
 pub mod verify;

@@ -10,8 +10,8 @@
 mod zoo;
 
 pub use zoo::{
-    alexnet, find_benchmark, find_network, gru_ptb, inception_v1, lstm_ptb, resnet34, tiny_cnn,
-    zoo, Benchmark,
+    alexnet, find_benchmark, find_network, gru_ptb, inception_v1, lstm_ptb, ptb_decoder, resnet34,
+    tiny_bitnet, tiny_cnn, zoo, Benchmark,
 };
 
 /// Activation precision of a layer's inputs (Table III "[A,W]" column).
@@ -60,6 +60,15 @@ pub enum Layer {
     Relu { name: String, elems: usize },
     /// Quantization of activations back to ternary/2-bit (SFU QU).
     Quant { name: String, elems: usize },
+    /// Causal self-attention over `seq` positions: the fused
+    /// QKV + output projection (d_model × 4·d_model, the LSTM fused-gate
+    /// convention) runs as ternary VMMs; scores, integer softmax and the
+    /// value mix are SFU/SPE work. Decode is sequentially dependent
+    /// (KV-cache order), so attention maps like a recurrent layer.
+    Attention { name: String, d_model: usize, heads: usize, seq: usize },
+    /// Integer layernorm over a `d`-wide stream (SFU vPE work, no
+    /// weights — mean/variance/rsqrt normalization per position).
+    LayerNorm { name: String, d: usize },
 }
 
 impl Layer {
@@ -71,7 +80,9 @@ impl Layer {
             | Layer::Gru { name, .. }
             | Layer::Pool { name, .. }
             | Layer::Relu { name, .. }
-            | Layer::Quant { name, .. } => name,
+            | Layer::Quant { name, .. }
+            | Layer::Attention { name, .. }
+            | Layer::LayerNorm { name, .. } => name,
         }
     }
 
@@ -101,6 +112,12 @@ impl Layer {
                 positions: seq,
                 unique_inputs: (d_in + hidden) * seq,
             }),
+            Layer::Attention { d_model, seq, .. } => Some(VmmShape {
+                rows: d_model,
+                cols: 4 * d_model,
+                positions: seq,
+                unique_inputs: d_model * seq,
+            }),
             _ => None,
         }
     }
@@ -124,20 +141,28 @@ impl Layer {
             // Gate nonlinearities + elementwise cell updates.
             Layer::Lstm { hidden, seq, .. } => (seq * hidden * 4) as u64,
             Layer::Gru { hidden, seq, .. } => (seq * hidden * 3) as u64,
+            // Causal score grid + probability mix, every head: the
+            // worst-case seq × seq triangle rounded up to the full grid.
+            Layer::Attention { heads, seq, .. } => (heads * seq * seq) as u64,
+            Layer::LayerNorm { d, .. } => d as u64,
             _ => 0,
         }
     }
 
     /// Is this a recurrent layer (sequentially-dependent positions)?
+    /// Attention counts: autoregressive decode consumes the KV cache in
+    /// position order, so the mapper must not replicate it.
     pub fn is_recurrent(&self) -> bool {
-        matches!(self, Layer::Lstm { .. } | Layer::Gru { .. })
+        matches!(self, Layer::Lstm { .. } | Layer::Gru { .. } | Layer::Attention { .. })
     }
 
-    /// Special-function (tanh/sigmoid) element count — SPE work.
+    /// Special-function (exp/tanh/sigmoid) element count — SPE work.
     pub fn spe_elems(&self) -> u64 {
         match *self {
             Layer::Lstm { hidden, seq, .. } => (seq * hidden * 4) as u64,
             Layer::Gru { hidden, seq, .. } => (seq * hidden * 3) as u64,
+            // One base-2 exponential per causal score cell per head.
+            Layer::Attention { heads, seq, .. } => (heads * seq * seq) as u64,
             _ => 0,
         }
     }

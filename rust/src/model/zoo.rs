@@ -81,12 +81,20 @@ pub fn find_benchmark(name: &str) -> Option<Benchmark> {
 
 /// Look up a *servable* network: the five Table III benchmarks (by
 /// case-insensitive substring, like [`find_benchmark`]) plus the in-repo
-/// end-to-end model under the exact aliases "timnet" / "tiny_cnn" /
-/// "tiny" (exact, so a typo like "net" cannot silently resolve here).
+/// models under exact aliases ("timnet"/"tiny_cnn"/"tiny" for the CNN,
+/// "tiny_bitnet"/"bitnet" and "ptb_decoder"/"decoder" for the
+/// transformers — exact, so a typo like "net" cannot silently resolve
+/// here).
 pub fn find_network(name: &str) -> Option<Network> {
     let q = name.to_lowercase();
     if matches!(q.as_str(), "timnet" | "tiny_cnn" | "tinycnn" | "tiny") {
         return Some(tiny_cnn());
+    }
+    if matches!(q.as_str(), "tiny_bitnet" | "tinybitnet" | "bitnet") {
+        return Some(tiny_bitnet());
+    }
+    if matches!(q.as_str(), "ptb_decoder" | "ptbdecoder" | "decoder") {
+        return Some(ptb_decoder());
     }
     find_benchmark(name).map(|b| b.net)
 }
@@ -237,6 +245,65 @@ pub fn tiny_cnn() -> Network {
     Network { name: "TiMNet".into(), layers, act_precision: ActPrecision::TwoBit, recurrent: false }
 }
 
+/// Shared decoder-block stack for the BitNet-style transformer models.
+/// Per block: layernorm → causal attention (fused QKV + output
+/// projection, see [`Layer::Attention`]) → layernorm → the two MLP
+/// projections modeled as 1×1 convolutions over a seq × 1 "feature map"
+/// so position accounting follows the mapper's im2col convention.
+/// A final layernorm + FC head project back to the vocabulary.
+fn decoder_net(
+    name: &str,
+    vocab: usize,
+    d_model: usize,
+    heads: usize,
+    d_ff: usize,
+    seq: usize,
+    blocks: usize,
+) -> Network {
+    let mut layers = Vec::new();
+    for b in 0..blocks {
+        layers.push(Layer::LayerNorm { name: format!("blk{b}.ln1"), d: d_model });
+        layers.push(Layer::Attention { name: format!("blk{b}.attn"), d_model, heads, seq });
+        layers.push(Layer::LayerNorm { name: format!("blk{b}.ln2"), d: d_model });
+        layers.push(Layer::Conv2d {
+            name: format!("blk{b}.mlp.w1"),
+            c_in: d_model,
+            c_out: d_ff,
+            kh: 1,
+            kw: 1,
+            h_out: seq,
+            w_out: 1,
+        });
+        layers.extend(relu_quant(&format!("blk{b}.mlp"), seq * d_ff));
+        layers.push(Layer::Conv2d {
+            name: format!("blk{b}.mlp.w2"),
+            c_in: d_ff,
+            c_out: d_model,
+            kh: 1,
+            kw: 1,
+            h_out: seq,
+            w_out: 1,
+        });
+    }
+    layers.push(Layer::LayerNorm { name: "ln_f".into(), d: d_model });
+    layers.push(Layer::Fc { name: "head".into(), d_in: d_model, d_out: vocab });
+    Network { name: name.into(), layers, act_precision: ActPrecision::TwoBit, recurrent: true }
+}
+
+/// The in-repo ternary decoder ("TinyBitNet") matching
+/// `transformer::DecoderConfig::tiny()` exactly — the model the
+/// transformer subsystem executes end to end through the serving engine.
+pub fn tiny_bitnet() -> Network {
+    decoder_net("TinyBitNet", 64, 64, 4, 128, 48, 2)
+}
+
+/// A PTB-scale decoder sized like the paper's RNN benchmarks: weights
+/// fit on-array entirely (≈1.1 M of the 2 M-word capacity), with the
+/// embedding/softmax handled off-array as for LSTM/GRU.
+pub fn ptb_decoder() -> Network {
+    decoder_net("PTB-Decoder", 256, 256, 8, 512, 35, 2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +361,42 @@ mod tests {
     #[test]
     fn tiny_cnn_is_small() {
         assert!(tiny_cnn().total_weight_words() < 50_000);
+    }
+
+    #[test]
+    fn decoder_models_fit_on_array_like_the_rnns() {
+        assert!(tiny_bitnet().fits(ACCEL_CAPACITY_WORDS));
+        let w = ptb_decoder().total_weight_words();
+        assert!(ptb_decoder().fits(ACCEL_CAPACITY_WORDS), "weights={w}");
+        assert!(w > 1_000_000, "PTB decoder should be PTB-scale, got {w}");
+    }
+
+    #[test]
+    fn decoder_attention_accounting() {
+        let net = tiny_bitnet();
+        assert!(net.recurrent);
+        let attn =
+            net.layers.iter().find(|l| matches!(l, Layer::Attention { .. })).unwrap();
+        let s = attn.vmm_shape().unwrap();
+        assert_eq!((s.rows, s.cols, s.positions), (64, 256, 48));
+        assert_eq!(attn.weight_words(), 64 * 256);
+        assert!(attn.is_recurrent());
+        // heads · seq² exponentials (SPE) and score/mix elements (SFU).
+        assert_eq!(attn.spe_elems(), 4 * 48 * 48);
+        assert_eq!(attn.sfu_elems(), 4 * 48 * 48);
+        let ln = net.layers.iter().find(|l| matches!(l, Layer::LayerNorm { .. })).unwrap();
+        assert!(ln.vmm_shape().is_none());
+        assert_eq!(ln.sfu_elems(), 64);
+    }
+
+    #[test]
+    fn decoder_lookup_is_exact_alias_only() {
+        assert_eq!(find_network("bitnet").unwrap().name, "TinyBitNet");
+        assert_eq!(find_network("tiny_bitnet").unwrap().name, "TinyBitNet");
+        assert_eq!(find_network("decoder").unwrap().name, "PTB-Decoder");
+        assert!(find_benchmark("bitnet").is_none()); // not a Table III row
+        // The tiny CNN aliases still win over the transformer aliases.
+        assert_eq!(find_network("tiny").unwrap().name, "TiMNet");
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Integer-domain softmax / layernorm kernels for the ternary decoder.
+//!
+//! Everything here is fixed-point: logits are Q[`EXP_FRAC_BITS`] in the
+//! log2 domain, probabilities are Q[`PROB_BITS`], and layernorm emits a
+//! stream normalized to a power-of-two RMS target. **This file must not
+//! contain a single float token** — the timlint `no-float-in-intsoftmax`
+//! rule scans every token of `transformer/intmath.rs` with the same
+//! detector that guards `Digitize` impls, so even a stray literal like
+//! `0.5` in test code fails CI. The one place the decoder touches floats
+//! is the serving boundary (tensor conversion), which lives in the parent
+//! module.
+//!
+//! Why integer softmax at all: the TiM tile's PCU hands back *integer*
+//! digitized counts, and the attention score/mix path sits between two
+//! tile projections. Keeping the whole span integer means the decode
+//! step is bit-reproducible across hosts (no libm, no FMA contraction
+//! differences) and the KV cache stores exact values the recompute path
+//! can reproduce draw-for-draw.
+
+/// Fractional bits of softmax logits: logits are interpreted as
+/// `value / 2^EXP_FRAC_BITS` in the **base-2** exponent domain, so one
+/// logit unit is 2^(1/64) ≈ 1.09x of probability mass.
+pub const EXP_FRAC_BITS: u32 = 6;
+
+/// Fractional bits of softmax probabilities (Q15: 32768 == 1).
+pub const PROB_BITS: u32 = 15;
+
+/// Fixed-point one for [`PROB_BITS`].
+pub const PROB_ONE: i32 = 1 << PROB_BITS;
+
+/// Layernorm RMS target: outputs are scaled so the per-vector standard
+/// deviation lands at `1 << NORM_BITS`.
+pub const NORM_BITS: u32 = 6;
+
+/// `round(2^(-f/64) * 2^15)` for `f` in `0..64` — the fractional-part
+/// table of the base-2 exponential. Monotone decreasing from 32768 to
+/// 16562; the integer part of the exponent becomes a plain right shift.
+const EXP2_NEG_Q15: [i32; 64] = [
+    32768, 32415, 32066, 31720, 31379, 31041, 30706, 30376,
+    30048, 29725, 29405, 29088, 28774, 28464, 28158, 27855,
+    27554, 27258, 26964, 26674, 26386, 26102, 25821, 25543,
+    25268, 24995, 24726, 24460, 24196, 23936, 23678, 23423,
+    23170, 22921, 22674, 22430, 22188, 21949, 21713, 21479,
+    21247, 21019, 20792, 20568, 20347, 20127, 19911, 19696,
+    19484, 19274, 19066, 18861, 18658, 18457, 18258, 18061,
+    17867, 17674, 17484, 17296, 17109, 16925, 16743, 16562,
+];
+
+/// `2^(-d / 2^EXP_FRAC_BITS)` in Q15 for a non-negative Q6 distance `d`.
+/// Splits into integer shift + fractional table lookup; underflows to 0
+/// once the shift exceeds the Q15 mantissa.
+#[inline]
+pub fn exp2_neg_q15(d: i32) -> i32 {
+    debug_assert!(d >= 0, "distance from max must be non-negative");
+    let int = (d >> EXP_FRAC_BITS) as u32;
+    if int >= 31 {
+        return 0;
+    }
+    let frac = (d & ((1 << EXP_FRAC_BITS) - 1)) as usize;
+    EXP2_NEG_Q15[frac] >> int
+}
+
+/// Integer softmax: Q6 base-2 logits in, Q15 probabilities out.
+///
+/// Max-subtracted for range safety (the largest logit always maps to
+/// weight `2^15`), then normalized with a rounded i64 division. The
+/// probabilities sum to [`PROB_ONE`] within ±`len/2` units — the oracle
+/// tolerance pinned in `tests/transformer_kernels.rs`.
+#[timdnn::hot_path]
+pub fn softmax_q15(logits: &[i32], probs: &mut [i32]) {
+    assert!(!logits.is_empty(), "softmax over an empty score row");
+    assert_eq!(logits.len(), probs.len(), "softmax shape");
+    let mut max = logits[0];
+    for &l in &logits[1..] {
+        if l > max {
+            max = l;
+        }
+    }
+    let mut sum: i64 = 0;
+    for (p, &l) in probs.iter_mut().zip(logits) {
+        let w = exp2_neg_q15(max - l);
+        *p = w;
+        sum += i64::from(w);
+    }
+    // max-subtraction guarantees at least one full-scale weight.
+    debug_assert!(sum > 0);
+    for p in probs.iter_mut() {
+        let scaled = i64::from(*p) * i64::from(PROB_ONE) + sum / 2;
+        // timlint::allow(narrowing-cast): quotient ≤ PROB_ONE since w ≤ sum
+        *p = (scaled / sum) as i32;
+    }
+}
+
+/// Probability-weighted mix of cached value rows:
+/// `out[j] = (Σ_t probs[t] · values[t·d + j]) >> PROB_BITS`.
+///
+/// `values` is row-major `[t][j]` with stride `d` — exactly the KV-cache
+/// value layout — and the accumulator is i64 so a full-length context at
+/// maximum magnitude cannot wrap.
+#[timdnn::hot_path]
+pub fn attend_q15(probs: &[i32], values: &[i32], d: usize, out: &mut [i32]) {
+    assert_eq!(values.len(), probs.len() * d, "value cache shape");
+    assert_eq!(out.len(), d, "attention output shape");
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc: i64 = 0;
+        for (t, &p) in probs.iter().enumerate() {
+            acc += i64::from(p) * i64::from(values[t * d + j]);
+        }
+        // timlint::allow(narrowing-cast): Σp = PROB_ONE ⇒ |acc>>15| ≤ max|v|
+        *o = (acc >> PROB_BITS) as i32;
+    }
+}
+
+/// Causal attention scores for one head: `scores[t] = (q · keys[t]) >>
+/// shift`, with `keys` row-major at stride `q.len()` — the KV-cache key
+/// layout. The dot product accumulates in i64; the shift folds the
+/// 1/√d_head temperature into the Q[`EXP_FRAC_BITS`] logit format.
+#[timdnn::hot_path]
+pub fn qk_scores(q: &[i32], keys: &[i32], shift: u32, scores: &mut [i32]) {
+    let d = q.len();
+    assert_eq!(keys.len(), scores.len() * d, "key cache shape");
+    for (t, s) in scores.iter_mut().enumerate() {
+        let mut acc: i64 = 0;
+        for (j, &qj) in q.iter().enumerate() {
+            acc += i64::from(qj) * i64::from(keys[t * d + j]);
+        }
+        // timlint::allow(narrowing-cast): verify::check_program bounds d·q·k >> shift to i32
+        *s = (acc >> shift) as i32;
+    }
+}
+
+/// Integer layernorm: recenters `x` to zero mean and rescales so the
+/// standard deviation becomes `1 << NORM_BITS`. Variance accumulates in
+/// i128 (immune to i64 wrap for any i32 input), the square root is the
+/// exact integer floor sqrt, and a zero-variance row degrades to all
+/// zeros rather than dividing by zero.
+#[timdnn::hot_path]
+pub fn layernorm_q(x: &[i32], out: &mut [i32]) {
+    assert!(!x.is_empty(), "layernorm over an empty vector");
+    assert_eq!(x.len(), out.len(), "layernorm shape");
+    let n = x.len() as i64;
+    let mut sum: i64 = 0;
+    for &v in x {
+        sum += i64::from(v);
+    }
+    let mean = div_round(sum, n);
+    let mut var_acc: i128 = 0;
+    for &v in x {
+        let d = i64::from(v) - mean;
+        var_acc += i128::from(d) * i128::from(d);
+    }
+    let var = (var_acc / i128::from(n)) as u64;
+    let std = isqrt_u64(var).max(1) as i64;
+    for (o, &v) in out.iter_mut().zip(x) {
+        let d = (i64::from(v) - mean) << NORM_BITS;
+        // timlint::allow(narrowing-cast): |d/std| ≤ √n · 2^NORM_BITS
+        *o = (d / std) as i32;
+    }
+}
+
+/// Floor integer square root of a u64 (Newton iteration seeded from the
+/// bit length; converges in a handful of steps and is exact on squares).
+#[inline]
+pub fn isqrt_u64(x: u64) -> u64 {
+    if x < 2 {
+        return x;
+    }
+    let mut guess = 1u64 << (u64::BITS - x.leading_zeros()).div_ceil(2);
+    loop {
+        let next = (guess + x / guess) / 2;
+        if next >= guess {
+            return guess;
+        }
+        guess = next;
+    }
+}
+
+/// Quantize an integer vector to signed 2-bit codes `{0,1,2,3}` standing
+/// for levels `{-3,-1,+1,+3}` with step `1 << step_shift`: boundaries sit
+/// at `-2·step`, `0`, `+2·step` (nearest-level rounding). The ternary
+/// tile consumes the unsigned codes; [`signed2_level`] plus the caller's
+/// column-sum correction restores the signed arithmetic.
+#[timdnn::hot_path]
+pub fn quantize_signed2(x: &[i32], step_shift: u32, codes: &mut [u8]) {
+    assert_eq!(x.len(), codes.len(), "quantizer shape");
+    let b = 2i32 << step_shift;
+    for (c, &v) in codes.iter_mut().zip(x) {
+        *c = if v < -b {
+            0
+        } else if v < 0 {
+            1
+        } else if v < b {
+            2
+        } else {
+            3
+        };
+    }
+}
+
+/// Signed level of a 2-bit code: `{0,1,2,3} → {-3,-1,+1,+3}`.
+#[inline]
+pub fn signed2_level(code: u8) -> i32 {
+    2 * i32::from(code) - 3
+}
+
+/// Index of the largest element (first occurrence wins ties — the greedy
+/// decode rule must be deterministic).
+pub fn argmax(xs: &[i32]) -> usize {
+    assert!(!xs.is_empty(), "argmax over an empty logit row");
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Round-half-away-from-zero integer division (layernorm mean).
+#[inline]
+fn div_round(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        (a + b / 2) / b
+    } else {
+        (a - b / 2) / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integer-only tests: this module is inside intmath.rs, so the
+    // whole-file float ban applies here too. The f64-oracle property
+    // tests live in tests/transformer_kernels.rs instead.
+    use super::*;
+
+    #[test]
+    fn exp2_table_is_monotone_and_anchored() {
+        assert_eq!(exp2_neg_q15(0), PROB_ONE);
+        assert_eq!(exp2_neg_q15(1 << EXP_FRAC_BITS), PROB_ONE / 2);
+        for d in 1..512 {
+            assert!(exp2_neg_q15(d) <= exp2_neg_q15(d - 1), "not monotone at {d}");
+        }
+        assert_eq!(exp2_neg_q15(31 << EXP_FRAC_BITS), 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders_like_logits() {
+        let logits = [640, 0, 320, -640, 640];
+        let mut probs = [0i32; 5];
+        softmax_q15(&logits, &mut probs);
+        let sum: i64 = probs.iter().map(|&p| i64::from(p)).sum();
+        let err = (sum - i64::from(PROB_ONE)).abs();
+        assert!(err <= 3, "Σp = {sum}");
+        assert!(probs[0] > probs[2] && probs[2] > probs[1] && probs[1] > probs[3]);
+        assert_eq!(probs[0], probs[4], "equal logits get equal mass");
+    }
+
+    #[test]
+    fn attend_on_one_hot_probs_selects_the_row() {
+        let values = [10, -20, 30, 40, 50, -60];
+        let probs = [0, PROB_ONE];
+        let mut out = [0i32; 3];
+        attend_q15(&probs, &values, 3, &mut out);
+        assert_eq!(out, [40, 50, -60]);
+    }
+
+    #[test]
+    fn layernorm_centers_and_hits_the_rms_target() {
+        let x = [100, -100, 300, -300, 500, -500, 700, -700];
+        let mut out = [0i32; 8];
+        layernorm_q(&x, &mut out);
+        let sum: i64 = out.iter().map(|&v| i64::from(v)).sum();
+        assert!(sum.abs() <= out.len() as i64, "mean residue {sum}");
+        let var: i128 = out.iter().map(|&v| i128::from(v) * i128::from(v)).sum::<i128>()
+            / out.len() as i128;
+        let target = 1i128 << (2 * NORM_BITS);
+        assert!(var > target / 2 && var < target * 2, "var {var} vs {target}");
+    }
+
+    #[test]
+    fn layernorm_constant_row_is_all_zero() {
+        let x = [7i32; 4];
+        let mut out = [1i32; 4];
+        layernorm_q(&x, &mut out);
+        assert_eq!(out, [0; 4]);
+    }
+
+    #[test]
+    fn isqrt_is_exact_on_squares_and_floors_between() {
+        for v in [0u64, 1, 2, 3, 4, 15, 16, 17, 1 << 40, (1 << 32) - 1, u64::MAX] {
+            let r = isqrt_u64(v);
+            assert!(r * r <= v, "floor property at {v}");
+            if let Some(s) = (r + 1).checked_mul(r + 1) {
+                assert!(s > v, "tight at {v}");
+            }
+        }
+        assert_eq!(isqrt_u64(144), 12);
+    }
+
+    #[test]
+    fn quantizer_boundaries_match_nearest_level() {
+        // step_shift 2 ⇒ step 4, boundaries at -8, 0, +8.
+        let x = [-100, -9, -8, -1, 0, 7, 8, 100];
+        let mut codes = [9u8; 8];
+        quantize_signed2(&x, 2, &mut codes);
+        assert_eq!(codes, [0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(signed2_level(0), -3);
+        assert_eq!(signed2_level(3), 3);
+    }
+
+    #[test]
+    fn argmax_first_occurrence_wins() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3]), 0);
+    }
+}

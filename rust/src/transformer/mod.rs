@@ -1,0 +1,829 @@
+//! Ternary transformer decoder on the TiM tile hot path.
+//!
+//! A BitNet-style (arXiv 2402.17764) decoder block whose QKV,
+//! attention-output and MLP projections all run as **ternary VMMs**
+//! through [`TimTile::vmm_block_batch_into`] — the same weight-stationary
+//! 2-bit batch kernel the CNN/RNN serving path uses — while everything
+//! between two projections (scores, softmax, value mix, layernorm,
+//! residual stream) stays in the integer domain via [`intmath`]. The
+//! float boundary is exactly where it is for the rest of the repo: at
+//! the serving tensor conversion, never inside the decode loop.
+//!
+//! ## Signed activations on an unsigned tile
+//!
+//! The tile's bit-serial input path consumes **unsigned** 2-bit codes
+//! `c ∈ {0..3}` (two mask planes, shift-folded). The decoder needs
+//! signed activations, so codes stand for the symmetric levels
+//! `2c − 3 ∈ {−3,−1,+1,+3}` and each projection corrects with its
+//! precomputed integer column sums:
+//!
+//! ```text
+//! Σ_r (2c_r − 3)·w[r][c]  =  2·acc_raw[c] − 3·colsum[c]
+//! ```
+//!
+//! `acc_raw` is the plain unsigned-code VMM the tile already computes,
+//! so the correction is one multiply-add per output — and because it is
+//! linear in the tile's accumulator it is exact in every [`VmmMode`].
+//!
+//! ## Fixed-point formats
+//!
+//! | stream                | format                                     |
+//! |-----------------------|--------------------------------------------|
+//! | residual / embeddings | plain i32                                  |
+//! | layernorm output      | i32, σ = 2^[`intmath::NORM_BITS`]          |
+//! | attention logits      | Q6 base-2 ([`intmath::EXP_FRAC_BITS`])     |
+//! | attention probs       | Q15 ([`intmath::PROB_BITS`])               |
+//! | KV cache entries      | i32 projection outputs, per-head rows      |
+//!
+//! ## KV cache and the scratch arena
+//!
+//! Each generation session owns a [`KvCache`] — per (layer, head) key
+//! and value rows, written once per decoded position and never moved.
+//! Caches are allocated from the engine's [`ScratchArena`] pool:
+//! eviction returns the buffers to the pool, so session churn at steady
+//! state performs **zero heap allocations**, and every decode step runs
+//! allocation-free against prereserved high-water-mark scratch
+//! (`tests/transformer_kv.rs` pins both with a counting allocator).
+//!
+//! Incremental decode is bit-exact with full-context recompute in all
+//! three modes: deterministic modes because per-patch integer
+//! accumulation commutes, `AnalogNoisy` because a decode step consumes a
+//! *fixed* number of RNG draws (projections only — attention math draws
+//! none), so recomputing a prefix from a fresh seeded RNG replays the
+//! incremental draw sequence draw-for-draw.
+
+pub mod intmath;
+
+use crate::tile::{PackedCodes, TileConfig, TimTile, VmmMode};
+use crate::tpc::TritMatrix;
+use crate::util::prng::Rng;
+
+use intmath::{
+    argmax, attend_q15, layernorm_q, qk_scores, quantize_signed2, signed2_level, softmax_q15,
+};
+
+/// Right shift folding the 1/√d_head temperature into Q6 logits.
+pub const SCORE_SHIFT: u32 = 4;
+
+/// Quantizer step shift for layernormed streams (step 2^6 matches the
+/// layernorm σ target, so ±1σ maps to the ±1 levels and tails saturate
+/// at ±3).
+pub const LN_STEP_SHIFT: u32 = 6;
+
+/// Quantizer step shift for attention-mix outputs feeding W_O.
+pub const ATTN_STEP_SHIFT: u32 = 4;
+
+/// Quantizer step shift for post-ReLU MLP activations feeding W_2.
+pub const MLP_STEP_SHIFT: u32 = 3;
+
+/// Magnitude bound of the synthetic token embeddings.
+pub const EMBED_RANGE: i64 = 64;
+
+/// Worst-case magnitude of a signed projection output for `rows` input
+/// rows: every level saturated at ±3, every weight ±1.
+pub fn proj_abs_bound(rows: usize) -> i128 {
+    3 * rows as i128
+}
+
+/// Decoder geometry. Column widths (`d_model`, `d_ff`, `vocab`) must fit
+/// one tile's N columns — the functional engine splits rows across
+/// tiles, not columns (same restriction as the CNN/RNN path).
+#[derive(Clone, Copy, Debug)]
+pub struct DecoderConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub layers: usize,
+    pub tile: TileConfig,
+}
+
+impl DecoderConfig {
+    /// Smoke-scale decoder used by tests, benches and `tiny_bitnet`.
+    pub fn tiny() -> Self {
+        Self {
+            vocab: 64,
+            d_model: 64,
+            heads: 4,
+            d_ff: 128,
+            max_seq: 48,
+            layers: 2,
+            tile: TileConfig::paper(),
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    fn validate(&self) {
+        assert!(self.heads > 0 && self.d_model % self.heads == 0, "d_model % heads");
+        assert!(self.vocab <= self.tile.n, "vocab wider than tile columns");
+        assert!(self.d_model <= self.tile.n, "d_model wider than tile columns");
+        assert!(self.d_ff <= self.tile.n, "d_ff wider than tile columns");
+        assert!(self.max_seq > 0 && self.layers > 0 && self.vocab > 0);
+    }
+}
+
+/// Ternary weights of one decoder block.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub wq: TritMatrix,
+    pub wk: TritMatrix,
+    pub wv: TritMatrix,
+    pub wo: TritMatrix,
+    pub w1: TritMatrix,
+    pub w2: TritMatrix,
+}
+
+/// Full decoder weights: integer token embeddings, per-block ternary
+/// projections, and the ternary LM head.
+#[derive(Clone, Debug)]
+pub struct DecoderWeights {
+    pub cfg: DecoderConfig,
+    /// `vocab × d_model`, row-major, values in ±[`EMBED_RANGE`].
+    pub embed: Vec<i32>,
+    pub blocks: Vec<BlockWeights>,
+    /// `d_model × vocab`.
+    pub head: TritMatrix,
+}
+
+impl DecoderWeights {
+    /// Deterministic synthetic weights (~40% zeros, the paper's §III-B
+    /// sparsity operating point — same recipe as `TimNetWeights`).
+    pub fn synthetic(cfg: DecoderConfig, seed: u64) -> Self {
+        cfg.validate();
+        let mut rng = Rng::seeded(seed);
+        let p_zero = 0.4;
+        let embed = (0..cfg.vocab * cfg.d_model)
+            .map(|_| rng.range_i64(-EMBED_RANGE, EMBED_RANGE + 1) as i32)
+            .collect();
+        let blocks = (0..cfg.layers)
+            .map(|_| BlockWeights {
+                wq: TritMatrix::random(cfg.d_model, cfg.d_model, p_zero, &mut rng),
+                wk: TritMatrix::random(cfg.d_model, cfg.d_model, p_zero, &mut rng),
+                wv: TritMatrix::random(cfg.d_model, cfg.d_model, p_zero, &mut rng),
+                wo: TritMatrix::random(cfg.d_model, cfg.d_model, p_zero, &mut rng),
+                w1: TritMatrix::random(cfg.d_model, cfg.d_ff, p_zero, &mut rng),
+                w2: TritMatrix::random(cfg.d_ff, cfg.d_model, p_zero, &mut rng),
+            })
+            .collect();
+        let head = TritMatrix::random(cfg.d_model, cfg.vocab, p_zero, &mut rng);
+        Self { cfg, embed, blocks, head }
+    }
+}
+
+// ------------------------------------------------------------ projection
+
+/// Reused packing/accumulator buffers for one projection dispatch (the
+/// transformer twin of `functional::LayerScratch`; no trim — every shape
+/// here is statically bounded by the [`DecoderConfig`], so buffers sit
+/// at their prereserved high-water marks for the engine's lifetime).
+#[derive(Default)]
+struct ProjScratch {
+    packed: Vec<PackedCodes>,
+    masks: Vec<(u32, u32)>,
+    acc: Vec<i32>,
+}
+
+/// A tile group executing one ternary projection with **integer**
+/// outputs: the unsigned-code batch VMM plus the signed column-sum
+/// correction. Mirrors `functional::LayerEngine`'s dispatch exactly —
+/// weight-stationary gathered masks with input/weight gating in the
+/// deterministic modes, scalar-ordered full-width accesses under
+/// `AnalogNoisy` so the RNG draw sequence per patch is independent of
+/// batching.
+struct ProjEngine {
+    tiles: Vec<TimTile>,
+    rows: usize,
+    cols: usize,
+    rows_per_tile: usize,
+    block_len: usize,
+    blocks_per_tile: usize,
+    tile_cols: usize,
+    /// `Σ_r w[r][c]` per output column — the signed-code correction term.
+    colsum: Vec<i32>,
+}
+
+impl ProjEngine {
+    fn new(w: &TritMatrix, cfg: TileConfig) -> Self {
+        let (rows, cols) = (w.rows, w.cols);
+        assert!(cols <= cfg.n, "column splitting not supported");
+        let rows_per_tile = cfg.rows();
+        let n_tiles = rows.div_ceil(rows_per_tile);
+        let mut tiles = Vec::with_capacity(n_tiles);
+        for t in 0..n_tiles {
+            let lo = t * rows_per_tile;
+            let hi = (lo + rows_per_tile).min(rows);
+            let mut slice = TritMatrix::zeros(hi - lo, cols);
+            for r in lo..hi {
+                for c in 0..cols {
+                    slice.set(r - lo, c, w.get(r, c));
+                }
+            }
+            let mut tile = TimTile::new(cfg);
+            tile.load_weights(&slice);
+            tiles.push(tile);
+        }
+        let mut colsum = vec![0i32; cols];
+        for r in 0..rows {
+            for (c, s) in colsum.iter_mut().enumerate() {
+                *s += i32::from(w.get(r, c));
+            }
+        }
+        Self {
+            tiles,
+            rows,
+            cols,
+            rows_per_tile,
+            block_len: cfg.l,
+            blocks_per_tile: cfg.k,
+            tile_cols: cfg.n,
+            colsum,
+        }
+    }
+
+    /// Signed batched projection: `codes` holds `n_patches` patches of
+    /// `self.rows` 2-bit codes; `out` becomes `n_patches × cols` signed
+    /// integers `Σ_r (2c−3)·w`. Steady-state calls (patch count at or
+    /// under the high-water mark) allocate nothing.
+    #[timdnn::hot_path]
+    fn forward_signed_batch(
+        &mut self,
+        codes: &[u8],
+        n_patches: usize,
+        mode: &mut VmmMode,
+        scratch: &mut ProjScratch,
+        out: &mut Vec<i32>,
+    ) {
+        assert_eq!(codes.len(), n_patches * self.rows, "patch matrix shape");
+        let ProjScratch { packed, masks, acc } = scratch;
+        if packed.len() < n_patches {
+            packed.resize_with(n_patches, PackedCodes::default);
+        }
+        for (p, planes) in packed.iter_mut().take(n_patches).enumerate() {
+            planes.pack_into(&codes[p * self.rows..(p + 1) * self.rows], self.block_len);
+        }
+        let noisy = matches!(mode, VmmMode::AnalogNoisy(_));
+        let acc_cols = if noisy { self.tile_cols } else { self.cols };
+        acc.clear();
+        acc.resize(n_patches * acc_cols, 0);
+        if noisy {
+            // Scalar access order — patch → tile → plane → block at full
+            // tile width, no gating — so each patch's RNG consumption is
+            // a fixed function of the geometry alone. This is what makes
+            // incremental decode replayable by a fresh-seed recompute.
+            for (planes, row) in
+                packed.iter().take(n_patches).zip(acc.chunks_exact_mut(acc_cols))
+            {
+                for (t, tile) in self.tiles.iter_mut().enumerate() {
+                    let lo = t * self.rows_per_tile;
+                    let hi = (lo + self.rows_per_tile).min(self.rows);
+                    let n_blocks = (hi - lo).div_ceil(self.block_len);
+                    let first_block = t * self.blocks_per_tile;
+                    for plane in 0..2usize {
+                        for b in 0..n_blocks {
+                            let mask = planes.planes()[first_block + b][plane];
+                            tile.vmm_block_batch_into(
+                                b,
+                                &[(mask, 0)],
+                                acc_cols,
+                                // timlint::allow(narrowing-cast): plane ∈ {0,1}
+                                plane as u32,
+                                mode,
+                                row,
+                            );
+                        }
+                    }
+                }
+            }
+        } else {
+            for (t, tile) in self.tiles.iter_mut().enumerate() {
+                let lo = t * self.rows_per_tile;
+                let hi = (lo + self.rows_per_tile).min(self.rows);
+                let n_blocks = (hi - lo).div_ceil(self.block_len);
+                let first_block = t * self.blocks_per_tile;
+                for plane in 0..2usize {
+                    for b in 0..n_blocks {
+                        if tile.block_weights_zero(b) {
+                            continue;
+                        }
+                        masks.clear();
+                        let mut any = 0u32;
+                        masks.extend(packed.iter().take(n_patches).map(|pl| {
+                            let m = pl.planes()[first_block + b][plane];
+                            any |= m;
+                            (m, 0u32)
+                        }));
+                        if any == 0 {
+                            continue;
+                        }
+                        tile.vmm_block_batch_into(
+                            b,
+                            masks.as_slice(),
+                            self.cols,
+                            // timlint::allow(narrowing-cast): plane ∈ {0,1}
+                            plane as u32,
+                            mode,
+                            acc.as_mut_slice(),
+                        );
+                    }
+                }
+            }
+        }
+        // Signed-code correction: Σ(2c−3)·w = 2·acc − 3·colsum. Integer,
+        // so exact under every mode; this replaces LayerEngine's single
+        // float scale conversion — the decoder never leaves i32 here.
+        out.clear();
+        out.resize(n_patches * self.cols, 0);
+        for (orow, arow) in out.chunks_exact_mut(self.cols).zip(acc.chunks_exact(acc_cols)) {
+            for ((o, &a), &s) in orow.iter_mut().zip(&arow[..self.cols]).zip(&self.colsum) {
+                *o = 2 * a - 3 * s;
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- KV cache
+
+/// Per-session key/value cache: one row per decoded position for every
+/// (layer, head), laid out so each head's rows are contiguous at stride
+/// `d_head` — exactly what [`intmath::qk_scores`] / [`intmath::attend_q15`]
+/// stream over. Allocated once (from the [`ScratchArena`] pool in the
+/// serving path) and written in place; a decode step never moves or
+/// reallocates cache memory.
+#[derive(Debug)]
+pub struct KvCache {
+    k: Vec<i32>,
+    v: Vec<i32>,
+    len: usize,
+    layers: usize,
+    heads: usize,
+    d_head: usize,
+    max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &DecoderConfig) -> Self {
+        let slots = cfg.layers * cfg.heads * cfg.max_seq * cfg.d_head();
+        Self {
+            k: vec![0; slots],
+            v: vec![0; slots],
+            len: 0,
+            layers: cfg.layers,
+            heads: cfg.heads,
+            d_head: cfg.d_head(),
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    /// Decoded positions currently resident.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions still available before the context window is full.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Forget all cached positions (buffers stay allocated — this is the
+    /// pool-recycling path).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    fn fits(&self, cfg: &DecoderConfig) -> bool {
+        self.layers == cfg.layers
+            && self.heads == cfg.heads
+            && self.d_head == cfg.d_head()
+            && self.max_seq == cfg.max_seq
+    }
+
+    /// Flat base offset of (layer, head) row 0.
+    fn base(&self, layer: usize, head: usize) -> usize {
+        (layer * self.heads + head) * self.max_seq * self.d_head
+    }
+
+    /// Key rows `0..n` of one (layer, head).
+    fn k_rows(&self, layer: usize, head: usize, n: usize) -> &[i32] {
+        let b = self.base(layer, head);
+        &self.k[b..b + n * self.d_head]
+    }
+
+    fn v_rows(&self, layer: usize, head: usize, n: usize) -> &[i32] {
+        let b = self.base(layer, head);
+        &self.v[b..b + n * self.d_head]
+    }
+
+    /// Write position `pos`'s key/value rows for one layer from the flat
+    /// `d_model` projection outputs (head-major: head `h` owns columns
+    /// `h·d_head..(h+1)·d_head`).
+    fn store(&mut self, layer: usize, pos: usize, k_proj: &[i32], v_proj: &[i32]) {
+        debug_assert_eq!(k_proj.len(), self.heads * self.d_head);
+        for h in 0..self.heads {
+            let b = self.base(layer, h) + pos * self.d_head;
+            self.k[b..b + self.d_head]
+                .copy_from_slice(&k_proj[h * self.d_head..(h + 1) * self.d_head]);
+            self.v[b..b + self.d_head]
+                .copy_from_slice(&v_proj[h * self.d_head..(h + 1) * self.d_head]);
+        }
+    }
+}
+
+// ---------------------------------------------------------- scratch arena
+
+/// Grow-once scratch for the decode loop plus the KV-cache pool.
+///
+/// All per-step buffers are reserved to their worst case (`max_seq`
+/// batched prefill) at engine construction, so a decode step — and a
+/// full-width prefill — performs zero heap allocations. Evicted session
+/// caches return to `kv_pool` and are recycled by the next session
+/// (bounded by [`Self::KV_POOL_CAP`]; beyond that they genuinely drop).
+pub struct ScratchArena {
+    proj: ProjScratch,
+    /// Quantized codes for one batched projection input.
+    codes: Vec<u8>,
+    /// Residual stream, one row per in-flight position.
+    resid: Vec<i32>,
+    /// Layernorm outputs (batch).
+    normed: Vec<i32>,
+    /// Projection outputs (q, k, v, and general).
+    q: Vec<i32>,
+    k: Vec<i32>,
+    v: Vec<i32>,
+    proj_out: Vec<i32>,
+    /// Attention mix, one `d_model` row per position.
+    attn: Vec<i32>,
+    /// MLP hidden activations (batch × d_ff).
+    hidden: Vec<i32>,
+    scores: Vec<i32>,
+    probs: Vec<i32>,
+    kv_pool: Vec<KvCache>,
+}
+
+impl ScratchArena {
+    /// Retained recycled KV caches; matches the serving layer's default
+    /// session capacity so steady-state churn never allocates.
+    pub const KV_POOL_CAP: usize = 8;
+
+    fn new(cfg: &DecoderConfig) -> Self {
+        let t = cfg.max_seq;
+        let wide = cfg.d_model.max(cfg.d_ff).max(cfg.vocab);
+        let mut s = Self {
+            proj: ProjScratch::default(),
+            codes: Vec::with_capacity(t * wide),
+            resid: Vec::with_capacity(t * cfg.d_model),
+            normed: Vec::with_capacity(t * cfg.d_model),
+            q: Vec::with_capacity(t * cfg.d_model),
+            k: Vec::with_capacity(t * cfg.d_model),
+            v: Vec::with_capacity(t * cfg.d_model),
+            proj_out: Vec::with_capacity(t * wide),
+            attn: Vec::with_capacity(t * cfg.d_model),
+            hidden: Vec::with_capacity(t * cfg.d_ff),
+            scores: Vec::with_capacity(t),
+            probs: Vec::with_capacity(t),
+            kv_pool: Vec::with_capacity(Self::KV_POOL_CAP),
+        };
+        s.proj.packed.resize_with(t, PackedCodes::default);
+        // Pre-pack a worst-case patch so every PackedCodes holds its
+        // high-water plane capacity from the start.
+        let worst = vec![3u8; wide];
+        for p in &mut s.proj.packed {
+            p.pack_into(&worst, cfg.tile.l);
+        }
+        s.proj.masks.reserve(t);
+        s.proj.acc.reserve(t * cfg.tile.n);
+        s
+    }
+}
+
+// --------------------------------------------------------------- engine
+
+/// The runnable decoder: per-block projection tile groups, the LM head
+/// group, embeddings, and the scratch arena. One engine serves many
+/// sessions; per-session state lives entirely in each session's
+/// [`KvCache`].
+pub struct DecoderEngine {
+    cfg: DecoderConfig,
+    embed: Vec<i32>,
+    blocks: Vec<BlockEngines>,
+    head: ProjEngine,
+    arena: ScratchArena,
+}
+
+struct BlockEngines {
+    wq: ProjEngine,
+    wk: ProjEngine,
+    wv: ProjEngine,
+    wo: ProjEngine,
+    w1: ProjEngine,
+    w2: ProjEngine,
+}
+
+impl DecoderEngine {
+    pub fn new(w: &DecoderWeights) -> Self {
+        w.cfg.validate();
+        assert_eq!(w.embed.len(), w.cfg.vocab * w.cfg.d_model, "embedding shape");
+        assert_eq!(w.blocks.len(), w.cfg.layers, "block count");
+        let tile = w.cfg.tile;
+        let blocks = w
+            .blocks
+            .iter()
+            .map(|b| BlockEngines {
+                wq: ProjEngine::new(&b.wq, tile),
+                wk: ProjEngine::new(&b.wk, tile),
+                wv: ProjEngine::new(&b.wv, tile),
+                wo: ProjEngine::new(&b.wo, tile),
+                w1: ProjEngine::new(&b.w1, tile),
+                w2: ProjEngine::new(&b.w2, tile),
+            })
+            .collect();
+        Self {
+            cfg: w.cfg,
+            embed: w.embed.clone(),
+            blocks,
+            head: ProjEngine::new(&w.head, tile),
+            arena: ScratchArena::new(&w.cfg),
+        }
+    }
+
+    pub fn cfg(&self) -> &DecoderConfig {
+        &self.cfg
+    }
+
+    /// Take a session KV cache from the arena pool (recycled if one is
+    /// available, freshly allocated otherwise).
+    pub fn alloc_kv(&mut self) -> KvCache {
+        match self.arena.kv_pool.pop() {
+            Some(mut kv) => {
+                kv.reset();
+                kv
+            }
+            None => KvCache::new(&self.cfg),
+        }
+    }
+
+    /// Return an evicted session's cache to the pool (dropped when the
+    /// pool is at [`ScratchArena::KV_POOL_CAP`]).
+    pub fn release_kv(&mut self, kv: KvCache) {
+        if self.arena.kv_pool.len() < ScratchArena::KV_POOL_CAP && kv.fits(&self.cfg) {
+            self.arena.kv_pool.push(kv);
+        }
+    }
+
+    /// Decode one token at the next position: appends this position's
+    /// K/V rows to `kv` and leaves the next-token logits (length
+    /// `vocab`) in `logits`. Steady state allocates nothing.
+    pub fn decode_step(
+        &mut self,
+        token: u32,
+        kv: &mut KvCache,
+        mode: &mut VmmMode,
+        logits: &mut Vec<i32>,
+    ) {
+        self.forward_batch(&[token], kv, mode, logits);
+    }
+
+    /// Ingest a prompt. Deterministic modes batch all positions through
+    /// each projection (bit-exact with the sequential loop — per-patch
+    /// integer accumulation is independent and commutative); under
+    /// `AnalogNoisy` the prompt is decoded position-by-position so the
+    /// RNG draw order is identical to incremental decode. Leaves the
+    /// last position's logits in `logits`.
+    pub fn prefill(
+        &mut self,
+        tokens: &[u32],
+        kv: &mut KvCache,
+        mode: &mut VmmMode,
+        logits: &mut Vec<i32>,
+    ) {
+        assert!(!tokens.is_empty(), "empty prompt");
+        match mode {
+            VmmMode::Ideal | VmmMode::Analog => self.forward_batch(tokens, kv, mode, logits),
+            VmmMode::AnalogNoisy(_) => {
+                for &t in tokens {
+                    self.decode_step(t, kv, mode, logits);
+                }
+            }
+        }
+    }
+
+    /// Greedy generation: prefill `prompt`, then append argmax tokens
+    /// until `max_new` tokens are produced or the context fills. Returns
+    /// the generated tokens (prompt excluded).
+    pub fn generate_greedy(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        mode: &mut VmmMode,
+    ) -> Vec<u32> {
+        let mut kv = self.alloc_kv();
+        let mut logits = Vec::new();
+        self.prefill(prompt, &mut kv, mode, &mut logits);
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            if kv.remaining() == 0 {
+                break;
+            }
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            self.decode_step(next, &mut kv, mode, &mut logits);
+        }
+        self.release_kv(kv);
+        out
+    }
+
+    /// Process `tokens.len()` new positions appended after `kv.len()`
+    /// resident ones. The workhorse behind both [`Self::decode_step`]
+    /// (batch of one) and batched prefill.
+    fn forward_batch(
+        &mut self,
+        tokens: &[u32],
+        kv: &mut KvCache,
+        mode: &mut VmmMode,
+        logits: &mut Vec<i32>,
+    ) {
+        let cfg = self.cfg;
+        let (d, dh, heads) = (cfg.d_model, cfg.d_head(), cfg.heads);
+        let n = tokens.len();
+        let start = kv.len();
+        assert!(kv.fits(&cfg), "KV cache geometry mismatch");
+        assert!(start + n <= cfg.max_seq, "context window exceeded");
+        let a = &mut self.arena;
+
+        // Embed.
+        a.resid.clear();
+        for &t in tokens {
+            let t = t as usize;
+            assert!(t < cfg.vocab, "token id out of vocabulary");
+            a.resid.extend_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+
+        for (layer, eng) in self.blocks.iter_mut().enumerate() {
+            // ln1 → quantize → Q,K,V projections.
+            ln_quant(&a.resid, d, LN_STEP_SHIFT, &mut a.normed, &mut a.codes);
+            eng.wq.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.q);
+            eng.wk.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.k);
+            eng.wv.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.v);
+            // Store K/V rows for the new positions.
+            for p in 0..n {
+                let (ks, vs) = (&a.k[p * d..(p + 1) * d], &a.v[p * d..(p + 1) * d]);
+                kv.store(layer, start + p, ks, vs);
+            }
+            // Causal attention per position/head against the cache.
+            a.attn.clear();
+            a.attn.resize(n * d, 0);
+            for p in 0..n {
+                let ctx = start + p + 1;
+                for h in 0..heads {
+                    let qh = &a.q[p * d + h * dh..p * d + (h + 1) * dh];
+                    a.scores.clear();
+                    a.scores.resize(ctx, 0);
+                    qk_scores(qh, kv.k_rows(layer, h, ctx), SCORE_SHIFT, &mut a.scores);
+                    a.probs.clear();
+                    a.probs.resize(ctx, 0);
+                    softmax_q15(&a.scores, &mut a.probs);
+                    let out = &mut a.attn[p * d + h * dh..p * d + (h + 1) * dh];
+                    attend_q15(&a.probs, kv.v_rows(layer, h, ctx), dh, out);
+                }
+            }
+            // W_O projection, residual add.
+            quantize_batch(&a.attn, ATTN_STEP_SHIFT, &mut a.codes);
+            eng.wo.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.proj_out);
+            add_into(&mut a.resid, &a.proj_out);
+            // MLP: ln2 → quantize → W1 → ReLU → quantize → W2 → residual.
+            ln_quant(&a.resid, d, LN_STEP_SHIFT, &mut a.normed, &mut a.codes);
+            eng.w1.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.hidden);
+            for h in &mut a.hidden {
+                *h = (*h).max(0);
+            }
+            quantize_batch(&a.hidden, MLP_STEP_SHIFT, &mut a.codes);
+            eng.w2.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.proj_out);
+            add_into(&mut a.resid, &a.proj_out);
+        }
+
+        // Final layernorm → LM head; keep only the last position's row.
+        ln_quant(&a.resid, d, LN_STEP_SHIFT, &mut a.normed, &mut a.codes);
+        self.head.forward_signed_batch(&a.codes, n, mode, &mut a.proj, &mut a.proj_out);
+        logits.clear();
+        logits.extend_from_slice(&a.proj_out[(n - 1) * cfg.vocab..n * cfg.vocab]);
+        kv.len = start + n;
+    }
+}
+
+/// Per-row layernorm over a `rows × d` batch followed by signed 2-bit
+/// quantization — the standard prelude to every projection.
+fn ln_quant(x: &[i32], d: usize, step_shift: u32, normed: &mut Vec<i32>, codes: &mut Vec<u8>) {
+    debug_assert_eq!(x.len() % d, 0);
+    normed.clear();
+    normed.resize(x.len(), 0);
+    for (nrow, xrow) in normed.chunks_exact_mut(d).zip(x.chunks_exact(d)) {
+        layernorm_q(xrow, nrow);
+    }
+    quantize_batch(normed, step_shift, codes);
+}
+
+fn quantize_batch(x: &[i32], step_shift: u32, codes: &mut Vec<u8>) {
+    codes.clear();
+    codes.resize(x.len(), 0);
+    quantize_signed2(x, step_shift, codes);
+}
+
+fn add_into(dst: &mut [i32], src: &[i32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Reference signed projection (naive loops over the ternary matrix) —
+/// the oracle `tests/transformer_kernels.rs` pins the tile path against.
+pub fn reference_signed_projection(w: &TritMatrix, codes: &[u8]) -> Vec<i32> {
+    assert_eq!(codes.len(), w.rows);
+    let mut out = vec![0i32; w.cols];
+    for (r, &c) in codes.iter().enumerate() {
+        let level = signed2_level(c);
+        for (o, &t) in out.iter_mut().zip(w.row(r)) {
+            *o += level * i32::from(t);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes_for(rows: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::seeded(seed);
+        (0..rows).map(|_| rng.below(4) as u8).collect()
+    }
+
+    #[test]
+    fn signed_projection_matches_reference_in_deterministic_modes() {
+        let mut rng = Rng::seeded(11);
+        // 300 rows forces a two-tile split with a partial trailing block.
+        let w = TritMatrix::random(300, 48, 0.4, &mut rng);
+        let codes = codes_for(300, 5);
+        let want = reference_signed_projection(&w, &codes);
+        for mut mode in [VmmMode::Ideal, VmmMode::Analog] {
+            let mut eng = ProjEngine::new(&w, TileConfig::paper());
+            let mut scratch = ProjScratch::default();
+            let mut out = Vec::new();
+            eng.forward_signed_batch(&codes, 1, &mut mode, &mut scratch, &mut out);
+            assert_eq!(out, want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn batched_projection_equals_per_patch_loop() {
+        let mut rng = Rng::seeded(23);
+        let w = TritMatrix::random(64, 32, 0.4, &mut rng);
+        let batch: Vec<u8> = codes_for(64 * 5, 7);
+        let mut eng = ProjEngine::new(&w, TileConfig::paper());
+        let mut scratch = ProjScratch::default();
+        let mut batched = Vec::new();
+        eng.forward_signed_batch(&batch, 5, &mut VmmMode::Ideal, &mut scratch, &mut batched);
+        for p in 0..5 {
+            let mut one = Vec::new();
+            eng.forward_signed_batch(
+                &batch[p * 64..(p + 1) * 64],
+                1,
+                &mut VmmMode::Ideal,
+                &mut scratch,
+                &mut one,
+            );
+            assert_eq!(one, batched[p * 32..(p + 1) * 32], "patch {p}");
+        }
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic_and_in_vocab() {
+        let w = DecoderWeights::synthetic(DecoderConfig::tiny(), 42);
+        let mut eng = DecoderEngine::new(&w);
+        let a = eng.generate_greedy(&[1, 2, 3], 8, &mut VmmMode::Ideal);
+        let b = eng.generate_greedy(&[1, 2, 3], 8, &mut VmmMode::Ideal);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        assert!(a.iter().all(|&t| (t as usize) < w.cfg.vocab));
+    }
+
+    #[test]
+    fn kv_pool_recycles_released_caches() {
+        let w = DecoderWeights::synthetic(DecoderConfig::tiny(), 1);
+        let mut eng = DecoderEngine::new(&w);
+        let mut kv = eng.alloc_kv();
+        let mut logits = Vec::new();
+        eng.decode_step(3, &mut kv, &mut VmmMode::Ideal, &mut logits);
+        assert_eq!(kv.len(), 1);
+        eng.release_kv(kv);
+        let kv2 = eng.alloc_kv();
+        assert_eq!(kv2.len(), 0, "recycled cache must come back reset");
+    }
+}

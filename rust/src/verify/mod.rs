@@ -27,6 +27,21 @@
 //!   arithmetic.
 //! * **scratch** — the per-layer accumulator plane
 //!   (`positions × cols` i32 slots) must fit the serving scratch budget.
+//! * **attn-acc-overflow** — attention score accumulation multiplies two
+//!   projection outputs (each bounded by
+//!   [`crate::transformer::proj_abs_bound`] = `3 × d_model`) over a
+//!   `d_head`-long reduction, then shifts right by
+//!   [`crate::transformer::SCORE_SHIFT`] into an `i32` score. Reject when
+//!   `d_head × (3·d_model)² >> SCORE_SHIFT` exceeds `i32::MAX`. Layers
+//!   mapped through [`crate::mapper::map_network`] get exact head counts
+//!   via [`ProgramAudit::annotate_attention`] (wired by
+//!   [`crate::coordinator::ModelSpec::for_network`]); bare
+//!   [`check_program`] calls fall back to a conservative single-head
+//!   bound for VMM layers following the zoo's `.attn` naming convention.
+//! * **kv-scratch** — a decoder's per-session KV cache holds
+//!   `2 × seq × d_model` i32 entries per attention layer; the sum across
+//!   layers must fit the serving scratch budget or sessions cannot keep
+//!   state resident.
 //! * **ternary-range** — weight planes must stay in the ternary alphabet
 //!   ([`ternary_bytes`] / [`ternary_trits`]).
 //! * **determinism** — a model declaring
@@ -59,6 +74,15 @@ pub enum NoisePolicy {
     AnalogNoisy { seed: Option<u64> },
 }
 
+/// Attention-specific metadata on a [`LayerAudit`] — drives the
+/// score-accumulator overflow and KV-scratch checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttentionAudit {
+    pub heads: usize,
+    pub d_model: usize,
+    pub seq: usize,
+}
+
 /// The verifier's view of one VMM layer (extracted from a mapped
 /// [`Instr::Vmm`]).
 #[derive(Clone, Debug)]
@@ -74,6 +98,9 @@ pub struct LayerAudit {
     pub passes: u32,
     /// Tiles this layer's accesses occupy in parallel.
     pub tiles_used: usize,
+    /// Present when this VMM is an attention layer's fused QKV + output
+    /// projection; enables the attention-specific checks.
+    pub attention: Option<AttentionAudit>,
 }
 
 /// Everything [`check_program`] needs, decoupled from the [`Program`] so
@@ -108,6 +135,13 @@ impl ProgramAudit {
                     positions: shape.positions,
                     passes: *act_passes,
                     tiles_used: *tiles_used,
+                    // Conservative fallback for audits built without the
+                    // network IR: a `.attn`-suffixed VMM is audited as
+                    // single-head (d_head = d_model, the largest possible
+                    // reduction). `annotate_attention` refines this.
+                    attention: (layer.ends_with(".attn") || layer == "attn").then(
+                        || AttentionAudit { heads: 1, d_model: shape.rows, seq: shape.positions },
+                    ),
                 }),
                 _ => None,
             })
@@ -120,6 +154,20 @@ impl ProgramAudit {
             arch_tiles: arch.tiles,
             tiles_required: prog.max_tiles_used(),
             layers,
+        }
+    }
+
+    /// Refine attention metadata with exact head counts from the network
+    /// IR (matched by layer name). [`crate::coordinator::ModelSpec::for_network`]
+    /// calls this so registration-time verification sees the true
+    /// `d_head`, not the conservative single-head fallback.
+    pub fn annotate_attention(&mut self, net: &crate::model::Network) {
+        for layer in &net.layers {
+            if let crate::model::Layer::Attention { name, d_model, heads, seq } = layer {
+                for la in self.layers.iter_mut().filter(|la| &la.name == name) {
+                    la.attention = Some(AttentionAudit { heads: *heads, d_model: *d_model, seq: *seq });
+                }
+            }
         }
     }
 
@@ -139,6 +187,26 @@ impl ProgramAudit {
         }
         for la in &self.layers {
             self.check_layer(model, la)?;
+        }
+        // KV-scratch feasibility: the per-session cache holds K and V
+        // projections (2 × seq × d_model i32 entries) for every attention
+        // layer; the whole stack must fit the serving scratch budget.
+        let kv_slots: u128 = self
+            .layers
+            .iter()
+            .filter_map(|la| la.attention.as_ref())
+            .map(|a| 2u128 * a.seq as u128 * a.d_model as u128)
+            .sum();
+        if kv_slots > SCRATCH_ACC_SLOTS {
+            return verify_err(
+                model,
+                "-",
+                "kv-scratch",
+                format!(
+                    "per-session KV cache needs {kv_slots} i32 slots across the attention \
+                     stack, exceeding the {SCRATCH_ACC_SLOTS}-slot scratch budget"
+                ),
+            );
         }
         Ok(())
     }
@@ -201,6 +269,29 @@ impl ProgramAudit {
                     i32::MAX
                 ),
             );
+        }
+        // Attention score-accumulator overflow: each Q/K entry is a
+        // signed-2-bit projection output bounded by 3·d_model, reduced
+        // over d_head terms and shifted into an i32 score.
+        if let Some(att) = &la.attention {
+            let d_head = (att.d_model / att.heads.max(1)).max(1);
+            let qmax = crate::transformer::proj_abs_bound(att.d_model);
+            let worst = (qmax.saturating_mul(qmax)).saturating_mul(d_head as i128)
+                >> crate::transformer::SCORE_SHIFT;
+            if worst > i128::from(i32::MAX) {
+                return verify_err(
+                    model,
+                    &la.name,
+                    "attn-acc-overflow",
+                    format!(
+                        "worst-case |score| = d_head({d_head}) × (3·d_model({}))² >> {} = \
+                         {worst} exceeds i32::MAX ({})",
+                        att.d_model,
+                        crate::transformer::SCORE_SHIFT,
+                        i32::MAX
+                    ),
+                );
+            }
         }
         // Scratch feasibility: the layer's accumulator plane must fit the
         // serving scratch budget.
@@ -334,6 +425,7 @@ mod tests {
             passes: 2,
             // 512 rows = 32 blocks → at least 2 tiles of K=16 blocks.
             tiles_used: 2,
+            attention: None,
         }
     }
 
@@ -407,6 +499,88 @@ mod tests {
         let arch = crate::arch::ArchConfig::tim_dnn();
         let prog = crate::mapper::map_network(&crate::model::tiny_cnn(), &arch);
         check_program("timnet", &prog, &arch).unwrap();
+    }
+
+    #[test]
+    fn mapped_decoders_verify_clean_with_exact_heads() {
+        let arch = crate::arch::ArchConfig::tim_dnn();
+        for net in [crate::model::tiny_bitnet(), crate::model::ptb_decoder()] {
+            let prog = crate::mapper::map_network(&net, &arch);
+            // Bare program check (conservative single-head fallback)…
+            check_program(&net.name, &prog, &arch).unwrap();
+            // …and the annotated audit with true head counts.
+            let mut audit = ProgramAudit::of(&prog, &arch);
+            audit.annotate_attention(&net);
+            let attn = audit.layers.iter().find(|la| la.attention.is_some()).unwrap();
+            assert!(attn.attention.unwrap().heads > 1, "annotation should refine heads");
+            audit.check(&net.name).unwrap();
+        }
+    }
+
+    #[test]
+    fn attention_score_overflow_detected() {
+        // d_head = 2^20 (single head), qmax = 3·2^20:
+        // 2^20 × (3·2^20)² >> 4 ≈ 6.2e17 ≫ i32::MAX.
+        let mut la = layer();
+        la.name = "blk0.attn".into();
+        la.rows = 1 << 20;
+        la.cols = 4 << 20;
+        la.positions = 4;
+        la.tiles_used = 32;
+        la.attention = Some(AttentionAudit { heads: 1, d_model: 1 << 20, seq: 4 });
+        let mut a = audit_with(la);
+        a.arch_tiles = 32;
+        match a.check("m") {
+            Err(TimError::Verify { layer, check, detail, .. }) => {
+                assert_eq!(layer, "blk0.attn");
+                assert_eq!(check, "attn-acc-overflow");
+                assert!(detail.contains("d_head"), "{detail}");
+            }
+            other => panic!("expected attn-acc-overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kv_scratch_budget_enforced_across_the_stack() {
+        // Five layers of 2 × 8192 × 4096 = 67.1M KV slots each: every
+        // layer passes its own plane check, the stack sum (335M) trips
+        // the 2^28 (268M) budget.
+        let mk = |i: usize| LayerAudit {
+            name: format!("blk{i}.attn"),
+            rows: 4096,
+            cols: 16384,
+            positions: 8192,
+            passes: 2,
+            tiles_used: 32,
+            attention: Some(AttentionAudit { heads: 64, d_model: 4096, seq: 8192 }),
+        };
+        let audit = ProgramAudit {
+            network: "t".into(),
+            tile_l: 16,
+            tile_n: 256,
+            tile_k: 16,
+            arch_tiles: 32,
+            tiles_required: 32,
+            layers: (0..5).map(mk).collect(),
+        };
+        match audit.check("m") {
+            Err(TimError::Verify { layer, check, .. }) => {
+                assert_eq!(check, "kv-scratch");
+                assert_eq!(layer, "-");
+            }
+            other => panic!("expected kv-scratch, got {other:?}"),
+        }
+        // Two layers (134M slots) fit.
+        let small = ProgramAudit {
+            network: "t".into(),
+            tile_l: 16,
+            tile_n: 256,
+            tile_k: 16,
+            arch_tiles: 32,
+            tiles_required: 32,
+            layers: (0..2).map(mk).collect(),
+        };
+        small.check("m").unwrap();
     }
 
     #[test]

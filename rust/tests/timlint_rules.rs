@@ -8,8 +8,8 @@
 mod lint;
 
 use lint::{
-    lint_source, Finding, RULE_DIGITIZE_F32, RULE_HOT_ALLOC, RULE_MUTEX, RULE_NARROWING,
-    RULE_RNG, RULE_VMM_MATCH,
+    lint_source, Finding, RULE_DIGITIZE_F32, RULE_HOT_ALLOC, RULE_INTSOFTMAX_FLOAT, RULE_MUTEX,
+    RULE_NARROWING, RULE_RNG, RULE_VMM_MATCH,
 };
 
 fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
@@ -281,6 +281,74 @@ fn snapshot(m: &Mutex<u64>) -> u64 {
 }
 ";
     assert!(lint_source("rust/src/coordinator/fault.rs", src).is_empty());
+}
+
+// ----------------------------------------------------- no-float-in-intsoftmax
+
+#[test]
+fn float_tokens_in_intmath_module_flagged_file_wide() {
+    // Unlike digitize-f32 (scoped to `impl Digitize for` bodies), the
+    // intsoftmax rule covers every token of the file — free fns, consts,
+    // and test modules alike.
+    let src = "\
+pub fn softmax_q15(logits: &[i32]) -> f32 {
+    let scale = 0.5;
+    let suffixed = 1f64;
+    (scale + suffixed) as f32
+}
+";
+    let f = lint_source("rust/src/transformer/intmath.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_INTSOFTMAX_FLOAT; 4], "{f:#?}");
+    // `f32` return type on line 1, `0.5` on 2, `1f64` on 3, `f32` cast on 4.
+    let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+    assert_eq!(lines, vec![1, 2, 3, 4]);
+    // The identical source anywhere else in the tree is not this rule's
+    // business (fn body is not a Digitize impl, so no digitize-f32 either).
+    assert!(lint_source("rust/src/transformer/mod.rs", src).is_empty());
+    assert!(lint_source("rust/src/arch/functional.rs", src).is_empty());
+}
+
+#[test]
+fn float_in_intmath_test_module_is_still_flagged() {
+    let src = "\
+pub fn exp2_neg_q15(d: i32) -> i32 { d }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn oracle() {
+        let x = 2.75;
+        let _ = x;
+    }
+}
+";
+    let f = lint_source("rust/src/transformer/intmath.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_INTSOFTMAX_FLOAT]);
+    assert_eq!(f[0].line, 6);
+}
+
+#[test]
+fn integer_only_intmath_module_is_clean() {
+    let src = "\
+pub const PROB_ONE: i32 = 1 << 15;
+pub fn attend(probs: &[i32], out: &mut [i64]) {
+    for (o, &p) in out.iter_mut().zip(probs) {
+        *o += i64::from(p) * 3;
+    }
+}
+";
+    assert!(lint_source("rust/src/transformer/intmath.rs", src).is_empty());
+}
+
+#[test]
+fn intsoftmax_rule_is_waivable_like_any_other() {
+    let src = "\
+pub fn boundary() -> i32 {
+    // timlint::allow(no-float-in-intsoftmax): documented one-off
+    let x = 1.5;
+    x as i32
+}
+";
+    assert!(lint_source("rust/src/transformer/intmath.rs", src).is_empty());
 }
 
 // --------------------------------------------------------- lexer edge cases

@@ -1,0 +1,168 @@
+//! f64-oracle property tests for the integer softmax/layernorm kernels
+//! (ISSUE 9, satellite 3). The kernels themselves are float-free by
+//! construction (timlint `no-float-in-intsoftmax` pins it); *this* file
+//! is where floats are allowed, so the fixed-point results are checked
+//! against a double-precision reference:
+//!
+//! * `softmax_q15`: sums to `PROB_ONE` within the documented ±len/2
+//!   rounding budget, preserves the logit ordering (monotone, equal
+//!   logits ⇒ equal mass), and tracks the exact base-2 softmax within a
+//!   small Q15 tolerance;
+//! * `layernorm_q`: near-zero mean residue, RMS within a factor of two
+//!   of the `1 << NORM_BITS` target, and per-element agreement with the
+//!   f64 normalization;
+//! * `exp2_neg_q15` / `attend_q15`: elementwise agreement with the f64
+//!   exponential and the probability-weighted mix.
+
+use timdnn::transformer::intmath::{
+    attend_q15, exp2_neg_q15, layernorm_q, softmax_q15, EXP_FRAC_BITS, NORM_BITS, PROB_ONE,
+};
+use timdnn::util::prop;
+
+/// Exact base-2 softmax of Q[`EXP_FRAC_BITS`] logits in f64.
+fn softmax_oracle(logits: &[i32]) -> Vec<f64> {
+    let scale = f64::from(1 << EXP_FRAC_BITS);
+    let max = f64::from(*logits.iter().max().unwrap());
+    let weights: Vec<f64> =
+        logits.iter().map(|&l| ((f64::from(l) - max) / scale).exp2()).collect();
+    let sum: f64 = weights.iter().sum();
+    weights.into_iter().map(|w| w / sum).collect()
+}
+
+#[test]
+fn exp2_table_tracks_the_f64_exponential() {
+    for d in 0..(31 << EXP_FRAC_BITS) {
+        let got = f64::from(exp2_neg_q15(d));
+        let want = (-f64::from(d) / f64::from(1 << EXP_FRAC_BITS)).exp2() * f64::from(PROB_ONE);
+        assert!((got - want).abs() <= 2.0, "exp2_neg_q15({d}) = {got}, oracle {want}");
+    }
+}
+
+#[test]
+fn softmax_sums_to_one_within_the_documented_budget() {
+    prop::check("softmax-sum-to-one", 0x50F7, |rng, _case| {
+        let n = rng.range_usize(1, 48);
+        let logits: Vec<i32> = (0..n).map(|_| rng.range_i64(-4096, 4096) as i32).collect();
+        let mut probs = vec![0i32; n];
+        softmax_q15(&logits, &mut probs);
+        let sum: i64 = probs.iter().map(|&p| i64::from(p)).sum();
+        let err = (sum - i64::from(PROB_ONE)).abs();
+        assert!(
+            err <= (n as i64) / 2 + 1,
+            "Σp = {sum} off by {err} for {n} logits (budget {})",
+            n / 2 + 1
+        );
+        assert!(probs.iter().all(|&p| (0..=PROB_ONE).contains(&p)), "probability out of range");
+    });
+}
+
+#[test]
+fn softmax_is_monotone_in_the_logits() {
+    prop::check("softmax-monotone", 0x50F8, |rng, _case| {
+        let n = rng.range_usize(2, 32);
+        let logits: Vec<i32> = (0..n).map(|_| rng.range_i64(-2048, 2048) as i32).collect();
+        let mut probs = vec![0i32; n];
+        softmax_q15(&logits, &mut probs);
+        for i in 0..n {
+            for j in 0..n {
+                if logits[i] > logits[j] {
+                    assert!(
+                        probs[i] >= probs[j],
+                        "logit {} > {} but prob {} < {}",
+                        logits[i],
+                        logits[j],
+                        probs[i],
+                        probs[j]
+                    );
+                }
+                if logits[i] == logits[j] {
+                    assert_eq!(probs[i], probs[j], "equal logits must get equal mass");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn softmax_tracks_the_f64_oracle_elementwise() {
+    prop::check("softmax-oracle", 0x50F9, |rng, _case| {
+        let n = rng.range_usize(1, 40);
+        let logits: Vec<i32> = (0..n).map(|_| rng.range_i64(-4096, 4096) as i32).collect();
+        let mut probs = vec![0i32; n];
+        softmax_q15(&logits, &mut probs);
+        let oracle = softmax_oracle(&logits);
+        for (i, (&p, &o)) in probs.iter().zip(&oracle).enumerate() {
+            let diff = (f64::from(p) - o * f64::from(PROB_ONE)).abs();
+            let tol = f64::from(PROB_ONE) * 2e-3 + n as f64;
+            assert!(diff <= tol, "prob[{i}] = {p} vs oracle {:.2} (n = {n})", o * 32768.0);
+        }
+    });
+}
+
+#[test]
+fn layernorm_mean_and_variance_match_the_oracle_bounds() {
+    prop::check("layernorm-bounds", 0x1A7E, |rng, _case| {
+        let n = rng.range_usize(2, 64);
+        let x: Vec<i32> = (0..n).map(|_| rng.range_i64(-20_000, 20_000) as i32).collect();
+        let mut out = vec![0i32; n];
+        layernorm_q(&x, &mut out);
+
+        // Mean residue: at most one unit per element from rounding.
+        let sum: i64 = out.iter().map(|&v| i64::from(v)).sum();
+        assert!(sum.abs() <= n as i64, "mean residue {sum} for n = {n}");
+
+        // Oracle moments in f64.
+        let mean = x.iter().map(|&v| f64::from(v)).sum::<f64>() / n as f64;
+        let var = x.iter().map(|&v| (f64::from(v) - mean).powi(2)).sum::<f64>() / n as f64;
+        let std = var.sqrt();
+        if std < 64.0 {
+            return; // quantization dominates on near-constant rows
+        }
+
+        // RMS lands within 2x of the 1 << NORM_BITS target.
+        let out_var = out.iter().map(|&v| f64::from(v).powi(2)).sum::<f64>() / n as f64;
+        let target = f64::from(1 << NORM_BITS).powi(2);
+        assert!(
+            out_var > target / 2.0 && out_var < target * 2.0,
+            "normalized variance {out_var} vs target {target}"
+        );
+
+        // Elementwise agreement with the f64 normalization.
+        for (i, (&v, &o)) in x.iter().zip(&out).enumerate() {
+            let want = (f64::from(v) - mean) / std * f64::from(1 << NORM_BITS);
+            // Budget: ±1 truncation, ±0.5 from the rounded mean, and up to
+            // √n · 64 · Δstd/std² from the floor-sqrt std (Δstd ≤ 1.5).
+            assert!(
+                (f64::from(o) - want).abs() <= 16.0,
+                "out[{i}] = {o} vs oracle {want:.2} (std = {std:.1})"
+            );
+        }
+    });
+}
+
+#[test]
+fn attend_tracks_the_f64_weighted_mix() {
+    prop::check("attend-oracle", 0xA77E, |rng, _case| {
+        let t = rng.range_usize(1, 24);
+        let d = rng.range_usize(1, 16);
+        // A normalized probability row (as softmax_q15 would emit).
+        let mut logits = vec![0i32; t];
+        for l in logits.iter_mut() {
+            *l = rng.range_i64(-1024, 1024) as i32;
+        }
+        let mut probs = vec![0i32; t];
+        softmax_q15(&logits, &mut probs);
+        let values: Vec<i32> = (0..t * d).map(|_| rng.range_i64(-512, 512) as i32).collect();
+        let mut out = vec![0i32; d];
+        attend_q15(&probs, &values, d, &mut out);
+        for (j, &o) in out.iter().enumerate() {
+            let want: f64 = (0..t)
+                .map(|k| f64::from(probs[k]) / f64::from(PROB_ONE) * f64::from(values[k * d + j]))
+                .sum();
+            assert!(
+                (f64::from(o) - want).abs() <= 1.0,
+                "out[{j}] = {o} vs oracle {want:.3}"
+            );
+        }
+    });
+}

@@ -1,0 +1,240 @@
+//! KV-cache correctness for the ternary decoder (ISSUE 9, satellite 4):
+//!
+//! * incremental decode (prefill once, then one token at a time against
+//!   the resident cache) is **bit-exact** with recomputing the full
+//!   prefix from scratch, in all three `VmmMode`s — under `AnalogNoisy`
+//!   with a fresh identically-seeded RNG per recompute, since the decode
+//!   path fixes the draw order per position;
+//! * steady-state decode performs **zero heap allocations** per token,
+//!   including session churn through the arena's KV pool — asserted with
+//!   the same counting `#[global_allocator]` as `alloc_free.rs`;
+//! * `Session::generate` through the engine (TransformerBackend worker,
+//!   KV resident across steps) reproduces the in-process
+//!   `generate_greedy` token-for-token, and the session counters show up
+//!   in the model's metrics.
+
+// The sanctioned unsafe exception (see workspace lints): a GlobalAlloc
+// impl cannot be written without it.
+#![allow(unsafe_code)]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{Engine, ModelSpec, SubmitOptions, TransformerBackend};
+use timdnn::model;
+use timdnn::tile::VmmMode;
+use timdnn::transformer::{DecoderConfig, DecoderEngine, DecoderWeights};
+use timdnn::util::prng::Rng;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAllocator;
+
+// SAFETY: delegates every operation to `System`; the counter is a plain
+// per-thread `Cell` bump with no allocation or locking.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+fn allocs_on_this_thread() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+fn engine() -> DecoderEngine {
+    DecoderEngine::new(&DecoderWeights::synthetic(DecoderConfig::tiny(), 0xB17))
+}
+
+/// A fixed token stream inside the tiny 64-entry vocabulary.
+fn tokens(n: usize) -> Vec<u32> {
+    (0..n).map(|i| ((i * 17 + 5) % 64) as u32).collect()
+}
+
+/// Logits after feeding `seq` through a fresh KV cache in one prefill.
+fn full_recompute(eng: &mut DecoderEngine, seq: &[u32], mode: &mut VmmMode) -> Vec<i32> {
+    let mut kv = eng.alloc_kv();
+    let mut logits = Vec::new();
+    eng.prefill(seq, &mut kv, mode, &mut logits);
+    eng.release_kv(kv);
+    logits
+}
+
+#[test]
+fn incremental_decode_is_bit_exact_with_full_recompute_in_every_mode() {
+    let seq = tokens(12);
+    let prompt = 4;
+    // Each closure builds the mode fresh so AnalogNoisy recomputes start
+    // from an identically-seeded draw stream.
+    let modes: Vec<(&str, Box<dyn Fn() -> (Option<Rng>, bool)>)> = vec![
+        ("Ideal", Box::new(|| (None, false))),
+        ("Analog", Box::new(|| (None, true))),
+        ("AnalogNoisy", Box::new(|| (Some(Rng::seeded(99)), false))),
+    ];
+    for (name, make) in modes {
+        let mut eng = engine();
+
+        // Incremental path: one prefill, then resident-KV decode steps,
+        // capturing the logits after every position.
+        let (mut rng, analog) = make();
+        let mut mode = match rng.as_mut() {
+            Some(r) => VmmMode::AnalogNoisy(r),
+            None if analog => VmmMode::Analog,
+            None => VmmMode::Ideal,
+        };
+        let mut kv = eng.alloc_kv();
+        let mut logits = Vec::new();
+        eng.prefill(&seq[..prompt], &mut kv, &mut mode, &mut logits);
+        let mut incremental = vec![(prompt, logits.clone())];
+        for p in prompt..seq.len() {
+            eng.decode_step(seq[p], &mut kv, &mut mode, &mut logits);
+            incremental.push((p + 1, logits.clone()));
+        }
+        drop(mode);
+        eng.release_kv(kv);
+
+        // Recompute every prefix from scratch (fresh KV, fresh RNG) and
+        // demand bit-exact agreement at each length.
+        for (len, want) in incremental {
+            let (mut rng, analog) = make();
+            let mut mode = match rng.as_mut() {
+                Some(r) => VmmMode::AnalogNoisy(r),
+                None if analog => VmmMode::Analog,
+                None => VmmMode::Ideal,
+            };
+            let got = full_recompute(&mut eng, &seq[..len], &mut mode);
+            assert_eq!(got, want, "{name}: prefix of {len} diverged from incremental decode");
+        }
+    }
+}
+
+#[test]
+fn ideal_and_analog_decode_agree_exactly() {
+    // The bitline-voltage + flash-ADC model must digitize to the ideal
+    // counts — end to end through the decoder, not just per tile access.
+    let seq = tokens(9);
+    let mut eng = engine();
+    let ideal = full_recompute(&mut eng, &seq, &mut VmmMode::Ideal);
+    let analog = full_recompute(&mut eng, &seq, &mut VmmMode::Analog);
+    assert_eq!(ideal, analog);
+    assert_eq!(ideal.len(), eng.cfg().vocab);
+}
+
+#[test]
+fn steady_state_decode_step_performs_zero_heap_allocations() {
+    let mut eng = engine();
+    let seq = tokens(20);
+
+    // Warm-up: grow every arena scratch buffer (and the KV pool) to its
+    // high-water mark, then recycle the cache through the pool once so
+    // the churn path below reuses, never allocates.
+    let mut kv = eng.alloc_kv();
+    let mut logits = Vec::new();
+    eng.prefill(&seq[..4], &mut kv, &mut VmmMode::Ideal, &mut logits);
+    eng.decode_step(seq[4], &mut kv, &mut VmmMode::Ideal, &mut logits);
+    eng.release_kv(kv);
+
+    let before = allocs_on_this_thread();
+    let mut kv = eng.alloc_kv(); // pool hit, not a fresh allocation
+    eng.prefill(&seq[..4], &mut kv, &mut VmmMode::Ideal, &mut logits);
+    for &t in &seq[4..16] {
+        eng.decode_step(t, &mut kv, &mut VmmMode::Ideal, &mut logits);
+    }
+    eng.release_kv(kv);
+    let after = allocs_on_this_thread();
+    assert_eq!(after - before, 0, "steady-state decode allocated {} times", after - before);
+}
+
+#[test]
+fn steady_state_noisy_decode_is_also_allocation_free() {
+    let mut eng = engine();
+    let seq = tokens(10);
+    let mut rng = Rng::seeded(3);
+    let mut kv = eng.alloc_kv();
+    let mut logits = Vec::new();
+    {
+        let mut mode = VmmMode::AnalogNoisy(&mut rng);
+        eng.prefill(&seq[..3], &mut kv, &mut mode, &mut logits);
+    }
+
+    let before = allocs_on_this_thread();
+    let mut mode = VmmMode::AnalogNoisy(&mut rng);
+    for &t in &seq[3..10] {
+        eng.decode_step(t, &mut kv, &mut mode, &mut logits);
+    }
+    let after = allocs_on_this_thread();
+    drop(mode);
+    eng.release_kv(kv);
+    assert_eq!(after - before, 0, "noisy decode allocated {} times", after - before);
+}
+
+#[test]
+fn engine_generate_matches_in_process_greedy_decoding() {
+    let seed = 0xB17;
+    let prompt = [5u32, 9, 2, 41];
+    let max_new = 6;
+
+    // Ground truth: the decoder driven directly, no serving stack.
+    let want = engine().generate_greedy(&prompt, max_new, &mut VmmMode::Ideal);
+    assert_eq!(want.len(), max_new);
+
+    // Same weights behind a TransformerBackend worker: the KV cache
+    // lives on the worker across the prefill + per-token decode steps.
+    let served = Engine::builder()
+        .register(ModelSpec::for_network(
+            "bitnet",
+            &model::tiny_bitnet(),
+            &ArchConfig::tim_dnn(),
+            move || Ok(Box::new(TransformerBackend::tiny(seed))),
+        ))
+        .unwrap()
+        .build()
+        .unwrap();
+    let session = served.session("bitnet").unwrap();
+    let got = session.generate(&prompt, max_new, SubmitOptions::default()).unwrap();
+    assert_eq!(got, want, "served generation diverged from in-process greedy decode");
+
+    // A second generation gets its own session id and fresh KV.
+    let again = session.generate(&prompt, max_new, SubmitOptions::default()).unwrap();
+    assert_eq!(again, want);
+
+    let snaps = served.shutdown();
+    let snap = &snaps["bitnet"];
+    assert_eq!(snap.sessions_opened, 2, "one KV session per generate call");
+    assert_eq!(snap.sessions_evicted, 2, "generate closes its session on completion");
+    assert_eq!(snap.decode_steps, 2 * (max_new as u64 - 1), "one decode per generated token");
+}
+
+#[test]
+fn generate_rejects_an_empty_prompt_and_closes_nothing() {
+    let served = Engine::builder()
+        .register(ModelSpec::for_network(
+            "bitnet",
+            &model::tiny_bitnet(),
+            &ArchConfig::tim_dnn(),
+            || Ok(Box::new(TransformerBackend::tiny(1))),
+        ))
+        .unwrap()
+        .build()
+        .unwrap();
+    let session = served.session("bitnet").unwrap();
+    assert!(session.generate(&[], 4, SubmitOptions::default()).is_err());
+    let snaps = served.shutdown();
+    assert_eq!(snaps["bitnet"].sessions_opened, 0);
+}

@@ -41,6 +41,7 @@ fn overflow_only_audit(l: usize, rows: usize, passes: u32) -> ProgramAudit {
             positions: 1,
             passes,
             tiles_used: 32,
+            attention: None,
         }],
     }
 }

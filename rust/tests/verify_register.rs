@@ -35,6 +35,7 @@ fn overflow_audit() -> ProgramAudit {
             positions: 1,
             passes: 8,
             tiles_used: 32,
+            attention: None,
         }],
     }
 }
@@ -91,6 +92,7 @@ fn column_capacity_inconsistency_rejected() {
         positions: 1,
         passes: 1,
         tiles_used: 1,
+        attention: None,
     };
     let s = spec("wide-model").with_audit(audit);
     match Engine::builder().register(s) {

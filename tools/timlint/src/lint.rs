@@ -19,6 +19,7 @@
 //! | `digitize-f32`    | `impl Digitize for` bodies   | any f32/f64 arithmetic    |
 //! | `vmm-mode-match`  | every `match` on `VmmMode`   | missing variant/wildcard  |
 //! | `mutex-lock-unwrap`| `rust/src/**`               | bare `.lock().unwrap()`   |
+//! | `no-float-in-intsoftmax` | `transformer/intmath.rs` | any float token, file-wide |
 //!
 //! Waivers: a `// timlint::allow(rule): why` comment covers its own line
 //! and the next; `#[timdnn::timlint_allow(rule)]` covers a whole fn.
@@ -38,6 +39,7 @@ pub const RULE_RNG: &str = "rng-construction";
 pub const RULE_DIGITIZE_F32: &str = "digitize-f32";
 pub const RULE_VMM_MATCH: &str = "vmm-mode-match";
 pub const RULE_MUTEX: &str = "mutex-lock-unwrap";
+pub const RULE_INTSOFTMAX_FLOAT: &str = "no-float-in-intsoftmax";
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Kind {
@@ -467,28 +469,52 @@ impl Ctx<'_> {
         }
     }
 
+    /// Shared float-token detector: an `f32`/`f64` ident, a suffixed
+    /// numeric literal, or a `1.5`-style float literal (Num '.' Num).
+    fn float_tok(&self, j: usize) -> bool {
+        let t = self.toks[j];
+        match t.kind {
+            Kind::Ident => t.text == "f32" || t.text == "f64",
+            Kind::Num => {
+                t.text.ends_with("f32")
+                    || t.text.ends_with("f64")
+                    || (self.text(j + 1) == "."
+                        && self.toks.get(j + 2).is_some_and(|n| n.kind == Kind::Num))
+            }
+            Kind::Punct => false,
+        }
+    }
+
     fn digitize_rules(&mut self, body: (usize, usize)) {
         let (start, end) = body;
         for j in start..end {
-            let t = self.toks[j];
-            let float = match t.kind {
-                Kind::Ident => t.text == "f32" || t.text == "f64",
-                Kind::Num => {
-                    t.text.ends_with("f32")
-                        || t.text.ends_with("f64")
-                        // Float literal `1.5`: Num '.' Num.
-                        || (self.text(j + 1) == "."
-                            && self.toks.get(j + 2).is_some_and(|n| n.kind == Kind::Num))
-                }
-                Kind::Punct => false,
-            };
-            if float {
+            if self.float_tok(j) {
                 let msg = format!(
                     "float arithmetic (`{}`) inside a Digitize impl — digitization must stay \
                      integer until the caller's single scale conversion",
-                    t.text
+                    self.toks[j].text
                 );
                 self.report(j, RULE_DIGITIZE_F32, msg);
+            }
+        }
+    }
+
+    /// `no-float-in-intsoftmax`: inside the integer softmax/layernorm
+    /// module every token of the file — test modules included — is under
+    /// the same float detector that guards `Digitize` impls. The decode
+    /// loop's bit-reproducibility depends on this span staying pure
+    /// fixed-point; the float boundary lives in `transformer/mod.rs` and
+    /// the serving tensor conversion, never here.
+    fn intsoftmax_rules(&mut self) {
+        for j in 0..self.toks.len() {
+            if self.float_tok(j) {
+                let msg = format!(
+                    "float token (`{}`) in the integer softmax/layernorm module — \
+                     transformer/intmath.rs is fixed-point only, file-wide; move float \
+                     code (oracles, conversions) to the caller or the test crate",
+                    self.toks[j].text
+                );
+                self.report(j, RULE_INTSOFTMAX_FLOAT, msg);
             }
         }
     }
@@ -700,6 +726,12 @@ fn is_prng_module(file: &str) -> bool {
     file.replace('\\', "/").ends_with("util/prng.rs")
 }
 
+/// True when `file` is the integer softmax/layernorm module, whose whole
+/// token stream is under the `no-float-in-intsoftmax` ban.
+fn is_intsoftmax_module(file: &str) -> bool {
+    file.replace('\\', "/").ends_with("transformer/intmath.rs")
+}
+
 /// Lint one source file; `file` is used for diagnostics and the
 /// `util/prng.rs` carve-out.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
@@ -716,6 +748,9 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     }
     if !is_prng_module(file) {
         ctx.rng_rules();
+    }
+    if is_intsoftmax_module(file) {
+        ctx.intsoftmax_rules();
     }
     ctx.mutex_rules();
     ctx.vmm_match_rules();
