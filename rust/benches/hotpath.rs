@@ -18,11 +18,13 @@
 //! * ternary transformer: 16-token batched prefill vs. a single-token
 //!   decode step against the resident KV cache (the autoregressive
 //!   steady state — the ratio is what the cache buys per token),
+//! * telemetry hot path — `LogHistogram::record` and the bounded
+//!   span-ring push that sit on the serving reply path,
 //! * mapper + simulator end-to-end, Monte-Carlo variation sampling.
 //!
 //! `cargo bench --bench hotpath -- --smoke` runs a fast CI subset.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
 use timdnn::arch::ArchConfig;
@@ -31,11 +33,13 @@ use timdnn::model;
 use timdnn::quant::TernarySystem;
 use timdnn::runtime::TensorF32;
 use timdnn::sim;
+use timdnn::telemetry::{RequestSpan, SpanRecorder};
 use timdnn::tile::{PackedCodes, PackedTrits, TileConfig, TimTile, VmmMode};
 use timdnn::tpc::TritMatrix;
 use timdnn::transformer::{DecoderConfig, DecoderEngine, DecoderWeights};
 use timdnn::util::bench::{bench, black_box, write_json_report, BenchResult};
 use timdnn::util::prng::Rng;
+use timdnn::util::stats::LogHistogram;
 use timdnn::variation::VariationStudy;
 
 const SERVE_BATCH: usize = 8;
@@ -319,6 +323,42 @@ fn main() {
     );
     results.push(r);
     dec.release_kv(kv);
+
+    // --- Telemetry hot path: per-request observability overhead ----------
+    // Both sit on the worker's reply path; EXPERIMENTS.md §Observability
+    // budgets them at nanoseconds against the ~µs batch cost above.
+    let mut hist = LogHistogram::new();
+    let mut lat = 1e-6;
+    let r = bench("telemetry/loghist_record", warmup, measure, || {
+        lat = if lat > 1e-1 { 1e-6 } else { lat * 1.001 };
+        hist.record(black_box(lat));
+    });
+    println!("  -> {:.1} M histogram records/s (O(1), no alloc)", r.per_second(1.0) / 1e6);
+    results.push(r);
+
+    let recorder = SpanRecorder::new(Instant::now());
+    let mut span_id = 0u64;
+    let r = bench("telemetry/span_push", warmup, measure, || {
+        span_id += 1;
+        let t = recorder.now();
+        recorder.push(black_box(RequestSpan {
+            id: span_id,
+            submit_s: t,
+            enqueue_s: t,
+            batch_close_s: t,
+            dispatch_s: t,
+            execute_end_s: t,
+            abft_end_s: t,
+            reply_s: t,
+            batch: 4,
+            ok: true,
+        }));
+    });
+    println!(
+        "  -> {:.1} M span pushes/s (bounded ring, drop-oldest)",
+        r.per_second(1.0) / 1e6
+    );
+    results.push(r);
 
     // --- Simulator + Monte-Carlo (skipped in smoke mode) -----------------
     if !smoke {

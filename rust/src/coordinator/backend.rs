@@ -276,7 +276,9 @@ impl FunctionalBackend {
         } else {
             // Loud, because a wrong cwd/TIMDNN_ARTIFACTS would otherwise
             // silently serve garbage predictions after the operator ran
-            // `make artifacts`.
+            // `make artifacts`. Runs at construction, before any engine
+            // event ring exists to carry it.
+            // timlint::allow(no-println-outside-report): pre-engine startup warning
             eprintln!(
                 "warning: {} not found — serving synthetic (untrained) TiMNet weights",
                 path.display()

@@ -37,12 +37,22 @@ pub struct Batcher {
     policy: BatchPolicy,
     /// Set once a Shutdown marker (or disconnect) has been seen.
     closed: bool,
+    /// Instant the most recent batch stopped forming (telemetry's
+    /// batch-close stamp; see [`Batcher::last_close`]).
+    last_close: Instant,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
-        Self { policy, closed: false }
+        Self { policy, closed: false, last_close: Instant::now() }
+    }
+
+    /// When the batch most recently handed out by
+    /// [`Batcher::next_batch_into`] closed (stopped accepting members).
+    /// Meaningful only after a `true` return.
+    pub(crate) fn last_close(&self) -> Instant {
+        self.last_close
     }
 
     /// Block for the next batch. Returns `None` when the channel is closed
@@ -113,6 +123,7 @@ impl Batcher {
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        self.last_close = Instant::now();
         true
     }
 }
@@ -133,6 +144,8 @@ mod tests {
             submitted: Instant::now(),
             deadline: None,
             retries_left: 0,
+            t_submit: 0.0,
+            t_enqueue: 0.0,
             reply,
             guard: InflightGuard::adopt(Arc::new(AtomicUsize::new(1))),
         })

@@ -34,7 +34,12 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Result, TimError};
 use crate::runtime::TensorF32;
+use crate::sim::trace::TraceEvent;
 use crate::sim::SimReport;
+use crate::telemetry::{
+    self, BatchSpan, EngineEvent, EventDrain, EventRing, ModelTraceData, RequestSpan,
+    SpanRecorder, SpanSnapshot,
+};
 use crate::tile::TileHealth;
 
 use super::backend::{BackendFactory, ExecutorBackend, SessionStats, TransformerBackend};
@@ -112,11 +117,19 @@ impl EngineBuilder {
         let next_id = Arc::new(AtomicU64::new(1));
         let default_workers = self.workers;
         let default_supervisor = self.supervisor;
+        // One epoch shared by every span recorder and the event ring, so
+        // all exported timestamps (and the merged hardware lanes) share a
+        // zero.
+        let epoch = Instant::now();
+        let events = Arc::new(EventRing::new(epoch));
         let mut models = BTreeMap::new();
         for (name, spec) in self.registry.into_specs() {
-            models.insert(name, ModelWorker::spawn(spec, default_workers, default_supervisor));
+            models.insert(
+                name,
+                ModelWorker::spawn(spec, default_workers, default_supervisor, epoch, &events),
+            );
         }
-        Ok(Engine { models, next_id })
+        Ok(Engine { models, next_id, events })
     }
 }
 
@@ -140,6 +153,18 @@ pub enum HealthState {
     /// model is half-open and admits probes until the next batch outcome
     /// closes (success) or re-opens (failure) the breaker.
     Down,
+}
+
+impl HealthState {
+    /// Numeric gauge encoding for [`MetricsSnapshot::breaker_state`]:
+    /// 0 = Healthy, 1 = Degraded, 2 = Down.
+    pub fn code(self) -> u64 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Down => 2,
+        }
+    }
 }
 
 impl std::fmt::Display for HealthState {
@@ -193,28 +218,50 @@ struct HealthInner {
     retry_at: Option<Instant>,
     /// The worker gave up rebuilding — no more half-open probes.
     permanent: bool,
+    /// A half-open probe was already admitted this open cycle (bounds the
+    /// BreakerHalfOpen event to one per cycle, not one per submission).
+    probed: bool,
 }
 
 /// Shared per-model health cell: the worker records batch outcomes, the
 /// sessions consult it for admission, callers can observe it via
-/// [`Engine::health`]/[`Session::health`].
+/// [`Engine::health`]/[`Session::health`]. State transitions emit typed
+/// [`EngineEvent`]s into the engine ring when one is attached.
 #[derive(Debug)]
 pub(crate) struct HealthCell {
     policy: SupervisorPolicy,
+    /// Model name stamped into emitted events (empty in bare test cells).
+    model: String,
+    events: Option<Arc<EventRing>>,
     inner: Mutex<HealthInner>,
 }
 
 impl HealthCell {
+    /// Bare cell with no event ring (breaker unit tests).
+    #[cfg(test)]
     fn new(policy: SupervisorPolicy) -> Self {
+        Self::with_events(policy, String::new(), None)
+    }
+
+    fn with_events(policy: SupervisorPolicy, model: String, events: Option<Arc<EventRing>>) -> Self {
         Self {
             policy,
+            model,
+            events,
             inner: Mutex::new(HealthInner {
                 state: HealthState::Healthy,
                 consecutive_failures: 0,
                 cooldown: policy.breaker_cooldown,
                 retry_at: None,
                 permanent: false,
+                probed: false,
             }),
+        }
+    }
+
+    fn emit(&self, event: EngineEvent) {
+        if let Some(ring) = &self.events {
+            ring.push(event);
         }
     }
 
@@ -228,7 +275,7 @@ impl HealthCell {
     /// outcome resolves the state. Deliberately no single-probe latch — a
     /// shed or expired probe must not wedge the breaker open forever.
     fn admit(&self, model: &str) -> Result<()> {
-        let h = lock_unpoisoned(&self.inner);
+        let mut h = lock_unpoisoned(&self.inner);
         if h.state != HealthState::Down {
             return Ok(());
         }
@@ -249,7 +296,12 @@ impl HealthCell {
                         retry_after: t - now,
                     })
                 } else {
-                    Ok(()) // half-open: admit the probe
+                    // Half-open: admit the probe. Emit once per open cycle.
+                    if !h.probed {
+                        h.probed = true;
+                        self.emit(EngineEvent::BreakerHalfOpen { model: self.model.clone() });
+                    }
+                    Ok(())
                 }
             }
             None => Ok(()),
@@ -259,25 +311,38 @@ impl HealthCell {
     /// A batch completed: close the breaker and reset failure state.
     fn on_success(&self) {
         let mut h = lock_unpoisoned(&self.inner);
+        let was = h.state;
         h.state = HealthState::Healthy;
         h.consecutive_failures = 0;
         h.cooldown = self.policy.breaker_cooldown;
         h.retry_at = None;
+        h.probed = false;
+        drop(h);
+        if was == HealthState::Down {
+            self.emit(EngineEvent::BreakerClosed { model: self.model.clone() });
+        }
     }
 
     /// A batch (or construction attempt) failed. Returns the new state
     /// and consecutive-failure count for metrics.
     fn on_failure(&self) -> (HealthState, u32) {
         let mut h = lock_unpoisoned(&self.inner);
+        let was = h.state;
         h.consecutive_failures += 1;
         if h.consecutive_failures >= self.policy.breaker_threshold {
             h.state = HealthState::Down;
             h.retry_at = Some(Instant::now() + h.cooldown);
             h.cooldown = (h.cooldown * 2).min(self.policy.max_backoff);
+            h.probed = false;
         } else {
             h.state = HealthState::Degraded;
         }
-        (h.state, h.consecutive_failures)
+        let out = (h.state, h.consecutive_failures);
+        drop(h);
+        if out.0 == HealthState::Down && was != HealthState::Down {
+            self.emit(EngineEvent::BreakerOpen { model: self.model.clone(), consecutive: out.1 });
+        }
+        out
     }
 
     /// The worker gave up rebuilding: open the breaker for good.
@@ -286,6 +351,8 @@ impl HealthCell {
         h.state = HealthState::Down;
         h.permanent = true;
         h.retry_at = None;
+        drop(h);
+        self.emit(EngineEvent::PermanentlyDown { model: self.model.clone() });
     }
 }
 
@@ -331,6 +398,9 @@ struct ModelWorker {
     health: Arc<HealthCell>,
     inflight: Arc<AtomicUsize>,
     max_queue: usize,
+    spans: Arc<SpanRecorder>,
+    /// Simulated hardware lanes merged into `Engine::export_trace`.
+    hw_trace: Vec<TraceEvent>,
 }
 
 impl ModelWorker {
@@ -338,9 +408,12 @@ impl ModelWorker {
         spec: ModelSpec,
         default_workers: usize,
         default_supervisor: Option<SupervisorPolicy>,
+        epoch: Instant,
+        events: &Arc<EventRing>,
     ) -> Self {
-        let ModelSpec { name, hardware, policy, factory, max_queue, workers, supervisor, .. } =
-            spec;
+        let ModelSpec {
+            name, hardware, policy, factory, max_queue, workers, supervisor, hw_trace, ..
+        } = spec;
         // Per-model width wins; otherwise the engine default; 0 = nothing
         // was configured, and the backend keeps whatever width its factory
         // built it with (the worker skips the set_workers call).
@@ -348,10 +421,14 @@ impl ModelWorker {
         let sup = supervisor.or(default_supervisor).unwrap_or_default();
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let health = Arc::new(HealthCell::new(sup));
+        let health =
+            Arc::new(HealthCell::with_events(sup, name.clone(), Some(Arc::clone(events))));
         let inflight = Arc::new(AtomicUsize::new(0));
+        let spans = Arc::new(SpanRecorder::new(epoch));
         let metrics_w = Arc::clone(&metrics);
         let health_w = Arc::clone(&health);
+        let spans_w = Arc::clone(&spans);
+        let events_w = Arc::clone(events);
         let requeue = tx.clone();
         let handle = std::thread::Builder::new()
             .name(format!("timdnn-engine-{name}"))
@@ -362,6 +439,8 @@ impl ModelWorker {
                     hardware,
                     metrics: metrics_w,
                     health: health_w,
+                    spans: spans_w,
+                    events: events_w,
                     policy: sup,
                     pool_width,
                     requeue,
@@ -373,8 +452,19 @@ impl ModelWorker {
                 .run(rx, policy)
             })
             .expect("spawn engine worker thread");
-        ModelWorker { tx, handle: Some(handle), metrics, health, inflight, max_queue }
+        ModelWorker { tx, handle: Some(handle), metrics, health, inflight, max_queue, spans, hw_trace }
     }
+}
+
+/// Per-batch telemetry stamps (seconds from the engine epoch), threaded
+/// from the drain loop into the reply/failure paths so every request
+/// span shares its batch's transitions.
+#[derive(Clone, Copy)]
+struct BatchStamps {
+    close_s: f64,
+    dispatch_s: f64,
+    execute_end_s: f64,
+    abft_end_s: f64,
 }
 
 /// Render a `catch_unwind` payload for the typed error reply.
@@ -396,6 +486,10 @@ struct Supervisor {
     hardware: SimReport,
     metrics: Arc<Mutex<Metrics>>,
     health: Arc<HealthCell>,
+    /// Span rings shared with `Engine::export_trace`/`request_spans`.
+    spans: Arc<SpanRecorder>,
+    /// Engine-wide typed event ring (shared with every other worker).
+    events: Arc<EventRing>,
     policy: SupervisorPolicy,
     pool_width: usize,
     /// Clone of the worker's own queue sender, used to push retryable
@@ -438,12 +532,14 @@ impl Supervisor {
         // capacity is retained, so the steady-state drain loop allocates
         // nothing per batch (see `Batcher::next_batch_into`).
         while batcher.next_batch_into(&rx, &mut batch) {
+            let close_s = self.spans.offset(batcher.last_close());
             self.shed_expired(&mut batch);
             if batch.is_empty() {
                 continue;
             }
             let real = batch.len();
             let t0 = Instant::now();
+            let dispatch_s = self.spans.offset(t0);
             // Move the tensors out instead of cloning — the reply loop
             // below only needs id/submitted/reply/guard, and on failure
             // `batch_failed` moves them back for requeued retries.
@@ -462,15 +558,23 @@ impl Supervisor {
             // state the closure can leave inconsistent is the backend
             // itself — which is discarded and rebuilt below.
             let outcome = catch_unwind(AssertUnwindSafe(|| backend.execute_batch(&inputs)));
+            let execute_end_s = self.spans.now();
             // Poll device-fault counters whenever the backend survived the
             // batch — including typed failures, where ABFT activity (checks,
             // exhausted spares) is exactly what explains the error. The
             // panic path skips the poll: that backend is discarded and the
             // baseline resets with its replacement.
+            let mut decode_steps_delta = 0u64;
             if outcome.is_ok() {
                 self.poll_tile_health(&*backend);
-                self.poll_session_stats(&*backend);
+                decode_steps_delta = self.poll_session_stats(&*backend);
             }
+            let stamps = BatchStamps {
+                close_s,
+                dispatch_s,
+                execute_end_s,
+                abft_end_s: self.spans.now(),
+            };
             let outputs = match outcome {
                 Ok(Ok(outputs)) => {
                     if outputs.len() < real {
@@ -479,28 +583,24 @@ impl Supervisor {
                             outputs.len(),
                             real
                         );
-                        eprintln!("engine[{}]: {reason}", self.name);
-                        self.batch_failed(&mut batch, &mut inputs, &reason);
+                        self.batch_failed(&mut batch, &mut inputs, &reason, stamps);
                         continue;
                     }
                     if outputs.iter().take(real).any(Vec::is_empty) {
                         let reason =
                             "backend returned an empty output list for a request".to_string();
-                        eprintln!("engine[{}]: {reason}", self.name);
-                        self.batch_failed(&mut batch, &mut inputs, &reason);
+                        self.batch_failed(&mut batch, &mut inputs, &reason, stamps);
                         continue;
                     }
                     outputs
                 }
                 Ok(Err(e)) => {
-                    eprintln!("engine[{}]: batch execution failed: {e}", self.name);
-                    self.batch_failed(&mut batch, &mut inputs, &e.to_string());
+                    self.batch_failed(&mut batch, &mut inputs, &e.to_string(), stamps);
                     continue;
                 }
                 Err(payload) => {
                     let reason = format!("backend panicked: {}", panic_reason(payload.as_ref()));
-                    eprintln!("engine[{}]: {reason}", self.name);
-                    self.batch_failed(&mut batch, &mut inputs, &reason);
+                    self.batch_failed(&mut batch, &mut inputs, &reason, stamps);
                     // The panicked backend may hold broken invariants —
                     // discard it and rebuild from the factory.
                     drop(backend);
@@ -527,10 +627,24 @@ impl Supervisor {
             self.backoff = self.policy.restart_backoff;
             let mut m = lock_unpoisoned(&self.metrics);
             m.record_batch_ok();
+            m.record_breaker(HealthState::Healthy.code());
             m.record_padding(padded_lanes);
+            if decode_steps_delta > 0 {
+                // One per-token sample per decode batch: the batch's host
+                // execution time amortized over the decode steps it served.
+                m.record_decode(host_exec.as_secs_f64() / decode_steps_delta as f64);
+            }
+            self.spans.push_batch(BatchSpan {
+                close_s: stamps.close_s,
+                dispatch_s: stamps.dispatch_s,
+                execute_end_s: stamps.execute_end_s,
+                abft_end_s: stamps.abft_end_s,
+                size: real as u32,
+                ok: true,
+            });
             for (req, outs) in batch.drain(..).zip(outputs) {
                 // zip truncates at `real`: padded outputs are discarded.
-                let Request { id, submitted, reply, guard, .. } = req;
+                let Request { id, submitted, reply, guard, t_submit, t_enqueue, .. } = req;
                 let queued = t0.duration_since(submitted);
                 let resp = Response {
                     id,
@@ -546,6 +660,18 @@ impl Supervisor {
                 // submit again without racing the counter.
                 drop(guard);
                 let _ = reply.send(Ok(resp));
+                self.spans.push(RequestSpan {
+                    id,
+                    submit_s: t_submit,
+                    enqueue_s: t_enqueue,
+                    batch_close_s: stamps.close_s,
+                    dispatch_s: stamps.dispatch_s,
+                    execute_end_s: stamps.execute_end_s,
+                    abft_end_s: stamps.abft_end_s,
+                    reply_s: self.spans.now(),
+                    batch: real as u32,
+                    ok: true,
+                });
             }
         }
         // The queue may still hold requests that raced the shutdown
@@ -573,6 +699,8 @@ impl Supervisor {
                     }
                     if self.ever_built || attempts > 0 {
                         lock_unpoisoned(&self.metrics).record_restart();
+                        self.events
+                            .push(EngineEvent::WorkerRestart { model: self.name.clone() });
                     }
                     self.ever_built = true;
                     // A fresh backend starts its TileHealth counters from
@@ -587,14 +715,22 @@ impl Supervisor {
                 }
                 Err(e) => {
                     attempts += 1;
-                    eprintln!(
-                        "engine[{}]: backend construction failed (attempt {attempts}): {e}",
-                        self.name
-                    );
-                    let (_, consecutive) = self.health.on_failure();
-                    lock_unpoisoned(&self.metrics).record_construct_failure(consecutive);
+                    self.events.push(EngineEvent::ConstructFailed {
+                        model: self.name.clone(),
+                        attempt: attempts,
+                        reason: e.to_string(),
+                    });
+                    let (state, consecutive) = self.health.on_failure();
+                    {
+                        let mut m = lock_unpoisoned(&self.metrics);
+                        m.record_construct_failure(consecutive);
+                        m.record_breaker(state.code());
+                    }
                     if attempts >= self.policy.max_restarts {
+                        // mark_permanently_down emits the PermanentlyDown
+                        // event itself.
                         self.health.mark_permanently_down();
+                        lock_unpoisoned(&self.metrics).record_breaker(HealthState::Down.code());
                         return None;
                     }
                     std::thread::sleep(self.backoff);
@@ -611,27 +747,42 @@ impl Supervisor {
     fn poll_tile_health(&mut self, backend: &dyn ExecutorBackend) {
         let Some(h) = backend.tile_health() else { return };
         let b = self.tile_baseline;
+        let spared = h.columns_spared.saturating_sub(b.columns_spared);
         lock_unpoisoned(&self.metrics).record_abft(
             h.abft_checks.saturating_sub(b.abft_checks),
             h.abft_detected.saturating_sub(b.abft_detected),
             h.blocks_reexecuted.saturating_sub(b.blocks_reexecuted),
-            h.columns_spared.saturating_sub(b.columns_spared),
+            spared,
         );
+        if spared > 0 {
+            self.events.push(EngineEvent::ColumnSpared {
+                model: self.name.clone(),
+                columns: spared,
+            });
+        }
         self.tile_baseline = h;
     }
 
     /// Fold the delta of a stateful backend's cumulative [`SessionStats`]
     /// counters into the metrics (same baseline scheme as
-    /// [`Self::poll_tile_health`]).
-    fn poll_session_stats(&mut self, backend: &dyn ExecutorBackend) {
-        let Some(s) = backend.session_stats() else { return };
+    /// [`Self::poll_tile_health`]). Returns the decode-step delta so the
+    /// drain loop can record this batch's per-token latency sample.
+    fn poll_session_stats(&mut self, backend: &dyn ExecutorBackend) -> u64 {
+        let Some(s) = backend.session_stats() else { return 0 };
         let b = self.session_baseline;
+        let evicted = s.evicted.saturating_sub(b.evicted);
+        let steps = s.decode_steps.saturating_sub(b.decode_steps);
         lock_unpoisoned(&self.metrics).record_sessions(
             s.opened.saturating_sub(b.opened),
-            s.evicted.saturating_sub(b.evicted),
-            s.decode_steps.saturating_sub(b.decode_steps),
+            evicted,
+            steps,
         );
+        if evicted > 0 {
+            self.events
+                .push(EngineEvent::SessionEvicted { model: self.name.clone(), evicted });
+        }
         self.session_baseline = s;
+        steps
     }
 
     /// Drop already-expired requests before dispatch; each gets the typed
@@ -666,9 +817,26 @@ impl Supervisor {
         batch: &mut Vec<Request>,
         inputs: &mut Vec<Vec<TensorF32>>,
         reason: &str,
+        stamps: BatchStamps,
     ) {
-        let (_, consecutive) = self.health.on_failure();
-        lock_unpoisoned(&self.metrics).record_batch_failed(consecutive);
+        let (state, consecutive) = self.health.on_failure();
+        {
+            let mut m = lock_unpoisoned(&self.metrics);
+            m.record_batch_failed(consecutive);
+            m.record_breaker(state.code());
+        }
+        self.events.push(EngineEvent::BatchFailed {
+            model: self.name.clone(),
+            reason: reason.to_string(),
+        });
+        self.spans.push_batch(BatchSpan {
+            close_s: stamps.close_s,
+            dispatch_s: stamps.dispatch_s,
+            execute_end_s: stamps.execute_end_s,
+            abft_end_s: stamps.abft_end_s,
+            size: batch.len() as u32,
+            ok: false,
+        });
         let now = Instant::now();
         inputs.truncate(batch.len());
         for (mut req, inp) in batch.drain(..).zip(inputs.drain(..)) {
@@ -680,13 +848,35 @@ impl Supervisor {
                 // request and fail it in place if it somehow does.
                 if let Err(send_err) = self.requeue.send(Msg::Req(req)) {
                     if let Msg::Req(req) = send_err.0 {
+                        self.record_failed_span(&req, stamps);
                         self.reject(req, reason);
                     }
                 }
+                // Requeued requests get their span when they finally
+                // resolve (success or terminal failure), not here.
             } else {
+                self.record_failed_span(&req, stamps);
                 self.reject(req, reason);
             }
         }
+    }
+
+    /// Span for a request that terminally failed with its batch
+    /// (`reply_s` is stamped at rejection time, just before the typed
+    /// error reply is sent).
+    fn record_failed_span(&self, req: &Request, stamps: BatchStamps) {
+        self.spans.push(RequestSpan {
+            id: req.id,
+            submit_s: req.t_submit,
+            enqueue_s: req.t_enqueue,
+            batch_close_s: stamps.close_s,
+            dispatch_s: stamps.dispatch_s,
+            execute_end_s: stamps.execute_end_s,
+            abft_end_s: stamps.abft_end_s,
+            reply_s: self.spans.now(),
+            batch: 0,
+            ok: false,
+        });
     }
 
     /// Fail one request with the batch's typed error.
@@ -741,6 +931,9 @@ impl Supervisor {
 pub struct Engine {
     models: BTreeMap<String, ModelWorker>,
     next_id: Arc<AtomicU64>,
+    /// Engine-wide typed event ring (worker restarts, breaker
+    /// transitions, evictions, …), drained via [`Engine::events`].
+    events: Arc<EventRing>,
 }
 
 impl Engine {
@@ -766,6 +959,7 @@ impl Engine {
             inflight: Arc::clone(&w.inflight),
             metrics: Arc::clone(&w.metrics),
             health: Arc::clone(&w.health),
+            spans: Arc::clone(&w.spans),
             max_queue: w.max_queue,
         })
     }
@@ -794,6 +988,46 @@ impl Engine {
             .iter()
             .map(|(name, w)| (name.clone(), lock_unpoisoned(&w.metrics).snapshot()))
             .collect()
+    }
+
+    /// Drain the engine-wide typed event ring: everything pushed since
+    /// the previous drain (worker restarts, breaker transitions, column
+    /// sparing, session evictions, …) in sequence order, plus how many
+    /// events were overwritten before this drain could observe them
+    /// (`dropped` > 0 means the ring wrapped; sequence numbers make the
+    /// gap visible).
+    pub fn events(&self) -> EventDrain {
+        self.events.drain()
+    }
+
+    /// Non-draining copy of one model's request/batch span rings (plus
+    /// ring-overflow accounting). Typed error when the model is unknown.
+    pub fn request_spans(&self, model: &str) -> Result<SpanSnapshot> {
+        let w = self.models.get(model).ok_or_else(|| TimError::ModelNotFound {
+            name: model.to_string(),
+            available: self.models(),
+        })?;
+        Ok(w.spans.snapshot())
+    }
+
+    /// Export everything observed so far as Chrome-tracing JSON
+    /// (Perfetto / `chrome://tracing` loadable): one engine-host process
+    /// with a thread per model worker (batch slices + per-request async
+    /// spans) and an event-instant lane, plus one process per model
+    /// holding the simulated §IV hardware lanes — so host queueing and
+    /// tile-level VMM timing line up in a single view. Non-draining;
+    /// call any time, typically just before shutdown.
+    pub fn export_trace(&self) -> String {
+        let models: Vec<ModelTraceData> = self
+            .models
+            .iter()
+            .map(|(name, w)| ModelTraceData {
+                model: name.clone(),
+                spans: w.spans.snapshot(),
+                hw: w.hw_trace.clone(),
+            })
+            .collect();
+        telemetry::export_chrome_json(&models, &self.events.snapshot())
     }
 
     /// Stop accepting requests, drain everything already queued, join all
@@ -838,6 +1072,9 @@ pub struct Session {
     inflight: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
     health: Arc<HealthCell>,
+    /// Shared with the worker: submissions stamp `t_submit`/`t_enqueue`
+    /// against the same epoch the worker stamps batch transitions with.
+    spans: Arc<SpanRecorder>,
     max_queue: usize,
 }
 
@@ -883,6 +1120,10 @@ impl Session {
         if inputs.is_empty() {
             return Err(TimError::InputArity { expected: 1, got: 0 });
         }
+        // First trace stamp: the request exists from here, even if the
+        // deadline/breaker/queue checks below shed it (shed requests
+        // never reach the span ring — only admitted ones do).
+        let t_submit = self.spans.now();
         // An already-expired deadline is shed here — no queue slot, no
         // worker time.
         if let Some(d) = opts.deadline {
@@ -922,6 +1163,8 @@ impl Session {
             submitted: Instant::now(),
             deadline: opts.deadline,
             retries_left: opts.retries,
+            t_submit,
+            t_enqueue: self.spans.now(),
             reply,
             guard,
         };

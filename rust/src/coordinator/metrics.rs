@@ -1,19 +1,38 @@
-//! Serving metrics: host latency percentiles, batch sizes, throughput,
-//! and simulated-hardware latency/energy aggregates.
+//! Serving metrics: streaming latency histograms (p50/p95/p99), batch
+//! sizes, throughput, robustness counters, and simulated-hardware
+//! latency/energy aggregates.
+//!
+//! Memory is O(1) in the request count: every latency series is a
+//! fixed-size log-bucketed [`LogHistogram`] (allocated once at
+//! construction), so [`Metrics::record`] makes zero heap allocations in
+//! steady state — pinned by a counting-allocator test in
+//! `rust/tests/alloc_free.rs`. Quantiles are within the histogram's
+//! documented relative-error bound
+//! ([`crate::util::stats::LOG_HIST_REL_ERR`]) of the exact-percentile
+//! oracle.
+//!
+//! [`MetricsSnapshot::to_prometheus_text`] renders the snapshot in the
+//! Prometheus text exposition format; the name table is documented in
+//! DESIGN.md ("Telemetry & tracing").
 
+use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
 use super::Response;
-use crate::util::stats::percentile;
+use crate::util::stats::LogHistogram;
 
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
-    e2e_s: Vec<f64>,
-    queued_s: Vec<f64>,
-    batch_sizes: Vec<usize>,
-    host_exec_s: Vec<f64>,
-    sim_latency_s: Vec<f64>,
+    e2e: LogHistogram,
+    queued: LogHistogram,
+    host_exec: LogHistogram,
+    sim_latency: LogHistogram,
+    /// Per-token decode latency, one sample per decode batch
+    /// (`host_exec / decode-steps-in-batch`).
+    decode: LogHistogram,
+    batch_sum: u64,
+    batch_samples: u64,
     sim_energy_j: f64,
     completed: u64,
     padded_lanes: u64,
@@ -23,6 +42,7 @@ pub struct Metrics {
     worker_restarts: u64,
     construct_failures: u64,
     consecutive_failures: u64,
+    breaker_state: u64,
     abft_checks: u64,
     abft_detected: u64,
     blocks_reexecuted: u64,
@@ -36,11 +56,13 @@ impl Metrics {
     pub fn new() -> Self {
         Self {
             started: Instant::now(),
-            e2e_s: Vec::new(),
-            queued_s: Vec::new(),
-            batch_sizes: Vec::new(),
-            host_exec_s: Vec::new(),
-            sim_latency_s: Vec::new(),
+            e2e: LogHistogram::new(),
+            queued: LogHistogram::new(),
+            host_exec: LogHistogram::new(),
+            sim_latency: LogHistogram::new(),
+            decode: LogHistogram::new(),
+            batch_sum: 0,
+            batch_samples: 0,
             sim_energy_j: 0.0,
             completed: 0,
             padded_lanes: 0,
@@ -50,6 +72,7 @@ impl Metrics {
             worker_restarts: 0,
             construct_failures: 0,
             consecutive_failures: 0,
+            breaker_state: 0,
             abft_checks: 0,
             abft_detected: 0,
             blocks_reexecuted: 0,
@@ -64,13 +87,16 @@ impl Metrics {
     /// requests in its batch — padded lanes are never passed here; they
     /// are tallied separately via [`Metrics::record_padding`], so padding
     /// cannot inflate completions, batch means, or energy.
+    ///
+    /// Allocation-free: every series is a fixed-size histogram.
     pub fn record(&mut self, resp: &Response, batch: usize, host_exec: Duration) {
         self.completed += 1;
-        self.e2e_s.push(resp.e2e.as_secs_f64());
-        self.queued_s.push(resp.queued.as_secs_f64());
-        self.batch_sizes.push(batch);
-        self.host_exec_s.push(host_exec.as_secs_f64());
-        self.sim_latency_s.push(resp.sim_latency_s);
+        self.e2e.record(resp.e2e.as_secs_f64());
+        self.queued.record(resp.queued.as_secs_f64());
+        self.batch_sum += batch as u64;
+        self.batch_samples += 1;
+        self.host_exec.record(host_exec.as_secs_f64());
+        self.sim_latency.record(resp.sim_latency_s);
         self.sim_energy_j += resp.sim_energy_j;
     }
 
@@ -115,6 +141,22 @@ impl Metrics {
         self.consecutive_failures = u64::from(consecutive);
     }
 
+    /// Gauge: the model's breaker state as a number (0 = Healthy,
+    /// 1 = Degraded, 2 = Down). The worker stamps it after every batch
+    /// outcome and on permanent failure.
+    pub fn record_breaker(&mut self, state_code: u64) {
+        self.breaker_state = state_code;
+    }
+
+    /// One decode batch's per-token host latency
+    /// (`host_exec / decode steps served in the batch`). Recorded once
+    /// per batch, not per token — the histogram answers "how fast is a
+    /// decode step", the [`MetricsSnapshot::decode_steps`] counter
+    /// answers "how many were served".
+    pub fn record_decode(&mut self, per_token_s: f64) {
+        self.decode.record(per_token_s);
+    }
+
     /// Fold in ABFT deltas polled from the backend's [`crate::tile::TileHealth`]
     /// after a batch: checksum verifications run, mismatches detected, blocks
     /// re-executed for transient faults, and columns remapped to spares for
@@ -136,20 +178,32 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let pct = |xs: &Vec<f64>, q| if xs.is_empty() { 0.0 } else { percentile(xs, q) };
         MetricsSnapshot {
             completed: self.completed,
             wall_s: self.started.elapsed().as_secs_f64(),
-            host_p50_s: pct(&self.e2e_s, 50.0),
-            host_p95_s: pct(&self.e2e_s, 95.0),
-            host_p99_s: pct(&self.e2e_s, 99.0),
-            queue_p95_s: pct(&self.queued_s, 95.0),
-            mean_batch: if self.batch_sizes.is_empty() {
+            host_p50_s: self.e2e.quantile(50.0),
+            host_p95_s: self.e2e.quantile(95.0),
+            host_p99_s: self.e2e.quantile(99.0),
+            e2e_total_s: self.e2e.sum(),
+            queue_p50_s: self.queued.quantile(50.0),
+            queue_p95_s: self.queued.quantile(95.0),
+            queue_p99_s: self.queued.quantile(99.0),
+            queue_total_s: self.queued.sum(),
+            exec_p50_s: self.host_exec.quantile(50.0),
+            exec_p95_s: self.host_exec.quantile(95.0),
+            exec_p99_s: self.host_exec.quantile(99.0),
+            exec_total_s: self.host_exec.sum(),
+            decode_p50_s: self.decode.quantile(50.0),
+            decode_p95_s: self.decode.quantile(95.0),
+            decode_p99_s: self.decode.quantile(99.0),
+            decode_total_s: self.decode.sum(),
+            decode_samples: self.decode.count(),
+            mean_batch: if self.batch_samples == 0 {
                 0.0
             } else {
-                self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+                self.batch_sum as f64 / self.batch_samples as f64
             },
-            sim_latency_p50_s: pct(&self.sim_latency_s, 50.0),
+            sim_latency_p50_s: self.sim_latency.quantile(50.0),
             sim_energy_total_j: self.sim_energy_j,
             padded_lanes: self.padded_lanes,
             batches_failed: self.batches_failed,
@@ -158,6 +212,7 @@ impl Metrics {
             worker_restarts: self.worker_restarts,
             construct_failures: self.construct_failures,
             consecutive_failures: self.consecutive_failures,
+            breaker_state: self.breaker_state,
             abft_checks: self.abft_checks,
             abft_detected: self.abft_detected,
             blocks_reexecuted: self.blocks_reexecuted,
@@ -180,10 +235,30 @@ impl Default for Metrics {
 pub struct MetricsSnapshot {
     pub completed: u64,
     pub wall_s: f64,
+    /// End-to-end latency quantiles (submit → reply), host clock.
     pub host_p50_s: f64,
     pub host_p95_s: f64,
     pub host_p99_s: f64,
+    /// Exact sum of end-to-end latency over all completions (the
+    /// histogram tracks sums exactly; only quantiles are bucketed).
+    pub e2e_total_s: f64,
+    /// Queue-wait quantiles (submit → batch dispatch).
+    pub queue_p50_s: f64,
     pub queue_p95_s: f64,
+    pub queue_p99_s: f64,
+    pub queue_total_s: f64,
+    /// Backend execute_batch quantiles (per batch, sampled per request).
+    pub exec_p50_s: f64,
+    pub exec_p95_s: f64,
+    pub exec_p99_s: f64,
+    pub exec_total_s: f64,
+    /// Per-token decode latency quantiles (one sample per decode batch).
+    pub decode_p50_s: f64,
+    pub decode_p95_s: f64,
+    pub decode_p99_s: f64,
+    pub decode_total_s: f64,
+    /// Decode-batch samples behind the decode quantiles.
+    pub decode_samples: u64,
     pub mean_batch: f64,
     pub sim_latency_p50_s: f64,
     pub sim_energy_total_j: f64,
@@ -205,7 +280,16 @@ pub struct MetricsSnapshot {
     pub construct_failures: u64,
     /// Gauge: the model's consecutive batch/construction failures at
     /// snapshot time (0 after any success — mirrors the circuit breaker).
+    ///
+    /// Semantics are **last-writer-wins**, not max: batch failures and
+    /// construction failures both overwrite the gauge with *their* running
+    /// count, because both mirror the same health-cell counter — whichever
+    /// failure path ran last holds the breaker's current value. A
+    /// success through either path resets it to 0.
     pub consecutive_failures: u64,
+    /// Gauge: circuit-breaker state at snapshot time
+    /// (0 = Healthy, 1 = Degraded, 2 = Down).
+    pub breaker_state: u64,
     /// ABFT checksum verifications run (one per guarded block-batch VMM).
     pub abft_checks: u64,
     /// Checksum mismatches detected (raw count corruption caught before
@@ -235,17 +319,140 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Render in the Prometheus text exposition format, every series
+    /// labelled `model="<model>"`. Names are stable (CI greps for them);
+    /// the full table lives in DESIGN.md. No value can be NaN: quantiles
+    /// of empty histograms are 0.0 and every ratio guards its
+    /// denominator.
+    pub fn to_prometheus_text(&self, model: &str) -> String {
+        let mut o = String::with_capacity(4096);
+        let m = model;
+
+        let counter = |o: &mut String, name: &str, help: &str, v: u64| {
+            writeln!(o, "# HELP {name} {help}").unwrap();
+            writeln!(o, "# TYPE {name} counter").unwrap();
+            writeln!(o, "{name}{{model=\"{m}\"}} {v}").unwrap();
+        };
+        let gauge = |o: &mut String, name: &str, help: &str, v: f64| {
+            writeln!(o, "# HELP {name} {help}").unwrap();
+            writeln!(o, "# TYPE {name} gauge").unwrap();
+            writeln!(o, "{name}{{model=\"{m}\"}} {v}").unwrap();
+        };
+        let summary = |o: &mut String, name: &str, help: &str, q: [f64; 3], sum: f64, count: u64| {
+            writeln!(o, "# HELP {name} {help}").unwrap();
+            writeln!(o, "# TYPE {name} summary").unwrap();
+            writeln!(o, "{name}{{model=\"{m}\",quantile=\"0.5\"}} {}", q[0]).unwrap();
+            writeln!(o, "{name}{{model=\"{m}\",quantile=\"0.95\"}} {}", q[1]).unwrap();
+            writeln!(o, "{name}{{model=\"{m}\",quantile=\"0.99\"}} {}", q[2]).unwrap();
+            writeln!(o, "{name}_sum{{model=\"{m}\"}} {sum}").unwrap();
+            writeln!(o, "{name}_count{{model=\"{m}\"}} {count}").unwrap();
+        };
+
+        counter(&mut o, "timdnn_requests_completed_total", "Real requests completed", self.completed);
+        gauge(&mut o, "timdnn_uptime_seconds", "Seconds since worker metrics creation", self.wall_s);
+        gauge(&mut o, "timdnn_throughput_inf_per_second", "Completed inferences per second", self.throughput());
+        summary(
+            &mut o,
+            "timdnn_e2e_latency_seconds",
+            "End-to-end request latency (submit to reply)",
+            [self.host_p50_s, self.host_p95_s, self.host_p99_s],
+            self.e2e_total_s,
+            self.completed,
+        );
+        summary(
+            &mut o,
+            "timdnn_queue_wait_seconds",
+            "Queue wait (submit to batch dispatch)",
+            [self.queue_p50_s, self.queue_p95_s, self.queue_p99_s],
+            self.queue_total_s,
+            self.completed,
+        );
+        summary(
+            &mut o,
+            "timdnn_exec_seconds",
+            "Backend execute_batch latency (sampled per request)",
+            [self.exec_p50_s, self.exec_p95_s, self.exec_p99_s],
+            self.exec_total_s,
+            self.completed,
+        );
+        summary(
+            &mut o,
+            "timdnn_decode_token_seconds",
+            "Per-token decode latency (one sample per decode batch)",
+            [self.decode_p50_s, self.decode_p95_s, self.decode_p99_s],
+            self.decode_total_s,
+            self.decode_samples,
+        );
+        gauge(&mut o, "timdnn_mean_batch_size", "Mean real requests per executed batch", self.mean_batch);
+        counter(&mut o, "timdnn_padded_lanes_total", "Lanes added to fill fixed-size batches", self.padded_lanes);
+        counter(&mut o, "timdnn_batches_failed_total", "Batches that failed", self.batches_failed);
+        counter(&mut o, "timdnn_requests_shed_total", "Requests fast-failed without execution", self.requests_shed);
+        counter(&mut o, "timdnn_deadline_expired_total", "Requests shed past their deadline", self.deadline_expired);
+        counter(&mut o, "timdnn_worker_restarts_total", "Backends reconstructed after failure", self.worker_restarts);
+        counter(&mut o, "timdnn_construct_failures_total", "Failed backend construction attempts", self.construct_failures);
+        gauge(
+            &mut o,
+            "timdnn_consecutive_failures",
+            "Running failure count of the circuit breaker (last writer wins)",
+            self.consecutive_failures as f64,
+        );
+        gauge(
+            &mut o,
+            "timdnn_breaker_state",
+            "Circuit-breaker state (0=healthy 1=degraded 2=down)",
+            self.breaker_state as f64,
+        );
+        counter(&mut o, "timdnn_abft_checks_total", "ABFT checksum verifications", self.abft_checks);
+        counter(&mut o, "timdnn_abft_detected_total", "ABFT checksum mismatches detected", self.abft_detected);
+        counter(&mut o, "timdnn_blocks_reexecuted_total", "Blocks re-executed after transient faults", self.blocks_reexecuted);
+        counter(&mut o, "timdnn_columns_spared_total", "Columns remapped to spare tiles", self.columns_spared);
+        counter(&mut o, "timdnn_sessions_opened_total", "Generation sessions opened", self.sessions_opened);
+        counter(&mut o, "timdnn_sessions_evicted_total", "Generation sessions evicted", self.sessions_evicted);
+        counter(&mut o, "timdnn_decode_steps_total", "Single-token decode steps served", self.decode_steps);
+        gauge(
+            &mut o,
+            "timdnn_sim_latency_p50_seconds",
+            "Simulated hardware latency p50 per inference",
+            self.sim_latency_p50_s,
+        );
+        gauge(
+            &mut o,
+            "timdnn_sim_energy_joules_total",
+            "Simulated hardware energy, cumulative",
+            self.sim_energy_total_j,
+        );
+        o
+    }
+
     pub fn report(&self, title: &str) {
         println!("== serving metrics: {title} ==");
         println!("  completed            {}", self.completed);
         println!("  host throughput      {:.1} inf/s", self.throughput());
         println!(
-            "  host latency p50/p95/p99  {:.3}/{:.3}/{:.3} ms",
+            "  e2e latency p50/p95/p99   {:.3}/{:.3}/{:.3} ms",
             self.host_p50_s * 1e3,
             self.host_p95_s * 1e3,
             self.host_p99_s * 1e3
         );
-        println!("  queue p95            {:.3} ms", self.queue_p95_s * 1e3);
+        println!(
+            "  queue p50/p95/p99    {:.3}/{:.3}/{:.3} ms",
+            self.queue_p50_s * 1e3,
+            self.queue_p95_s * 1e3,
+            self.queue_p99_s * 1e3
+        );
+        println!(
+            "  exec p50/p95/p99     {:.3}/{:.3}/{:.3} ms",
+            self.exec_p50_s * 1e3,
+            self.exec_p95_s * 1e3,
+            self.exec_p99_s * 1e3
+        );
+        if self.decode_samples > 0 {
+            println!(
+                "  decode/token p50/p99 {:.3}/{:.3} ms",
+                self.decode_p50_s * 1e3,
+                self.decode_p99_s * 1e3
+            );
+        }
         println!("  mean batch           {:.2}", self.mean_batch);
         println!("  padded lanes         {}", self.padded_lanes);
         println!(
@@ -253,8 +460,14 @@ impl MetricsSnapshot {
             self.batches_failed, self.requests_shed, self.deadline_expired
         );
         println!(
-            "  worker restarts      {} ({} construction failures)",
-            self.worker_restarts, self.construct_failures
+            "  worker restarts      {} ({} construction failures), breaker {}",
+            self.worker_restarts,
+            self.construct_failures,
+            match self.breaker_state {
+                0 => "healthy",
+                1 => "degraded",
+                _ => "down",
+            }
         );
         println!(
             "  abft                 {} checks, {} detected, {} blocks re-executed, {} columns spared",
@@ -282,19 +495,22 @@ mod tests {
     use super::*;
     use crate::runtime::TensorF32;
 
+    fn resp(i: u64) -> Response {
+        Response {
+            id: i,
+            outputs: vec![TensorF32::new(vec![1], vec![0.0])],
+            queued: Duration::from_micros(10),
+            e2e: Duration::from_micros(100 + i * 10),
+            sim_latency_s: 1e-6,
+            sim_energy_j: 2e-6,
+        }
+    }
+
     #[test]
     fn snapshot_aggregates() {
         let mut m = Metrics::new();
         for i in 0..10 {
-            let resp = Response {
-                id: i,
-                outputs: vec![TensorF32::new(vec![1], vec![0.0])],
-                queued: Duration::from_micros(10),
-                e2e: Duration::from_micros(100 + i * 10),
-                sim_latency_s: 1e-6,
-                sim_energy_j: 2e-6,
-            };
-            m.record(&resp, 2, Duration::from_micros(50));
+            m.record(&resp(i), 2, Duration::from_micros(50));
         }
         m.record_padding(3);
         let s = m.snapshot();
@@ -305,6 +521,24 @@ mod tests {
         assert!(s.throughput() > 0.0);
         // Padding is visible in the snapshot but never in completions.
         assert_eq!(s.padded_lanes, 3);
+        // Histogram sums are exact even though quantiles are bucketed.
+        let exact: f64 = (0..10u64).map(|i| (100 + i * 10) as f64 * 1e-6).sum();
+        assert!((s.e2e_total_s - exact).abs() < 1e-12);
+        // Quantiles of the e2e series land within the documented bound
+        // of the 100–190 µs range.
+        assert!(s.host_p50_s > 50e-6 && s.host_p99_s < 250e-6);
+        assert!(s.exec_p50_s > 0.0 && s.queue_p50_s > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_total_and_nan_free() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.host_p50_s, 0.0);
+        assert_eq!(s.queue_p99_s, 0.0);
+        assert_eq!(s.decode_p95_s, 0.0);
+        assert_eq!(s.mean_batch, 0.0);
+        let text = s.to_prometheus_text("empty");
+        assert!(!text.contains("NaN"));
     }
 
     #[test]
@@ -328,6 +562,48 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.consecutive_failures, 0);
         assert_eq!(s.batches_failed, 2);
+    }
+
+    #[test]
+    fn consecutive_failures_gauge_is_last_writer_wins() {
+        // Both failure paths overwrite the gauge with their own running
+        // count — the snapshot shows whichever failed last, NOT the max.
+        let mut m = Metrics::new();
+        m.record_construct_failure(5);
+        assert_eq!(m.snapshot().consecutive_failures, 5);
+        m.record_batch_failed(2);
+        assert_eq!(
+            m.snapshot().consecutive_failures,
+            2,
+            "last writer wins: batch failure's count replaces the larger construct count"
+        );
+        m.record_construct_failure(7);
+        assert_eq!(m.snapshot().consecutive_failures, 7);
+    }
+
+    #[test]
+    fn breaker_state_gauge_tracks_last_stamp() {
+        let mut m = Metrics::new();
+        assert_eq!(m.snapshot().breaker_state, 0);
+        m.record_breaker(1);
+        assert_eq!(m.snapshot().breaker_state, 1);
+        m.record_breaker(2);
+        assert_eq!(m.snapshot().breaker_state, 2);
+        m.record_breaker(0);
+        assert_eq!(m.snapshot().breaker_state, 0);
+    }
+
+    #[test]
+    fn decode_histogram_is_per_batch_samples() {
+        let mut m = Metrics::new();
+        m.record_decode(2e-3);
+        m.record_decode(4e-3);
+        m.record_sessions(1, 0, 16);
+        let s = m.snapshot();
+        assert_eq!(s.decode_samples, 2);
+        assert_eq!(s.decode_steps, 16);
+        assert!(s.decode_p50_s > 1e-3 && s.decode_p99_s < 5e-3);
+        assert!((s.decode_total_s - 6e-3).abs() < 1e-9);
     }
 
     #[test]
@@ -363,5 +639,50 @@ mod tests {
         assert_eq!(s.sessions_evicted, 2);
         assert_eq!(s.decode_steps, 48);
         s.report("session-test");
+    }
+
+    #[test]
+    fn prometheus_text_has_stable_names_and_model_label() {
+        let mut m = Metrics::new();
+        for i in 0..4 {
+            m.record(&resp(i), 4, Duration::from_micros(50));
+        }
+        m.record_breaker(1);
+        let text = m.snapshot().to_prometheus_text("timnet");
+        for name in [
+            "timdnn_requests_completed_total",
+            "timdnn_throughput_inf_per_second",
+            "timdnn_e2e_latency_seconds",
+            "timdnn_queue_wait_seconds",
+            "timdnn_exec_seconds",
+            "timdnn_decode_token_seconds",
+            "timdnn_mean_batch_size",
+            "timdnn_padded_lanes_total",
+            "timdnn_batches_failed_total",
+            "timdnn_requests_shed_total",
+            "timdnn_deadline_expired_total",
+            "timdnn_worker_restarts_total",
+            "timdnn_construct_failures_total",
+            "timdnn_consecutive_failures",
+            "timdnn_breaker_state",
+            "timdnn_abft_checks_total",
+            "timdnn_sessions_opened_total",
+            "timdnn_decode_steps_total",
+            "timdnn_sim_energy_joules_total",
+        ] {
+            assert!(text.contains(name), "missing metric {name}");
+        }
+        assert!(text.contains("{model=\"timnet\",quantile=\"0.99\"}"));
+        assert!(text.contains("timdnn_breaker_state{model=\"timnet\"} 1"));
+        assert!(!text.contains("NaN"));
+        // Every non-comment line is `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.split(' ');
+            let series = parts.next().unwrap();
+            let value = parts.next().unwrap();
+            assert!(series.starts_with("timdnn_"), "bad series {series}");
+            assert!(value.parse::<f64>().is_ok(), "bad value {value} in {line}");
+            assert!(parts.next().is_none());
+        }
     }
 }

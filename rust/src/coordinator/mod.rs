@@ -104,6 +104,14 @@ pub struct Request {
     pub deadline: Option<Instant>,
     /// Worker-side re-executions left after a failed batch.
     pub(crate) retries_left: u32,
+    /// Telemetry stamps, seconds from the engine epoch: `Session::submit*`
+    /// entry and the instant the request was handed to the worker queue.
+    /// The worker copies them into the completed [`RequestSpan`]
+    /// (`t_submit ≤ t_enqueue` by construction — one monotonic clock).
+    ///
+    /// [`RequestSpan`]: crate::telemetry::RequestSpan
+    pub(crate) t_submit: f64,
+    pub(crate) t_enqueue: f64,
     reply: Sender<crate::error::Result<Response>>,
     pub(crate) guard: InflightGuard,
 }

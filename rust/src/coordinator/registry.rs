@@ -51,6 +51,13 @@ pub struct ModelSpec {
     /// `None` = inherit the engine default ([`SupervisorPolicy::default`]
     /// unless `EngineBuilder::supervisor` overrides it).
     pub supervisor: Option<SupervisorPolicy>,
+    /// Simulated hardware lanes of one inference
+    /// ([`crate::sim::trace::trace`] output), merged into
+    /// `Engine::export_trace` so one Perfetto view shows host queueing
+    /// above tile-level VMM timing. [`ModelSpec::for_network`] fills it;
+    /// hand-built specs may attach one with [`ModelSpec::with_hw_trace`]
+    /// (empty = no hardware lanes in the export).
+    pub hw_trace: Vec<crate::sim::trace::TraceEvent>,
     pub(crate) factory: BackendFactory,
 }
 
@@ -72,6 +79,7 @@ impl ModelSpec {
             noise: NoisePolicy::default(),
             audit: None,
             supervisor: None,
+            hw_trace: Vec::new(),
             factory: Box::new(move || {
                 let backend: Box<dyn ExecutorBackend> = factory()?;
                 Ok(backend)
@@ -89,11 +97,15 @@ impl ModelSpec {
         let prog = crate::mapper::map_network(net, arch);
         let tiles = prog.max_tiles_used();
         let hardware = crate::sim::simulate(&prog, arch);
+        let hw_trace = crate::sim::trace::trace(&prog, arch);
         let mut audit = ProgramAudit::of(&prog, arch);
         // Exact head counts for the attention checks (the bare program
         // audit only has the conservative single-head fallback).
         audit.annotate_attention(net);
-        Self::new(name, hardware, factory).with_tiles(tiles).with_audit(audit)
+        Self::new(name, hardware, factory)
+            .with_tiles(tiles)
+            .with_audit(audit)
+            .with_hw_trace(hw_trace)
     }
 
     pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
@@ -133,6 +145,13 @@ impl ModelSpec {
     /// Attach a static program audit for registration-time verification.
     pub fn with_audit(mut self, audit: ProgramAudit) -> Self {
         self.audit = Some(audit);
+        self
+    }
+
+    /// Attach the simulated hardware lanes merged into the engine's
+    /// Chrome-trace export.
+    pub fn with_hw_trace(mut self, hw_trace: Vec<crate::sim::trace::TraceEvent>) -> Self {
+        self.hw_trace = hw_trace;
         self
     }
 
@@ -241,6 +260,17 @@ mod tests {
         assert!(s.tiles_required <= 32);
         assert!(s.hardware.total_s > 0.0);
         assert_eq!(s.hardware.network, "TiMNet");
+    }
+
+    #[test]
+    fn for_network_fills_hardware_trace_lanes() {
+        let s = spec("timnet");
+        assert!(!s.hw_trace.is_empty(), "for_network must materialize the §IV trace");
+        // Hand-built specs default to no hardware lanes.
+        let bare = ModelSpec::new("bare", s.hardware.clone(), || {
+            Ok(Box::new(SimOnlyBackend::new()))
+        });
+        assert!(bare.hw_trace.is_empty());
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod tile;
 pub mod tpc;
 pub mod transformer;

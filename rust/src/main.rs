@@ -7,10 +7,15 @@
 //!   kernel                       Fig 14 kernel-level comparison
 //!   variation [--samples N]      Figs 17/18 Monte-Carlo study
 //!   serve [--models a,b,c] [--backend functional|pjrt|sim] [--workers N]
+//!         [--metrics-every N] [--trace-out FILE] [--prom-out FILE]
 //!                                multi-model serving through the Engine
 //!                                (functional/sim need no artifacts;
 //!                                --workers sets the per-model
-//!                                data-parallel batch pool width)
+//!                                data-parallel batch pool width;
+//!                                --metrics-every prints the Prometheus
+//!                                exposition every N completions;
+//!                                --trace-out writes the merged
+//!                                engine+hardware Chrome trace on exit)
 //!   info                         architecture summary
 
 #![forbid(unsafe_code)]
@@ -273,12 +278,27 @@ fn serve_input(net_name: &str, rng: &mut Rng) -> TensorF32 {
     }
 }
 
+/// Prometheus exposition for every model, concatenated.
+fn prometheus_all(engine: &Engine) -> String {
+    let mut out = String::new();
+    for (name, snap) in engine.metrics_all() {
+        out.push_str(&snap.to_prometheus_text(&name));
+    }
+    out
+}
+
 /// Multi-model serving through the Engine.
 fn serve(args: &Args) -> timdnn::Result<()> {
     let requests = args.usize_or("requests", 64);
     let batch = args.usize_or("batch", 8);
     let workers = args.usize_or("workers", 1);
     let backend = args.str_or("backend", "functional");
+    // Observability surface: print the Prometheus exposition every N
+    // completed requests (0 = off), and write the merged Chrome trace /
+    // final exposition to files on exit ("" = off).
+    let metrics_every = args.usize_or("metrics-every", 0);
+    let trace_out = args.str_or("trace-out", "");
+    let prom_out = args.str_or("prom-out", "");
     let models: Vec<String> = args
         .str_or("models", "timnet")
         .split(',')
@@ -303,12 +323,16 @@ fn serve(args: &Args) -> timdnn::Result<()> {
     }
     let engine = builder.build()?;
 
-    // Drive every model concurrently from its own client thread.
+    // Drive every model concurrently from its own client thread; each
+    // thread bumps the shared completion counter so the main thread can
+    // pace the periodic metrics exposition.
+    let completed = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
     let mut handles = Vec::new();
     for name in &models {
         let session = engine.session(name)?;
         let net_name = model::find_network(name).map(|n| n.name).unwrap_or_default();
         let n = requests;
+        let completed = std::sync::Arc::clone(&completed);
         handles.push(std::thread::spawn(move || -> timdnn::Result<()> {
             let mut rng = Rng::seeded(7);
             let rxs: Vec<_> = (0..n)
@@ -318,12 +342,48 @@ fn serve(args: &Args) -> timdnn::Result<()> {
                 rx.recv().map_err(|_| TimError::EngineStopped {
                     model: session.model().to_string(),
                 })??;
+                completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
             Ok(())
         }));
     }
+    // The engine's channel senders are not Sync, so the exposition runs
+    // here on the main thread, triggered by completion count.
+    if metrics_every > 0 {
+        let mut next = metrics_every;
+        while handles.iter().any(|h| !h.is_finished()) {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let done = completed.load(std::sync::atomic::Ordering::Relaxed);
+            if done >= next {
+                next = (done / metrics_every + 1) * metrics_every;
+                println!("# {done} requests completed");
+                print!("{}", prometheus_all(&engine));
+            }
+        }
+    }
     for h in handles {
         h.join().expect("client thread panicked")?;
+    }
+
+    if !trace_out.is_empty() {
+        let json = engine.export_trace();
+        std::fs::write(&trace_out, &json)?;
+        println!("wrote merged trace to {trace_out} (open in chrome://tracing or Perfetto)");
+    }
+    if !prom_out.is_empty() {
+        std::fs::write(&prom_out, prometheus_all(&engine))?;
+        println!("wrote Prometheus exposition to {prom_out}");
+    }
+    let drained = engine.events();
+    if !drained.events.is_empty() || drained.dropped > 0 {
+        println!(
+            "{} engine event(s) ({} dropped to ring overflow)",
+            drained.events.len(),
+            drained.dropped
+        );
+        for e in &drained.events {
+            println!("  [{:>10.6}s] #{} {} {}", e.t_s, e.seq, e.event.kind(), e.event.model());
+        }
     }
 
     for (name, snap) in engine.shutdown() {

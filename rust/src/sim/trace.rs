@@ -24,7 +24,11 @@ pub enum Lane {
 }
 
 impl Lane {
-    fn name(self) -> &'static str {
+    /// All lanes, in tid order (the order the Perfetto track list shows).
+    pub const ALL: [Lane; 6] =
+        [Lane::Dram, Lane::TileWrite, Lane::TileCompute, Lane::Ru, Lane::Sfu, Lane::Buffer];
+
+    pub fn name(self) -> &'static str {
         match self {
             Lane::Dram => "DRAM",
             Lane::TileWrite => "Tile writes",
@@ -35,7 +39,7 @@ impl Lane {
         }
     }
 
-    fn tid(self) -> u32 {
+    pub fn tid(self) -> u32 {
         match self {
             Lane::Dram => 0,
             Lane::TileWrite => 1,
@@ -123,7 +127,7 @@ pub fn trace(prog: &Program, arch: &ArchConfig) -> Vec<TraceEvent> {
 }
 
 /// Escape a string for JSON.
-fn esc(s: &str) -> String {
+pub(crate) fn esc(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
             '"' => "\\\"".chars().collect::<Vec<_>>(),
@@ -134,39 +138,75 @@ fn esc(s: &str) -> String {
         .collect()
 }
 
+/// Comma-separate events inside a `traceEvents` array under construction.
+fn sep(out: &mut String) {
+    if !out.ends_with('[') {
+        out.push(',');
+    }
+}
+
+/// Append a `process_name` metadata event for process `pid`.
+pub(crate) fn push_process_meta(out: &mut String, pid: u32, name: &str) {
+    sep(out);
+    write!(
+        out,
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        pid,
+        esc(name)
+    )
+    .unwrap();
+}
+
+/// Append a `thread_name` metadata event for lane/track `tid` of `pid`.
+pub(crate) fn push_thread_meta(out: &mut String, pid: u32, tid: u32, name: &str) {
+    sep(out);
+    write!(
+        out,
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        pid,
+        tid,
+        esc(name)
+    )
+    .unwrap();
+}
+
+/// Append one `ph:"X"` complete event (timestamps in seconds; emitted in
+/// microseconds, duration floored at a hair above zero so Perfetto still
+/// renders instantaneous slices).
+pub(crate) fn push_complete(out: &mut String, pid: u32, tid: u32, name: &str, start_s: f64, dur_s: f64) {
+    sep(out);
+    write!(
+        out,
+        "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+         \"ts\":{:.4},\"dur\":{:.4}}}",
+        esc(name),
+        pid,
+        tid,
+        start_s * 1e6,
+        dur_s.max(1e-12) * 1e6
+    )
+    .unwrap();
+}
+
+/// Append all six hardware-lane `thread_name` metas plus the `ph:"X"`
+/// events of one simulated inference under process `pid`. Shared by
+/// [`to_chrome_json`] and `telemetry`'s merged engine export.
+pub(crate) fn push_hw_lanes(out: &mut String, pid: u32, events: &[TraceEvent]) {
+    for lane in Lane::ALL {
+        push_thread_meta(out, pid, lane.tid(), lane.name());
+    }
+    for e in events {
+        push_complete(out, pid, e.lane.tid(), &e.layer, e.start_s, e.dur_s);
+    }
+}
+
 /// Serialize events as Chrome-tracing JSON (microsecond timestamps).
 pub fn to_chrome_json(events: &[TraceEvent], process_name: &str) -> String {
     let mut out = String::from("{\"traceEvents\":[");
-    write!(
-        out,
-        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
-         \"args\":{{\"name\":\"{}\"}}}}",
-        esc(process_name)
-    )
-    .unwrap();
-    for lane in [Lane::Dram, Lane::TileWrite, Lane::TileCompute, Lane::Ru, Lane::Sfu, Lane::Buffer]
-    {
-        write!(
-            out,
-            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
-             \"args\":{{\"name\":\"{}\"}}}}",
-            lane.tid(),
-            lane.name()
-        )
-        .unwrap();
-    }
-    for e in events {
-        write!(
-            out,
-            ",{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
-             \"ts\":{:.4},\"dur\":{:.4}}}",
-            esc(&e.layer),
-            e.lane.tid(),
-            e.start_s * 1e6,
-            e.dur_s.max(1e-12) * 1e6
-        )
-        .unwrap();
-    }
+    push_process_meta(&mut out, 1, process_name);
+    push_hw_lanes(&mut out, 1, events);
     out.push_str("]}");
     out
 }

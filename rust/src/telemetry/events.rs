@@ -1,0 +1,224 @@
+//! Typed engine events with a bounded, drop-accounted ring.
+//!
+//! Every state change that previously went to `eprintln!` in the worker
+//! loop — restarts, breaker transitions, ABFT column sparing, session
+//! evictions — is now a typed [`EngineEvent`] pushed into one
+//! engine-wide [`EventRing`]. Consumers drain the ring
+//! ([`EventRing::drain`]) for alerting/log shipping, or snapshot it
+//! non-destructively for the Chrome trace export. Sequence numbers are
+//! assigned under the ring lock, so a consumer can detect loss two ways:
+//! the explicit `dropped` count returned by `drain`, or a gap in `seq`.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::lock_unpoisoned;
+
+/// Default event-ring capacity (engine-wide, across all models).
+pub const EVENT_RING_CAP: usize = 1024;
+
+/// One engine state change. Every variant names its model — the ring is
+/// shared by all workers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineEvent {
+    /// Backend rebuilt after a panic or exec failure.
+    WorkerRestart { model: String },
+    /// A backend (re)construction attempt failed.
+    ConstructFailed { model: String, attempt: u32, reason: String },
+    /// A batch failed (panic, exec error, or malformed outputs).
+    BatchFailed { model: String, reason: String },
+    /// Breaker left `Healthy` (consecutive failures crossed the policy).
+    BreakerOpen { model: String, consecutive: u32 },
+    /// Breaker admitted a probe while `Degraded`.
+    BreakerHalfOpen { model: String },
+    /// Breaker returned to `Healthy`.
+    BreakerClosed { model: String },
+    /// Supervisor gave up rebuilding; model is `Down` for good.
+    PermanentlyDown { model: String },
+    /// ABFT sparing remapped faulty column(s) to spare tiles.
+    ColumnSpared { model: String, columns: u64 },
+    /// KV-cache session(s) evicted under memory pressure.
+    SessionEvicted { model: String, evicted: u64 },
+}
+
+impl EngineEvent {
+    /// Stable short name of the variant (Prometheus/trace label).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineEvent::WorkerRestart { .. } => "worker_restart",
+            EngineEvent::ConstructFailed { .. } => "construct_failed",
+            EngineEvent::BatchFailed { .. } => "batch_failed",
+            EngineEvent::BreakerOpen { .. } => "breaker_open",
+            EngineEvent::BreakerHalfOpen { .. } => "breaker_half_open",
+            EngineEvent::BreakerClosed { .. } => "breaker_closed",
+            EngineEvent::PermanentlyDown { .. } => "permanently_down",
+            EngineEvent::ColumnSpared { .. } => "column_spared",
+            EngineEvent::SessionEvicted { .. } => "session_evicted",
+        }
+    }
+
+    /// The model this event belongs to.
+    pub fn model(&self) -> &str {
+        match self {
+            EngineEvent::WorkerRestart { model }
+            | EngineEvent::ConstructFailed { model, .. }
+            | EngineEvent::BatchFailed { model, .. }
+            | EngineEvent::BreakerOpen { model, .. }
+            | EngineEvent::BreakerHalfOpen { model }
+            | EngineEvent::BreakerClosed { model }
+            | EngineEvent::PermanentlyDown { model }
+            | EngineEvent::ColumnSpared { model, .. }
+            | EngineEvent::SessionEvicted { model, .. } => model,
+        }
+    }
+}
+
+/// An event with its ring-assigned sequence number and timestamp
+/// (seconds from the engine epoch).
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    /// Monotonic per-ring sequence number, starting at 0. Gaps at the
+    /// consumer mean the ring overflowed between drains.
+    pub seq: u64,
+    pub t_s: f64,
+    pub event: EngineEvent,
+}
+
+struct RingInner {
+    buf: VecDeque<EventRecord>,
+    next_seq: u64,
+    dropped_total: u64,
+    dropped_since_drain: u64,
+}
+
+/// Bounded MPSC-ish event ring (any worker pushes; `Engine::events`
+/// drains). Overflow drops the oldest record and counts it.
+pub struct EventRing {
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+/// Result of [`EventRing::drain`]: the events removed plus how many were
+/// lost to overflow since the previous drain.
+#[derive(Clone, Debug)]
+pub struct EventDrain {
+    pub events: Vec<EventRecord>,
+    pub dropped: u64,
+}
+
+impl EventRing {
+    /// Ring with the default capacity.
+    pub fn new(epoch: Instant) -> Self {
+        Self::with_capacity(epoch, EVENT_RING_CAP)
+    }
+
+    /// Ring with explicit capacity (tests exercise overflow).
+    pub fn with_capacity(epoch: Instant, cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            epoch,
+            cap,
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::with_capacity(cap),
+                next_seq: 0,
+                dropped_total: 0,
+                dropped_since_drain: 0,
+            }),
+        }
+    }
+
+    /// Push one event, stamped now. Sequence numbers are assigned under
+    /// the lock, so `seq` order equals ring order.
+    pub fn push(&self, event: EngineEvent) {
+        let t_s = Instant::now().saturating_duration_since(self.epoch).as_secs_f64();
+        let mut g = lock_unpoisoned(&self.inner);
+        if g.buf.len() == self.cap {
+            g.buf.pop_front();
+            g.dropped_total += 1;
+            g.dropped_since_drain += 1;
+        }
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.buf.push_back(EventRecord { seq, t_s, event });
+    }
+
+    /// Remove and return everything in the ring, plus the number of
+    /// events lost to overflow since the last drain (reset on return).
+    pub fn drain(&self) -> EventDrain {
+        let mut g = lock_unpoisoned(&self.inner);
+        let events: Vec<EventRecord> = g.buf.drain(..).collect();
+        let dropped = g.dropped_since_drain;
+        g.dropped_since_drain = 0;
+        EventDrain { events, dropped }
+    }
+
+    /// Non-draining copy (trace export must not steal the consumer's
+    /// events).
+    pub fn snapshot(&self) -> Vec<EventRecord> {
+        lock_unpoisoned(&self.inner).buf.iter().cloned().collect()
+    }
+
+    /// Total events ever lost to overflow.
+    pub fn dropped_total(&self) -> u64 {
+        lock_unpoisoned(&self.inner).dropped_total
+    }
+}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventRing")
+            .field("cap", &self.cap)
+            .field("dropped_total", &self.dropped_total())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(model: &str) -> EngineEvent {
+        EngineEvent::WorkerRestart { model: model.to_string() }
+    }
+
+    #[test]
+    fn drain_returns_events_in_seq_order_and_resets_drop_count() {
+        let ring = EventRing::with_capacity(Instant::now(), 4);
+        for i in 0..10 {
+            ring.push(ev(&format!("m{i}")));
+        }
+        let d = ring.drain();
+        assert_eq!(d.events.len(), 4);
+        assert_eq!(d.dropped, 6);
+        let seqs: Vec<u64> = d.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "survivors are the newest, seq-ordered");
+        // Ring is empty and the per-drain counter reset.
+        let d2 = ring.drain();
+        assert!(d2.events.is_empty());
+        assert_eq!(d2.dropped, 0);
+        assert_eq!(ring.dropped_total(), 6);
+        // Sequence numbering continues across drains.
+        ring.push(ev("next"));
+        assert_eq!(ring.snapshot()[0].seq, 10);
+    }
+
+    #[test]
+    fn snapshot_does_not_drain() {
+        let ring = EventRing::new(Instant::now());
+        ring.push(ev("a"));
+        assert_eq!(ring.snapshot().len(), 1);
+        assert_eq!(ring.snapshot().len(), 1);
+        assert_eq!(ring.drain().events.len(), 1);
+    }
+
+    #[test]
+    fn kind_and_model_are_stable() {
+        let e = EngineEvent::BreakerOpen { model: "timnet".into(), consecutive: 3 };
+        assert_eq!(e.kind(), "breaker_open");
+        assert_eq!(e.model(), "timnet");
+        let e = EngineEvent::ColumnSpared { model: "x".into(), columns: 2 };
+        assert_eq!(e.kind(), "column_spared");
+    }
+}

@@ -1,0 +1,237 @@
+//! Engine observability: request-lifecycle spans, typed engine events,
+//! and a merged Chrome-tracing export.
+//!
+//! Three pieces (see DESIGN.md "Telemetry & tracing"):
+//!
+//! * [`span`] — per-worker [`SpanRecorder`] rings stamping each
+//!   request's submit/enqueue/batch-close/dispatch/execute/abft/reply
+//!   transitions against a shared engine epoch.
+//! * [`events`] — one engine-wide [`EventRing`] of typed
+//!   [`EngineEvent`]s (restarts, breaker transitions, column sparing,
+//!   session eviction) with sequence numbers and drop accounting.
+//! * [`export_chrome_json`] — merges both with the simulated hardware
+//!   lanes of `sim::trace` into one Chrome-tracing JSON document, so a
+//!   single Perfetto view shows host queueing (pid 1) stacked above
+//!   tile-level VMM timing (pid 100+).
+//!
+//! Streaming latency histograms live in [`crate::util::stats::LogHistogram`]
+//! and are wired into `coordinator::Metrics`; this module is only about
+//! traces and events.
+
+pub mod events;
+pub mod span;
+
+pub use events::{EngineEvent, EventDrain, EventRecord, EventRing, EVENT_RING_CAP};
+pub use span::{
+    BatchSpan, RequestSpan, SpanRecorder, SpanSnapshot, BATCH_RING_CAP, REQUEST_RING_CAP,
+};
+
+use std::fmt::Write as _;
+
+use crate::sim::trace::{
+    esc, push_complete, push_hw_lanes, push_process_meta, push_thread_meta, TraceEvent,
+};
+
+/// Everything one model contributes to the merged trace: its span-ring
+/// snapshot plus the simulated hardware lanes of one inference.
+#[derive(Clone, Debug)]
+pub struct ModelTraceData {
+    pub model: String,
+    pub spans: SpanSnapshot,
+    /// `sim::trace::trace(prog, arch)` output for this model's network
+    /// (empty when the model has no mapped program).
+    pub hw: Vec<TraceEvent>,
+}
+
+/// Process id of the engine-host lanes in the merged trace.
+pub const ENGINE_PID: u32 = 1;
+/// First hardware process id; model `i` gets `HW_PID_BASE + i`.
+pub const HW_PID_BASE: u32 = 100;
+/// Track id of the engine-event instants within [`ENGINE_PID`].
+pub const EVENTS_TID: u32 = 0;
+
+fn sep(out: &mut String) {
+    if !out.ends_with('[') {
+        out.push(',');
+    }
+}
+
+/// Append one async-begin/end pair for a request's whole lifetime. Chrome
+/// async events ("b"/"e") pair by (cat, id, name) and render as a nested
+/// track group, which keeps overlapping requests from occluding each
+/// other on the worker lane.
+fn push_async_span(out: &mut String, tid: u32, id: u64, begin_s: f64, end_s: f64, ok: bool) {
+    let name = if ok { "request" } else { "request (error)" };
+    sep(out);
+    write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"request\",\"ph\":\"b\",\"id\":\"0x{:x}\",\
+         \"pid\":{},\"tid\":{},\"ts\":{:.4}}}",
+        name,
+        id,
+        ENGINE_PID,
+        tid,
+        begin_s * 1e6
+    )
+    .unwrap();
+    sep(out);
+    write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"request\",\"ph\":\"e\",\"id\":\"0x{:x}\",\
+         \"pid\":{},\"tid\":{},\"ts\":{:.4}}}",
+        name,
+        id,
+        ENGINE_PID,
+        tid,
+        end_s.max(begin_s) * 1e6
+    )
+    .unwrap();
+}
+
+/// Append one instant event (engine-event marker).
+fn push_instant(out: &mut String, tid: u32, name: &str, t_s: f64) {
+    sep(out);
+    write!(
+        out,
+        "{{\"name\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":{},\"tid\":{},\"ts\":{:.4}}}",
+        esc(name),
+        ENGINE_PID,
+        tid,
+        t_s * 1e6
+    )
+    .unwrap();
+}
+
+/// Merge engine request spans, engine events, and per-model simulated
+/// hardware lanes into one Chrome-tracing JSON document (Perfetto /
+/// `chrome://tracing` loadable). All timestamps share the engine epoch;
+/// the hardware lanes of each model are laid out from t = 0 as the
+/// timing template of one inference, not wall-clock aligned with any
+/// particular request.
+pub fn export_chrome_json(models: &[ModelTraceData], events: &[EventRecord]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    push_process_meta(&mut out, ENGINE_PID, "engine host");
+    push_thread_meta(&mut out, ENGINE_PID, EVENTS_TID, "engine events");
+
+    for (i, m) in models.iter().enumerate() {
+        let tid = i as u32 + 1;
+        push_thread_meta(&mut out, ENGINE_PID, tid, &format!("{} worker", m.model));
+
+        for b in &m.spans.batches {
+            let name = if b.ok {
+                format!("batch({})", b.size)
+            } else {
+                format!("batch({}) failed", b.size)
+            };
+            // Three back-to-back slices per batch: shed/pad between close
+            // and dispatch, backend execution, then the ABFT verify tail.
+            push_complete(&mut out, ENGINE_PID, tid, "form", b.close_s, b.dispatch_s - b.close_s);
+            push_complete(&mut out, ENGINE_PID, tid, &name, b.dispatch_s, b.execute_end_s - b.dispatch_s);
+            push_complete(&mut out, ENGINE_PID, tid, "abft", b.execute_end_s, b.abft_end_s - b.execute_end_s);
+        }
+        for r in &m.spans.requests {
+            push_async_span(&mut out, tid, r.id, r.submit_s, r.reply_s, r.ok);
+        }
+    }
+
+    for e in events {
+        push_instant(
+            &mut out,
+            EVENTS_TID,
+            &format!("{} {} #{}", e.event.kind(), e.event.model(), e.seq),
+            e.t_s,
+        );
+    }
+
+    for (i, m) in models.iter().enumerate() {
+        if m.hw.is_empty() {
+            continue;
+        }
+        let pid = HW_PID_BASE + i as u32;
+        push_process_meta(&mut out, pid, &format!("{} hardware (simulated)", m.model));
+        push_hw_lanes(&mut out, pid, &m.hw);
+    }
+
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::model;
+
+    fn span(id: u64, t0: f64) -> RequestSpan {
+        RequestSpan {
+            id,
+            submit_s: t0,
+            enqueue_s: t0 + 1e-5,
+            batch_close_s: t0 + 2e-5,
+            dispatch_s: t0 + 3e-5,
+            execute_end_s: t0 + 4e-5,
+            abft_end_s: t0 + 5e-5,
+            reply_s: t0 + 6e-5,
+            batch: 2,
+            ok: true,
+        }
+    }
+
+    fn demo_models() -> Vec<ModelTraceData> {
+        let arch = ArchConfig::tim_dnn();
+        let prog = crate::mapper::map_network(&model::tiny_cnn(), &arch);
+        let hw = crate::sim::trace::trace(&prog, &arch);
+        vec![ModelTraceData {
+            model: "timnet".into(),
+            spans: SpanSnapshot {
+                requests: vec![span(1, 0.0), span(2, 1e-4)],
+                batches: vec![BatchSpan {
+                    close_s: 2e-5,
+                    dispatch_s: 3e-5,
+                    execute_end_s: 4e-5,
+                    abft_end_s: 5e-5,
+                    size: 2,
+                    ok: true,
+                }],
+                dropped_requests: 0,
+                dropped_batches: 0,
+            },
+            hw,
+        }]
+    }
+
+    #[test]
+    fn merged_export_has_engine_and_hardware_processes() {
+        let events = vec![EventRecord {
+            seq: 0,
+            t_s: 1e-4,
+            event: EngineEvent::WorkerRestart { model: "timnet".into() },
+        }];
+        let json = export_chrome_json(&demo_models(), &events);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        // Both process lanes are present.
+        assert!(json.contains("\"name\":\"engine host\""));
+        assert!(json.contains("\"name\":\"timnet hardware (simulated)\""));
+        // Request async pair, batch slice, abft tail, event instant.
+        assert_eq!(json.matches("\"ph\":\"b\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"e\"").count(), 2);
+        assert!(json.contains("\"name\":\"batch(2)\""));
+        assert!(json.contains("\"name\":\"abft\""));
+        assert!(json.contains("worker_restart timnet #0"));
+        // Hardware lanes rode along under pid 100.
+        assert!(json.contains("\"pid\":100"));
+        assert!(json.contains("\"name\":\"Tile VMM\""));
+        // Structural sanity: balanced braces, no NaNs.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(!json.contains("NaN"));
+    }
+
+    #[test]
+    fn export_with_no_models_or_events_is_valid() {
+        let json = export_chrome_json(&[], &[]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("engine host"));
+    }
+}

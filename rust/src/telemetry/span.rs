@@ -1,0 +1,243 @@
+//! Request-lifecycle span recording.
+//!
+//! One [`SpanRecorder`] per model worker stamps every request's
+//! transitions (submit → enqueue → batch-close → dispatch → execute →
+//! ABFT verify → reply) as offsets from a shared engine epoch, into
+//! bounded rings. Recording is lock-light: the submit path stamps two
+//! `f64`s into the `Request` itself (no lock), and the worker pushes one
+//! finished span per reply under a short mutex hold — no allocation in
+//! steady state, since the rings are `VecDeque`s pre-allocated to their
+//! caps and overflow drops the oldest span (with drop accounting) rather
+//! than growing.
+//!
+//! Timestamps are `f64` seconds from the recorder's [`epoch`] — the same
+//! zero as the simulated hardware lanes in the merged Chrome trace, and
+//! friendly to seeded/simulated clocks (tests can fabricate spans without
+//! touching `Instant` at all).
+//!
+//! [`epoch`]: SpanRecorder::epoch
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::lock_unpoisoned;
+
+/// Default request-ring capacity per worker: the window Perfetto sees.
+pub const REQUEST_RING_CAP: usize = 4096;
+/// Default batch-ring capacity per worker.
+pub const BATCH_RING_CAP: usize = 1024;
+
+/// Lifecycle timestamps of one completed request, seconds from the
+/// engine epoch. Invariant (pinned by `tests/telemetry.rs`):
+/// `submit ≤ enqueue ≤ batch_close ≤ dispatch ≤ execute_end ≤ abft_end
+/// ≤ reply`.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSpan {
+    /// Engine-assigned request id (unique per model worker).
+    pub id: u64,
+    /// `Session::submit` entry (before admission checks).
+    pub submit_s: f64,
+    /// Request handed to the worker's channel.
+    pub enqueue_s: f64,
+    /// Batch formation closed (last member admitted or window expired).
+    pub batch_close_s: f64,
+    /// Batch handed to the backend.
+    pub dispatch_s: f64,
+    /// Backend `execute_batch` returned (or panicked).
+    pub execute_end_s: f64,
+    /// ABFT tile-health / session polls done.
+    pub abft_end_s: f64,
+    /// Reply sent to the client.
+    pub reply_s: f64,
+    /// Size of the batch this request rode in.
+    pub batch: u32,
+    /// Whether the reply was `Ok` (false: typed error after retries).
+    pub ok: bool,
+}
+
+/// Timestamps of one executed batch (seconds from the engine epoch).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSpan {
+    /// Batch formation closed.
+    pub close_s: f64,
+    /// Handed to the backend.
+    pub dispatch_s: f64,
+    /// Backend returned.
+    pub execute_end_s: f64,
+    /// ABFT/session polls done.
+    pub abft_end_s: f64,
+    /// Lanes in the batch (after padding removal — real requests).
+    pub size: u32,
+    /// Whether the batch executed successfully.
+    pub ok: bool,
+}
+
+struct Rings {
+    requests: VecDeque<RequestSpan>,
+    batches: VecDeque<BatchSpan>,
+    dropped_requests: u64,
+    dropped_batches: u64,
+}
+
+/// Bounded per-worker span rings sharing one epoch with the rest of the
+/// engine. Overflow policy: drop-oldest (the trace is a tail window of
+/// recent activity; totals live in `Metrics`, which never drops).
+pub struct SpanRecorder {
+    epoch: Instant,
+    req_cap: usize,
+    batch_cap: usize,
+    rings: Mutex<Rings>,
+}
+
+impl SpanRecorder {
+    /// Recorder with the default ring capacities.
+    pub fn new(epoch: Instant) -> Self {
+        Self::with_capacity(epoch, REQUEST_RING_CAP, BATCH_RING_CAP)
+    }
+
+    /// Recorder with explicit ring capacities (tests exercise overflow
+    /// with tiny rings).
+    pub fn with_capacity(epoch: Instant, req_cap: usize, batch_cap: usize) -> Self {
+        assert!(req_cap > 0 && batch_cap > 0);
+        Self {
+            epoch,
+            req_cap,
+            batch_cap,
+            rings: Mutex::new(Rings {
+                requests: VecDeque::with_capacity(req_cap),
+                batches: VecDeque::with_capacity(batch_cap),
+                dropped_requests: 0,
+                dropped_batches: 0,
+            }),
+        }
+    }
+
+    /// The shared zero of every timestamp this recorder produces.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Seconds from the epoch to now.
+    pub fn now(&self) -> f64 {
+        self.offset(Instant::now())
+    }
+
+    /// Seconds from the epoch to `t` (0.0 if `t` precedes the epoch).
+    pub fn offset(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64()
+    }
+
+    /// Record one completed request span (drop-oldest on overflow).
+    pub fn push(&self, span: RequestSpan) {
+        let mut g = lock_unpoisoned(&self.rings);
+        if g.requests.len() == self.req_cap {
+            g.requests.pop_front();
+            g.dropped_requests += 1;
+        }
+        g.requests.push_back(span);
+    }
+
+    /// Record one executed batch span (drop-oldest on overflow).
+    pub fn push_batch(&self, span: BatchSpan) {
+        let mut g = lock_unpoisoned(&self.rings);
+        if g.batches.len() == self.batch_cap {
+            g.batches.pop_front();
+            g.dropped_batches += 1;
+        }
+        g.batches.push_back(span);
+    }
+
+    /// Non-draining copy of the rings plus drop counters (export reads
+    /// the same window repeatedly; nothing is consumed).
+    pub fn snapshot(&self) -> SpanSnapshot {
+        let g = lock_unpoisoned(&self.rings);
+        SpanSnapshot {
+            requests: g.requests.iter().copied().collect(),
+            batches: g.batches.iter().copied().collect(),
+            dropped_requests: g.dropped_requests,
+            dropped_batches: g.dropped_batches,
+        }
+    }
+}
+
+impl std::fmt::Debug for SpanRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpanRecorder")
+            .field("req_cap", &self.req_cap)
+            .field("batch_cap", &self.batch_cap)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Point-in-time copy of one worker's span rings.
+#[derive(Clone, Debug)]
+pub struct SpanSnapshot {
+    pub requests: Vec<RequestSpan>,
+    pub batches: Vec<BatchSpan>,
+    /// Spans evicted from the request ring since construction.
+    pub dropped_requests: u64,
+    /// Spans evicted from the batch ring since construction.
+    pub dropped_batches: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: f64) -> RequestSpan {
+        RequestSpan {
+            id,
+            submit_s: t,
+            enqueue_s: t,
+            batch_close_s: t,
+            dispatch_s: t,
+            execute_end_s: t,
+            abft_end_s: t,
+            reply_s: t,
+            batch: 1,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let rec = SpanRecorder::with_capacity(Instant::now(), 3, 2);
+        for i in 0..7u64 {
+            rec.push(req(i, i as f64));
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.requests.len(), 3);
+        assert_eq!(snap.dropped_requests, 4);
+        let ids: Vec<u64> = snap.requests.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![4, 5, 6], "kept spans are the newest");
+        // Snapshot does not drain.
+        assert_eq!(rec.snapshot().requests.len(), 3);
+    }
+
+    #[test]
+    fn batch_ring_is_independent() {
+        let rec = SpanRecorder::with_capacity(Instant::now(), 2, 2);
+        for i in 0..3 {
+            rec.push_batch(BatchSpan {
+                close_s: i as f64,
+                dispatch_s: i as f64,
+                execute_end_s: i as f64,
+                abft_end_s: i as f64,
+                size: 1,
+                ok: true,
+            });
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.batches.len(), 2);
+        assert_eq!(snap.dropped_batches, 1);
+        assert_eq!(snap.dropped_requests, 0);
+    }
+
+    #[test]
+    fn offset_saturates_before_epoch() {
+        let later = Instant::now() + std::time::Duration::from_secs(3600);
+        let rec = SpanRecorder::new(later);
+        assert_eq!(rec.offset(Instant::now()), 0.0);
+    }
+}

@@ -57,9 +57,15 @@ impl Summary {
 
 /// Percentile of a sample (linear interpolation, like numpy's default).
 /// `q` in [0, 100]. Sorts a copy; fine for metrics-sized data.
+///
+/// Total: an empty sample yields `0.0` (a percentile nobody has observed
+/// is "no latency", not a panic — callers report it, they don't branch
+/// on it).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = q / 100.0 * (v.len() - 1) as f64;
@@ -119,6 +125,174 @@ impl Histogram {
     }
 }
 
+/// Default [`LogHistogram`] bucket count: 512 buckets over
+/// [`LOG_HIST_LO`], [`LOG_HIST_HI`) give a per-bucket width ratio of
+/// `(HI/LO)^(1/512) = 1e12^(1/512) ≈ 1.0554`, so a quantile reported at
+/// the geometric bucket midpoint is within `√1.0554 − 1 ≈ 2.7%` relative
+/// error of the exact sample quantile (for in-range samples).
+pub const LOG_HIST_BUCKETS: usize = 512;
+/// Default lower bound of the bucketed range: 1 ns. Smaller (and
+/// non-positive) samples clamp into bucket 0 and are reported as `lo`.
+pub const LOG_HIST_LO: f64 = 1e-9;
+/// Default upper bound: 1000 s. Larger samples clamp into the last
+/// bucket and are reported as the last bucket's midpoint.
+pub const LOG_HIST_HI: f64 = 1e3;
+/// Documented relative-error bound of [`LogHistogram::quantile`] for
+/// samples inside `[lo, hi)` under the default geometry (half a bucket
+/// width, rounded up generously to absorb f64 bucketing slop).
+pub const LOG_HIST_REL_ERR: f64 = 0.03;
+
+/// Fixed-size log-bucketed histogram for latency-style positive samples:
+/// O(1) memory in the sample count, O(1) `record`, mergeable across
+/// workers, with quantiles at a documented relative-error bound
+/// ([`LOG_HIST_REL_ERR`] for the default geometry).
+///
+/// Bucket `i` covers `[lo·r^i, lo·r^(i+1))` with `r = (hi/lo)^(1/n)`;
+/// a sample is reported back as the geometric midpoint of its bucket,
+/// clamped to the exact observed `[min, max]` so single-sample and
+/// extreme quantiles stay sharp. Out-of-range samples (including zero
+/// and negatives) clamp into the first/last bucket — their reported
+/// value is only range-accurate, which the serving metrics accept
+/// (sub-nanosecond host latencies do not occur; >1000 s means the
+/// system is already on fire).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    lo: f64,
+    /// Precomputed `1 / ln(r)` so `record` costs one `ln` + one multiply.
+    inv_ln_ratio: f64,
+    ln_ratio: f64,
+    bins: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Histogram over the default latency range (1 ns .. 1000 s, 512
+    /// buckets). The one allocation happens here; `record` never
+    /// allocates.
+    pub fn new() -> Self {
+        Self::with_range(LOG_HIST_LO, LOG_HIST_HI, LOG_HIST_BUCKETS)
+    }
+
+    /// Histogram over `[lo, hi)` with `nbuckets` log-spaced buckets.
+    pub fn with_range(lo: f64, hi: f64, nbuckets: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && nbuckets > 0);
+        let ln_ratio = (hi / lo).ln() / nbuckets as f64;
+        Self {
+            lo,
+            inv_ln_ratio: 1.0 / ln_ratio,
+            ln_ratio,
+            bins: vec![0; nbuckets],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(&self, x: f64) -> usize {
+        if x <= self.lo {
+            return 0;
+        }
+        // `as usize` saturates: NaN → 0, +∞ → usize::MAX → last bucket.
+        let idx = ((x / self.lo).ln() * self.inv_ln_ratio) as usize;
+        idx.min(self.bins.len() - 1)
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    pub fn record(&mut self, x: f64) {
+        let i = self.bucket_of(x);
+        self.bins[i] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of recorded samples (not bucketed).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Fold another histogram into this one. Both must share the same
+    /// geometry (lo/hi/bucket count) — the merge is then exact on the
+    /// bucketed distribution, and associative/commutative bucket-for-
+    /// bucket, so per-worker histograms can be combined in any order.
+    pub fn merge(&mut self, other: &Self) {
+        assert!(
+            self.bins.len() == other.bins.len()
+                && self.lo == other.lo
+                && self.ln_ratio == other.ln_ratio,
+            "LogHistogram::merge requires identical bucket geometry"
+        );
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Quantile `q` in [0, 100] (same convention as [`percentile`]):
+    /// the geometric midpoint of the bucket holding the rank-`⌈q·n⌉`
+    /// sample, clamped to the exact observed `[min, max]`. Returns 0.0
+    /// for an empty histogram — total, like [`percentile`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.count == 0 {
+            return 0.0;
+        }
+        // Rank of the requested quantile, 1-based; q = 0 maps to the
+        // first sample, q = 100 to the last.
+        let rank = ((q / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid = self.lo * ((i as f64 + 0.5) * self.ln_ratio).exp();
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Exact observed minimum (∞ when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact observed maximum (−∞ when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Raw bucket counts (for tests and renderers).
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Standard normal CDF via the Abramowitz–Stegun erf approximation
 /// (|err| < 1.5e-7) — used to compute analytic sensing-error probabilities
 /// cross-checked against Monte-Carlo.
@@ -163,6 +337,101 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_total_on_empty() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+    }
+
+    #[test]
+    fn log_histogram_empty_and_single() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+
+        let mut h = LogHistogram::new();
+        h.record(0.25);
+        // Single sample: clamping to [min, max] makes every quantile exact.
+        assert_eq!(h.quantile(0.0), 0.25);
+        assert_eq!(h.quantile(50.0), 0.25);
+        assert_eq!(h.quantile(100.0), 0.25);
+        assert_eq!(h.count(), 1);
+        assert!((h.sum() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_within_documented_bound() {
+        // Deterministic spread over several decades of the bucketed range.
+        let mut xs = Vec::new();
+        for i in 0..1000u32 {
+            // 1 µs .. ~0.6 s, geometric-ish coverage.
+            xs.push(1e-6 * 1.0134f64.powi(i as i32));
+        }
+        let mut h = LogHistogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= LOG_HIST_REL_ERR,
+                "q={q}: approx {approx} vs exact {exact} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn log_histogram_clamps_out_of_range() {
+        let mut h = LogHistogram::new();
+        h.record(0.0); // below lo (and non-positive): bucket 0
+        h.record(-1.0);
+        h.record(1e9); // above hi: last bucket
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.bins()[0], 2);
+        assert_eq!(h.bins()[LOG_HIST_BUCKETS - 1], 1);
+        // Quantiles stay inside the observed range.
+        assert!(h.quantile(0.0) >= -1.0 && h.quantile(100.0) <= 1e9);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_combined_and_is_associative() {
+        let (mut a, mut b, mut c) = (
+            LogHistogram::new(),
+            LogHistogram::new(),
+            LogHistogram::new(),
+        );
+        let mut all = LogHistogram::new();
+        for i in 0..300u32 {
+            let x = 1e-4 * (1.0 + i as f64);
+            match i % 3 {
+                0 => a.record(x),
+                1 => b.record(x),
+                _ => c.record(x),
+            }
+            all.record(x);
+        }
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.bins(), right.bins());
+        assert_eq!(left.bins(), all.bins());
+        assert_eq!(left.count(), all.count());
+        assert!((left.sum() - all.sum()).abs() < 1e-9);
+        assert_eq!(left.min(), all.min());
+        assert_eq!(left.max(), all.max());
+        assert_eq!(left.quantile(95.0), all.quantile(95.0));
     }
 
     #[test]

@@ -17,6 +17,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 use timdnn::arch::functional::{TimNetAccelerator, TimNetWeights};
+use timdnn::coordinator::{Metrics, Response};
+use timdnn::runtime::TensorF32;
 use timdnn::tile::{TileConfig, VmmMode};
 
 thread_local! {
@@ -73,6 +75,45 @@ fn steady_state_forward_performs_zero_heap_allocations() {
         after - before
     );
     assert_eq!(logits, warm, "steady-state results must not drift");
+}
+
+#[test]
+fn steady_state_metrics_record_performs_zero_heap_allocations() {
+    // The observability acceptance criterion: Metrics memory is O(1) in
+    // the request count. Every latency series is a fixed-size
+    // LogHistogram allocated at construction, so the per-request record
+    // path must never touch the allocator.
+    let mut m = Metrics::new();
+    let resp = Response {
+        id: 1,
+        outputs: vec![TensorF32::new(vec![1], vec![0.0])],
+        queued: std::time::Duration::from_micros(10),
+        e2e: std::time::Duration::from_micros(120),
+        sim_latency_s: 1e-6,
+        sim_energy_j: 2e-6,
+    };
+    // Warm-up (none needed — histograms are pre-sized — but mirror the
+    // forward tests' shape so a future regression shows up identically).
+    m.record(&resp, 4, std::time::Duration::from_micros(50));
+
+    let before = allocs_on_this_thread();
+    for _ in 0..1000 {
+        m.record(&resp, 4, std::time::Duration::from_micros(50));
+        m.record_padding(1);
+        m.record_batch_ok();
+        m.record_breaker(0);
+        m.record_decode(2e-3);
+        m.record_abft(10, 0, 0, 0);
+        m.record_sessions(0, 0, 4);
+    }
+    let after = allocs_on_this_thread();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state Metrics::record allocated {} times over 1000 iterations",
+        after - before
+    );
+    assert_eq!(m.snapshot().completed, 1001);
 }
 
 #[test]

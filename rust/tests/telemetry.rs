@@ -1,0 +1,371 @@
+//! Telemetry-layer acceptance tests (ISSUE 10): span-ordering invariants
+//! through a live engine, event-ring overflow accounting, the streaming
+//! `LogHistogram` against an exact-percentile oracle, merge
+//! associativity, merged Chrome-trace export structure, and Prometheus
+//! exposition sanity.
+
+use std::time::{Duration, Instant};
+
+use timdnn::arch::ArchConfig;
+use timdnn::coordinator::{
+    BatchPolicy, Engine, FaultBackend, FaultPlan, ModelSpec, SimOnlyBackend, SupervisorPolicy,
+};
+use timdnn::model;
+use timdnn::runtime::TensorF32;
+use timdnn::telemetry::{EngineEvent, EventRing, RequestSpan, SpanRecorder};
+use timdnn::util::prng::Rng;
+use timdnn::util::stats::{percentile, LogHistogram, LOG_HIST_REL_ERR};
+use timdnn::TimError;
+
+fn input(i: usize) -> TensorF32 {
+    TensorF32::new(vec![2], vec![i as f32, -1.0])
+}
+
+fn engine() -> Engine {
+    let spec = ModelSpec::for_network("m", &model::tiny_cnn(), &ArchConfig::tim_dnn(), || {
+        Ok(Box::new(SimOnlyBackend::new()))
+    })
+    .with_policy(BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(200) });
+    Engine::builder().register(spec).unwrap().build().unwrap()
+}
+
+// ---------------------------------------------------------------------
+// LogHistogram vs exact oracle (satellite c)
+// ---------------------------------------------------------------------
+
+/// Log-uniform sample over [1e-6, 1e2] s — several decades, comfortably
+/// inside the bucketed range so the documented bound applies unclamped.
+fn latency_samples(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 1e-6 * 10f64.powf(rng.next_f64() * 8.0)).collect()
+}
+
+/// Property: for random sample sets, every quantile reported by the
+/// histogram is within [`LOG_HIST_REL_ERR`] relative error of the exact
+/// order statistic at the histogram's documented rank (`⌈q·n/100⌉`),
+/// and within that bound plus the local order-statistic gap of the
+/// interpolating [`percentile`] oracle.
+#[test]
+fn log_histogram_quantiles_track_exact_oracle_on_random_samples() {
+    let mut rng = Rng::seeded(0x7e1e_03b5);
+    for trial in 0..20 {
+        let n = rng.range_usize(64, 4000);
+        let xs = latency_samples(&mut rng, n);
+        let mut h = LogHistogram::new();
+        for &x in &xs {
+            h.record(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        for q in [1.0, 5.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let approx = h.quantile(q);
+            // Exact oracle under the histogram's own rank convention.
+            let rank = ((q / 100.0 * n as f64).ceil() as usize).clamp(1, n);
+            let exact = sorted[rank - 1];
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= LOG_HIST_REL_ERR,
+                "trial {trial} n={n} q={q}: approx {approx} vs rank-exact {exact} (rel {rel})"
+            );
+
+            // Against the interpolating oracle the additional error is at
+            // most the gap between the bracketing order statistics.
+            let p = percentile(&xs, q);
+            let pos = q / 100.0 * (n - 1) as f64;
+            let lo = (pos.floor() as usize).min(rank - 1);
+            let hi = (pos.ceil() as usize).max(rank - 1);
+            let allowed = LOG_HIST_REL_ERR * sorted[hi] + (sorted[hi] - sorted[lo]);
+            assert!(
+                (approx - p).abs() <= allowed,
+                "trial {trial} n={n} q={q}: approx {approx} vs percentile {p} \
+                 (allowed {allowed})"
+            );
+        }
+    }
+}
+
+/// Merging per-worker histograms must be associative on the bucketed
+/// distribution and agree with recording everything into one histogram.
+#[test]
+fn log_histogram_merge_is_associative_and_matches_whole() {
+    let mut rng = Rng::seeded(0xabcd_1234);
+    let xs = latency_samples(&mut rng, 1500);
+
+    let mut whole = LogHistogram::new();
+    let mut parts = [LogHistogram::new(), LogHistogram::new(), LogHistogram::new()];
+    for &x in &xs {
+        whole.record(x);
+        parts[rng.below(3) as usize].record(x);
+    }
+    let [a, b, c] = parts;
+
+    // (a ⊕ b) ⊕ c
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    // a ⊕ (b ⊕ c)
+    let mut right_inner = b.clone();
+    right_inner.merge(&c);
+    let mut right = a.clone();
+    right.merge(&right_inner);
+
+    assert_eq!(left.bins(), right.bins(), "merge must be associative bucket-for-bucket");
+    assert_eq!(left.bins(), whole.bins(), "merged parts must equal the whole");
+    assert_eq!(left.count(), whole.count());
+    assert_eq!(left.min(), whole.min());
+    assert_eq!(left.max(), whole.max());
+    // Sum accumulates in a different order — identical up to f64 slop.
+    assert!((left.sum() - whole.sum()).abs() <= 1e-9 * whole.sum());
+    for q in [50.0, 95.0, 99.0] {
+        assert_eq!(left.quantile(q), right.quantile(q));
+        assert_eq!(left.quantile(q), whole.quantile(q));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Span ordering through a live engine (acceptance criterion)
+// ---------------------------------------------------------------------
+
+fn assert_span_ordered(s: &RequestSpan) {
+    let chain = [
+        ("submit", s.submit_s),
+        ("enqueue", s.enqueue_s),
+        ("batch_close", s.batch_close_s),
+        ("dispatch", s.dispatch_s),
+        ("execute_end", s.execute_end_s),
+        ("abft_end", s.abft_end_s),
+        ("reply", s.reply_s),
+    ];
+    for w in chain.windows(2) {
+        assert!(w[0].1.is_finite() && w[1].1.is_finite(), "span {} has non-finite stamps", s.id);
+        assert!(
+            w[0].1 <= w[1].1,
+            "span {}: {} ({}) must not be after {} ({})",
+            s.id,
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+}
+
+/// Every completed request leaves one span whose stamps are monotone
+/// through the whole lifecycle, for sequential and bursty submission.
+#[test]
+fn engine_request_spans_obey_lifecycle_ordering() {
+    let engine = engine();
+    let session = engine.session("m").unwrap();
+
+    // Sequential requests: one per batch.
+    for i in 0..12 {
+        session.infer(input(i)).unwrap();
+    }
+    // A burst: multi-request batches exercise shared batch stamps.
+    let rxs: Vec<_> = (0..8).map(|i| session.submit(input(i)).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+
+    let snap = engine.request_spans("m").unwrap();
+    assert_eq!(snap.requests.len(), 20, "one span per completed request");
+    assert_eq!(snap.dropped_requests, 0);
+    for s in &snap.requests {
+        assert_span_ordered(s);
+        assert!(s.ok, "span {} must record a successful reply", s.id);
+        assert!(s.batch >= 1, "span {} rode in an empty batch?", s.id);
+    }
+
+    assert!(!snap.batches.is_empty());
+    assert_eq!(snap.dropped_batches, 0);
+    for b in &snap.batches {
+        assert!(b.close_s <= b.dispatch_s && b.dispatch_s <= b.execute_end_s);
+        assert!(b.execute_end_s <= b.abft_end_s);
+        assert!(b.ok && b.size >= 1);
+    }
+    engine.shutdown();
+}
+
+/// Failed requests still leave ordered spans (marked `ok = false`), and
+/// the failure surfaces as typed `batch_failed` events with strictly
+/// increasing sequence numbers; a second drain is empty.
+#[test]
+fn engine_failure_spans_and_events_are_recorded() {
+    let injector = FaultPlan::new(5).error_first(2).injector();
+    let inj = injector.clone();
+    let spec = ModelSpec::for_network("m", &model::tiny_cnn(), &ArchConfig::tim_dnn(), move || {
+        FaultBackend::new(Box::new(SimOnlyBackend::new()), inj.clone()).map(Box::new)
+    })
+    .with_policy(BatchPolicy { max_batch: 1, max_wait: Duration::from_micros(50) })
+    .with_supervisor(SupervisorPolicy {
+        breaker_threshold: 100, // keep the breaker closed: only batch_failed events
+        ..SupervisorPolicy::default()
+    });
+    let engine = Engine::builder().register(spec).unwrap().build().unwrap();
+    let session = engine.session("m").unwrap();
+
+    for i in 0..2 {
+        match session.infer(input(i)) {
+            Err(TimError::Exec { reason, .. }) => assert!(reason.contains("injected")),
+            other => panic!("expected the injected Exec error, got {other:?}"),
+        }
+    }
+    session.infer(input(2)).unwrap();
+
+    let snap = engine.request_spans("m").unwrap();
+    assert_eq!(snap.requests.len(), 3);
+    let failed: Vec<_> = snap.requests.iter().filter(|s| !s.ok).collect();
+    assert_eq!(failed.len(), 2, "both injected failures must leave spans");
+    for s in &snap.requests {
+        assert_span_ordered(s);
+    }
+    for s in &failed {
+        assert_eq!(s.batch, 0, "failed spans record no batch size");
+    }
+
+    let drained = engine.events();
+    assert_eq!(drained.dropped, 0);
+    let batch_failed: Vec<_> = drained
+        .events
+        .iter()
+        .filter(|r| r.event.kind() == "batch_failed")
+        .collect();
+    assert_eq!(batch_failed.len(), 2);
+    for r in &batch_failed {
+        assert_eq!(r.event.model(), "m");
+        assert!(r.t_s.is_finite() && r.t_s >= 0.0);
+        match &r.event {
+            EngineEvent::BatchFailed { reason, .. } => assert!(reason.contains("injected")),
+            other => panic!("kind/variant mismatch: {other:?}"),
+        }
+    }
+    for w in drained.events.windows(2) {
+        assert!(w[0].seq < w[1].seq, "event seqs must be strictly increasing");
+    }
+
+    let again = engine.events();
+    assert!(again.events.is_empty(), "drain must remove the events it returns");
+    assert_eq!(again.dropped, 0);
+    engine.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// Ring overflow accounting (acceptance criterion)
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_ring_overflow_drops_oldest_and_accounts() {
+    let ring = EventRing::with_capacity(Instant::now(), 4);
+    for i in 0..10 {
+        ring.push(EngineEvent::BatchFailed { model: format!("m{i}"), reason: String::new() });
+    }
+    let drained = ring.drain();
+    assert_eq!(drained.events.len(), 4, "ring keeps only the newest `cap` events");
+    assert_eq!(drained.dropped, 6, "every overwritten event is accounted");
+    let seqs: Vec<u64> = drained.events.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, vec![6, 7, 8, 9], "seq numbers identify the surviving tail");
+    for (r, want) in drained.events.iter().zip(["m6", "m7", "m8", "m9"]) {
+        assert_eq!(r.event.model(), want);
+    }
+    assert_eq!(ring.dropped_total(), 6);
+
+    // Post-overflow pushes pick up the sequence where it left off, and
+    // the per-drain drop counter has been reset.
+    ring.push(EngineEvent::BreakerClosed { model: "m".into() });
+    let next = ring.drain();
+    assert_eq!(next.events.len(), 1);
+    assert_eq!(next.events[0].seq, 10);
+    assert_eq!(next.dropped, 0);
+}
+
+#[test]
+fn span_ring_overflow_drops_oldest_and_accounts() {
+    fn span(id: u64) -> RequestSpan {
+        let t = id as f64;
+        RequestSpan {
+            id,
+            submit_s: t,
+            enqueue_s: t,
+            batch_close_s: t,
+            dispatch_s: t,
+            execute_end_s: t,
+            abft_end_s: t,
+            reply_s: t,
+            batch: 1,
+            ok: true,
+        }
+    }
+    let rec = SpanRecorder::with_capacity(Instant::now(), 4, 4);
+    for id in 0..10 {
+        rec.push(span(id));
+    }
+    let snap = rec.snapshot();
+    assert_eq!(snap.requests.len(), 4);
+    let ids: Vec<u64> = snap.requests.iter().map(|s| s.id).collect();
+    assert_eq!(ids, vec![6, 7, 8, 9], "drop-oldest keeps the newest tail");
+    assert_eq!(snap.dropped_requests, 6);
+    assert_eq!(snap.dropped_batches, 0, "batch ring is independent");
+}
+
+// ---------------------------------------------------------------------
+// Merged trace export + Prometheus exposition (acceptance criteria)
+// ---------------------------------------------------------------------
+
+/// The merged export must be one structurally sound Chrome-tracing JSON
+/// document carrying both the engine-host process (spans + events) and
+/// the per-model simulated hardware process.
+#[test]
+fn export_trace_merges_engine_and_hardware_and_stays_well_formed() {
+    let engine = engine();
+    let session = engine.session("m").unwrap();
+    for i in 0..6 {
+        session.infer(input(i)).unwrap();
+    }
+
+    let json = engine.export_trace();
+    assert!(json.starts_with("{\"traceEvents\":["), "export must be a trace-object document");
+    assert!(json.ends_with("]}"));
+    assert!(json.contains("engine host"), "engine-host process meta missing");
+    assert!(json.contains("\"pid\":100"), "simulated-hardware process missing");
+    assert!(json.contains("\"ph\":\"X\""), "no complete slices in the export");
+    assert!(json.contains("\"ph\":\"b\"") && json.contains("\"ph\":\"e\""), "no request async pairs");
+    assert!(
+        !json.contains("NaN") && !json.contains(":inf") && !json.contains(":-inf"),
+        "non-finite number leaked into JSON"
+    );
+    assert!(!json.contains(",]") && !json.contains(",}"), "trailing comma");
+    assert_eq!(
+        json.matches('{').count(),
+        json.matches('}').count(),
+        "unbalanced braces: the export is not valid JSON"
+    );
+    assert_eq!(json.matches('[').count(), json.matches(']').count());
+    engine.shutdown();
+}
+
+/// Prometheus text from a live engine: stable names with the model
+/// label, every sample line numeric, and no NaN anywhere.
+#[test]
+fn prometheus_text_from_live_engine_parses_clean() {
+    let engine = engine();
+    let session = engine.session("m").unwrap();
+    for i in 0..5 {
+        session.infer(input(i)).unwrap();
+    }
+
+    let text = engine.metrics("m").unwrap().to_prometheus_text("m");
+    assert!(text.contains("timdnn_requests_completed_total{model=\"m\"} 5"));
+    assert!(text.contains("timdnn_e2e_latency_seconds{model=\"m\",quantile=\"0.99\"}"));
+    assert!(!text.contains("NaN"), "exposition must never carry NaN:\n{text}");
+
+    for line in text.lines().filter(|l| !l.is_empty()) {
+        if line.starts_with('#') {
+            continue;
+        }
+        assert!(line.starts_with("timdnn_"), "unprefixed sample line: {line}");
+        let value = line.rsplit(' ').next().unwrap();
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("non-numeric sample: {line}"));
+        assert!(v.is_finite(), "non-finite sample: {line}");
+    }
+    engine.shutdown();
+}

@@ -9,7 +9,7 @@ mod lint;
 
 use lint::{
     lint_source, Finding, RULE_DIGITIZE_F32, RULE_HOT_ALLOC, RULE_INTSOFTMAX_FLOAT, RULE_MUTEX,
-    RULE_NARROWING, RULE_RNG, RULE_VMM_MATCH,
+    RULE_NARROWING, RULE_PRINTLN, RULE_RNG, RULE_VMM_MATCH,
 };
 
 fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
@@ -349,6 +349,68 @@ pub fn boundary() -> i32 {
 }
 ";
     assert!(lint_source("rust/src/transformer/intmath.rs", src).is_empty());
+}
+
+// ------------------------------------------------- no-println-outside-report
+
+#[test]
+fn println_flagged_outside_report_paths() {
+    let src = "\
+fn worker_loop() {
+    eprintln!(\"model down\");
+    println!(\"progress\");
+}
+";
+    let f = lint_source("rust/src/coordinator/engine.rs", src);
+    assert_eq!(rules_of(&f), vec![RULE_PRINTLN, RULE_PRINTLN], "{f:#?}");
+    assert_eq!(f[0].line, 2);
+    assert_eq!(f[1].line, 3);
+    assert!(f[0].message.contains("EngineEvent"), "{}", f[0].message);
+}
+
+#[test]
+fn println_permitted_in_report_and_cli_paths() {
+    let src = "\
+fn report() {
+    println!(\"== metrics ==\");
+    eprintln!(\"warning\");
+}
+";
+    for file in [
+        "rust/src/main.rs",
+        "rust/src/coordinator/metrics.rs",
+        "rust/src/util/cli.rs",
+        "rust/src/util/table.rs",
+        "rust/src/util/bench.rs",
+    ] {
+        assert!(lint_source(file, src).is_empty(), "{file} should be exempt");
+    }
+    // The carve-out is a path suffix, not any file merely *ending* in the
+    // letters: domain.rs is library code and stays under the rule.
+    assert_eq!(rules_of(&lint_source("rust/src/domain.rs", src)), vec![RULE_PRINTLN; 2]);
+}
+
+#[test]
+fn println_waivable_with_allow_comment() {
+    let src = "\
+fn construct() {
+    // timlint::allow(no-println-outside-report): pre-engine startup warning
+    eprintln!(\"warning: synthetic weights\");
+}
+";
+    assert!(lint_source("rust/src/coordinator/backend.rs", src).is_empty());
+}
+
+#[test]
+fn println_in_strings_and_print_macro_are_not_flagged() {
+    let src = "\
+fn fine(out: &mut String) {
+    out.push_str(\"println!(not code)\");
+    print!(\"progress without newline\");
+    writeln!(out, \"also fine\").unwrap();
+}
+";
+    assert!(lint_source("rust/src/telemetry/mod.rs", src).is_empty());
 }
 
 // --------------------------------------------------------- lexer edge cases

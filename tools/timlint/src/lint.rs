@@ -20,6 +20,7 @@
 //! | `vmm-mode-match`  | every `match` on `VmmMode`   | missing variant/wildcard  |
 //! | `mutex-lock-unwrap`| `rust/src/**`               | bare `.lock().unwrap()`   |
 //! | `no-float-in-intsoftmax` | `transformer/intmath.rs` | any float token, file-wide |
+//! | `no-println-outside-report` | `rust/src/**` minus report/CLI paths | `println!`/`eprintln!` |
 //!
 //! Waivers: a `// timlint::allow(rule): why` comment covers its own line
 //! and the next; `#[timdnn::timlint_allow(rule)]` covers a whole fn.
@@ -40,6 +41,7 @@ pub const RULE_DIGITIZE_F32: &str = "digitize-f32";
 pub const RULE_VMM_MATCH: &str = "vmm-mode-match";
 pub const RULE_MUTEX: &str = "mutex-lock-unwrap";
 pub const RULE_INTSOFTMAX_FLOAT: &str = "no-float-in-intsoftmax";
+pub const RULE_PRINTLN: &str = "no-println-outside-report";
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Kind {
@@ -594,6 +596,31 @@ impl Ctx<'_> {
         }
     }
 
+    /// `no-println-outside-report`: ad-hoc stdout/stderr writes from
+    /// library code bypass the typed observability surface — the worker
+    /// loop's state changes belong in the engine event ring
+    /// (`telemetry::EventRing`) and aggregates in `MetricsSnapshot`, not
+    /// interleaved on stderr where no consumer can see them. The
+    /// sanctioned report/CLI paths (where printing *is* the product) are
+    /// carved out in [`is_report_module`]; anywhere else, waive with
+    /// `timlint::allow` and a reason.
+    fn println_rules(&mut self) {
+        for j in 0..self.toks.len() {
+            let t = self.toks[j];
+            if t.kind == Kind::Ident
+                && (t.text == "println" || t.text == "eprintln")
+                && self.text(j + 1) == "!"
+            {
+                let msg = format!(
+                    "`{}!` outside the sanctioned report/CLI paths; push a typed \
+                     EngineEvent (telemetry::EventRing) or extend MetricsSnapshot instead",
+                    t.text
+                );
+                self.report(j, RULE_PRINTLN, msg);
+            }
+        }
+    }
+
     fn vmm_match_rules(&mut self) {
         let mut j = 0;
         while j < self.toks.len() {
@@ -732,6 +759,19 @@ fn is_intsoftmax_module(file: &str) -> bool {
     file.replace('\\', "/").ends_with("transformer/intmath.rs")
 }
 
+/// True when `file` is a sanctioned human-facing report/CLI path —
+/// direct stdout writes are the product there, so
+/// `no-println-outside-report` does not apply: the CLI entry point, the
+/// metrics `report()` printer, and the table/bench render helpers.
+fn is_report_module(file: &str) -> bool {
+    let f = file.replace('\\', "/");
+    f == "main.rs"
+        || f.ends_with("/main.rs")
+        || ["coordinator/metrics.rs", "util/cli.rs", "util/table.rs", "util/bench.rs"]
+            .iter()
+            .any(|suffix| f.ends_with(suffix))
+}
+
 /// Lint one source file; `file` is used for diagnostics and the
 /// `util/prng.rs` carve-out.
 pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
@@ -751,6 +791,9 @@ pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
     }
     if is_intsoftmax_module(file) {
         ctx.intsoftmax_rules();
+    }
+    if !is_report_module(file) {
+        ctx.println_rules();
     }
     ctx.mutex_rules();
     ctx.vmm_match_rules();
